@@ -1,0 +1,28 @@
+"""Paper eq. 6 cycle schedule + DSLOT vs SIP cycle/energy comparison across
+kernel sizes and feature-map counts (the latency analysis of §II-B)."""
+
+from __future__ import annotations
+
+from repro.core import pe_schedule, sip_schedule, table1_model
+
+
+def run() -> list[str]:
+    rows = []
+    s = pe_schedule(k=5, n_fmaps=1, p_mult=16)
+    rows.append(f"cycles.paper_example,{s.total_cycles},expected=33")
+    for k in (3, 5, 7):
+        for n in (1, 4, 16):
+            s = pe_schedule(k=k, n_fmaps=n, p_mult=16)
+            rows.append(f"cycles.k{k}_N{n},{s.total_cycles},"
+                        f"p_out={s.p_out};fill={s.pipeline_fill}")
+    m = table1_model()
+    for k in (3, 5, 7):
+        ds = pe_schedule(k=k, p_mult=16)
+        ss = sip_schedule(k=k)
+        t_d = ds.total_cycles * m["dslot"].cpd_ns
+        t_s = ss.total_cycles * m["stripes"].cpd_ns
+        e_d = t_d * m["dslot"].dynamic_power_mw
+        e_s = t_s * m["stripes"].dynamic_power_mw
+        rows.append(f"cycles.latency_ns_k{k},{t_d:.1f},sip={t_s:.1f}")
+        rows.append(f"cycles.energy_pj_k{k},{e_d:.1f},sip={e_s:.1f}")
+    return rows

@@ -1,0 +1,62 @@
+"""Digit-plane DSLOT kernel benchmark: skipped-MXU-pass fraction vs output
+negativity (the TPU adaptation of Fig. 9), runtime-precision scaling, and
+wall-time of the jnp path (CPU container; Pallas numbers are structural —
+interpret mode is not a performance proxy)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ops import dslot_matmul
+
+
+def _timeit(fn, *args, iters=3, **kw):
+    fn(*args, **kw)[0].block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+        jax.tree.leaves(out)[0].block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run() -> list[str]:
+    rows = []
+    rng = np.random.default_rng(0)
+    M, K, N = 256, 256, 256
+    x = jnp.asarray(np.maximum(rng.normal(0.3, 0.4, (M, K)), 0), jnp.float32)
+
+    for dead_frac in (0.0, 0.25, 0.5, 0.75):
+        w = rng.normal(0, 0.05, (K, N)).astype(np.float32)
+        n_dead = int(N * dead_frac)
+        if n_dead:
+            w[:, rng.permutation(N)[:n_dead]] -= 0.10
+        out, st = dslot_matmul(x, jnp.asarray(w), backend="jnp",
+                               sort_columns=True, block_m=64, block_n=64)
+        rows.append(f"kernel.skipped_frac_dead{int(dead_frac*100)},"
+                    f"{float(st.skipped_frac):.4f},sorted-tiles")
+
+    w = jnp.asarray(rng.normal(0, 0.05, (K, N)), jnp.float32)
+    for D in (8, 6, 4, 2):
+        us = _timeit(dslot_matmul, x, w, backend="jnp", n_planes=D,
+                     block_m=64, block_n=64)
+        out, _ = dslot_matmul(x, w, backend="jnp", n_planes=D,
+                              block_m=64, block_n=64)
+        ref = jnp.maximum(x @ w, 0)
+        rel = float(jnp.abs(out - ref).mean() / (jnp.abs(ref).mean() + 1e-9))
+        rows.append(f"kernel.planes{D}_us,{us:.0f},rel_err={rel:.4f}")
+
+    # pallas interpret-mode parity check at bench scale (small shape)
+    from repro.kernels.ref import make_planes, dslot_matmul_ref
+    from repro.kernels.dslot_matmul import dslot_matmul_pallas
+    aq = jnp.asarray(rng.integers(0, 256, (64, 64)), jnp.int32)
+    wp = jnp.asarray(rng.normal(0, 0.05, (64, 64)), jnp.float32)
+    planes = make_planes(aq, 8)
+    o1 = dslot_matmul_pallas(planes, wp, block_m=32, block_n=32).out
+    o2 = dslot_matmul_ref(planes, wp, 8)
+    rows.append(f"kernel.pallas_vs_ref_maxerr,"
+                f"{float(jnp.abs(o1 - o2).max()):.2e},interpret-mode")
+    return rows

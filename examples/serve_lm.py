@@ -1,0 +1,72 @@
+"""Serving example: slot-pool continuous batching + DSLOT digit-serial MLPs.
+
+Serves the seamless-m4t backbone (the assigned arch whose ReLU FFN admits
+full DSLOT early-negative-termination) in reduced form, first through the
+plain engine, then with the digit-serial execution mode enabled, reporting
+the skipped-MXU-pass statistics that correspond to the paper's saved cycles.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DslotConfig
+from repro.configs.registry import get_arch
+from repro.models import stats
+from repro.models.model_zoo import build_model
+from repro.serve.engine import Request, ServeEngine, generate
+
+
+def main():
+    cfg = get_arch("seamless-m4t-medium").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(1)
+
+    batch = {
+        "tokens": jax.random.randint(key, (4, 12), 0, cfg.vocab_size),
+        "src_embeds": jax.random.normal(key, (4, 8, cfg.d_model)) * 0.02,
+    }
+    toks = generate(model, params, batch, 8)
+    print("enc-dec batched generation:", toks.shape)
+
+    # ---- DSLOT digit-serial MLPs (ReLU FFN -> early termination applies)
+    dcfg = dataclasses.replace(cfg, dslot=DslotConfig(
+        enabled=True, n_planes=8, block_m=16, block_n=16))
+    dmodel = build_model(dcfg)
+    toks2 = generate(dmodel, params, batch, 8)
+    same = bool(jnp.mean((toks == toks2).astype(jnp.float32)) > 0.9)
+    print("dslot-mode generation agrees with dense:", same)
+    # skipped-pass statistics from one eager forward (stats recorded inside
+    # the scanned decode loop would be traced values, not observables)
+    with stats.collect() as sink:
+        dmodel.forward(params, batch)
+    vals = [float(v) for v in jax.device_get(
+        sink.get("mlp_dslot_skipped_frac", []))]
+    if vals:
+        print(f"digit-serial MLP calls: {len(vals)}, mean skipped MXU "
+              f"passes {np.mean(vals):.1%}")
+
+    # ---- slot-pool continuous batching (decoder-only pool)
+    lcfg = get_arch("olmo-1b").reduced()
+    lmodel = build_model(lcfg)
+    lparams = lmodel.init(jax.random.PRNGKey(2))
+    eng = ServeEngine(lmodel, lparams, n_slots=2, max_len=48)
+    reqs = [Request(uid=i, prompt=np.full((6,), i + 3, np.int32),
+                    max_new=3 + i) for i in range(4)]
+    pending = list(reqs)
+    finished = []
+    while len(finished) < len(reqs):
+        while pending and eng.try_add(pending[0]):
+            pending.pop(0)
+        finished += eng.step()
+    print("continuous batching: served", len(finished), "requests;",
+          {r.uid: len(r.out) for r in finished})
+
+
+if __name__ == "__main__":
+    main()

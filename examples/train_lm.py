@@ -1,0 +1,65 @@
+"""End-to-end training driver: a ~100M-parameter LM for a few hundred steps.
+
+Uses the same stack as the production launcher (model zoo, FSDPxTP-ready
+shardings, grad accumulation, async checkpointing) on a single host.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200]
+
+On this CPU container a step takes a few seconds; the loss curve on the
+structured synthetic stream drops visibly within ~50 steps.
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_arch
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.data.pipeline import TokenPipeline
+from repro.models.model_zoo import build_model
+from repro.optim.adamw import AdamWConfig
+from repro.train.step import init_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    # ~100M params: olmo family scaled down (8L x 512, vocab 32768)
+    cfg = dataclasses.replace(
+        get_arch("olmo-1b"),
+        n_layers=8, d_model=512, n_heads=8, n_kv_heads=8, d_ff=2048,
+        vocab_size=32_768, scan_unroll=2, attn_chunk=128, dtype="float32")
+    model = build_model(cfg)
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    n = sum(x.size for x in jax.tree.leaves(state.params))
+    print(f"model: {cfg.n_layers}L d{cfg.d_model} -> {n/1e6:.1f}M params")
+
+    opt = AdamWConfig(peak_lr=1e-3, warmup_steps=20, decay_steps=args.steps)
+    step_fn = jax.jit(make_train_step(model, opt), donate_argnums=(0,))
+    pipe = TokenPipeline(vocab=cfg.vocab_size, seq_len=256, global_batch=8,
+                         microbatches=2)
+    ck = Checkpointer(args.ckpt_dir, keep=2)
+
+    t0 = time.time()
+    for s in range(args.steps):
+        batch = jax.tree.map(jnp.asarray, pipe.next_host_batch())
+        state, m = step_fn(state, batch)
+        if (s + 1) % 10 == 0 or s == 0:
+            rate = 8 * 256 * (s + 1) / (time.time() - t0)
+            print(f"step {s+1:4d}  loss {float(m['loss']):.4f}  "
+                  f"gnorm {float(m['grad_norm']):.2f}  {rate:.0f} tok/s",
+                  flush=True)
+        if (s + 1) % 50 == 0:
+            ck.save_async(s + 1, state)
+    ck.wait()
+    print(f"done in {time.time()-t0:.0f}s; checkpoints in {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

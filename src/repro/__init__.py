@@ -1,0 +1,11 @@
+"""repro — DSLOT-NN (digit-serial MSDF arithmetic with early negative
+termination) reproduced in JAX and scaled into a multi-pod training/serving
+framework.  See README.md / DESIGN.md / EXPERIMENTS.md.
+
+Layout: ``core`` (paper's arithmetic), ``kernels`` (Pallas digit-plane
+matmul), ``models``+``configs`` (10 assigned architectures), ``train``/
+``serve``/``optim``/``data``/``checkpoint``/``distributed`` (substrates),
+``launch`` (mesh, dry-run, roofline, train/serve entry points).
+"""
+
+__version__ = "1.0.0"

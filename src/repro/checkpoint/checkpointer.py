@@ -1,0 +1,163 @@
+"""Sharded, async, integrity-checked checkpointing with elastic restore.
+
+Layout (one directory per step):
+    step_000123/
+      manifest.json     — pytree structure, shapes, dtypes, crc32 per leaf
+      shard_<i>.npz     — leaf arrays (one file per save worker)
+      _COMMITTED        — written last; a directory without it is ignored
+
+Properties needed at 1000-node scale, reproduced faithfully in-process:
+* **atomicity** — writes go to ``<dir>.tmp`` and are renamed after the commit
+  marker; a crash mid-save never corrupts the latest checkpoint.
+* **async** — ``save_async`` snapshots to host memory (device_get) and writes
+  on a background thread; training continues immediately.
+* **integrity** — crc32 per leaf, verified on restore.
+* **elastic restore** — ``restore`` takes an optional (mesh, shardings):
+  arrays are re-laid-out onto the *target* mesh, which may differ from the
+  mesh that saved them (node loss -> smaller mesh; scale-up -> larger).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import zlib
+from typing import Any
+
+import numpy as np
+
+import jax
+
+# dtypes numpy's npz handles natively; anything else (ml_dtypes' bfloat16,
+# float8s) is stored as a same-width unsigned-int bit pattern.
+_NATIVE_DTYPES = {str(np.dtype(t)) for t in
+                  ("f2", "f4", "f8", "i1", "i2", "i4", "i8",
+                   "u1", "u2", "u4", "u8", "b1", "c8", "c16")}
+_BITS_VIEW = {1: np.uint8, 2: np.uint16, 4: np.uint32, 8: np.uint64}
+
+
+def _flatten(tree) -> list[tuple[str, Any]]:
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in leaves:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        out.append((key, leaf))
+    return out
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+
+    # ------------------------------------------------------------- save
+
+    def save(self, step: int, tree) -> str:
+        host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        return self._write(step, host)
+
+    def save_async(self, step: int, tree) -> None:
+        self.wait()
+        host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        self._thread = threading.Thread(
+            target=self._write, args=(step, host), daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host_tree) -> str:
+        name = f"step_{step:08d}"
+        final = os.path.join(self.dir, name)
+        tmp = final + ".tmp"
+        shutil.rmtree(tmp, ignore_errors=True)
+        os.makedirs(tmp)
+
+        flat = _flatten(host_tree)
+        manifest = {"step": step, "leaves": {}}
+        arrays = {}
+        for i, (key, arr) in enumerate(flat):
+            arr = np.asarray(arr)
+            dtype_name = str(arr.dtype)
+            stored = arr
+            if dtype_name not in _NATIVE_DTYPES:
+                # ml_dtypes (bfloat16, float8s) -> bit-pattern view for npz
+                stored = arr.view(_BITS_VIEW[arr.dtype.itemsize])
+            arrays[f"a{i}"] = stored
+            manifest["leaves"][key] = {
+                "idx": i, "shape": list(arr.shape), "dtype": dtype_name,
+                "crc32": zlib.crc32(np.ascontiguousarray(stored).tobytes()),
+            }
+        np.savez(os.path.join(tmp, "shard_0.npz"), **arrays)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        with open(os.path.join(tmp, "_COMMITTED"), "w") as f:
+            f.write("ok")
+        shutil.rmtree(final, ignore_errors=True)
+        os.rename(tmp, final)
+        self._gc()
+        return final
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # ------------------------------------------------------------- restore
+
+    def all_steps(self) -> list[int]:
+        out = []
+        for d in sorted(os.listdir(self.dir)):
+            if d.startswith("step_") and not d.endswith(".tmp") and \
+                    os.path.exists(os.path.join(self.dir, d, "_COMMITTED")):
+                out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, target_tree, shardings=None):
+        """Restore into the structure of ``target_tree``.  ``shardings``
+        (same pytree of NamedShardings) re-lays leaves onto the target mesh —
+        elastic restart across different mesh shapes."""
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(d, "shard_0.npz"))
+
+        by_key = {}
+        for key, meta in manifest["leaves"].items():
+            arr = data[f"a{meta['idx']}"]
+            crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+            if crc != meta["crc32"]:
+                raise IOError(f"checkpoint corruption at leaf {key}")
+            if meta["dtype"] not in _NATIVE_DTYPES:
+                import ml_dtypes
+                arr = arr.view(np.dtype(getattr(ml_dtypes, meta["dtype"])))
+            by_key[key] = arr
+
+        flat_target = _flatten(target_tree)
+        flat_shard = _flatten(shardings)[:len(flat_target)] if shardings \
+            is not None else None
+        restored = []
+        for i, (key, tgt) in enumerate(flat_target):
+            if key not in by_key:
+                raise KeyError(f"missing leaf {key} in checkpoint")
+            arr = by_key[key].astype(np.dtype(tgt.dtype))
+            if flat_shard is not None:
+                sh = flat_shard[i][1]
+                restored.append(jax.make_array_from_callback(
+                    arr.shape, sh, lambda idx, a=arr: a[idx]))
+            else:
+                restored.append(jax.numpy.asarray(arr))
+        treedef = jax.tree_util.tree_structure(target_tree)
+        return jax.tree_util.tree_unflatten(treedef, restored)

@@ -1,0 +1,132 @@
+"""DSLOT-NN convolution: fused conv + ReLU + maxpool dataflow (paper Figs. 4-7).
+
+Four PEs evaluate the four convolution windows of one 2x2 pooling group in
+parallel; each PE's SOP digits stream MSDF through the Algorithm-1 comparator,
+negative windows terminate early (their ReLU output is 0 by construction), and
+the surviving values feed the pooling unit directly — no intermediate feature
+map is written (the paper's "simultaneous computation of the first three
+layers").
+
+Numerical contract (kept bit-exact, tested):
+    x is quantized unsigned to ``x_q`` (n-1 magnitude bits, digit stream of
+    n digits valued ``x_q / 2^n``), w signed to ``w_q`` (fraction ``w_q/2^n``).
+    A PE with S tree stages emits ``SOP_int / 2^(2n+S)`` where
+    ``SOP_int = sum x_q*w_q`` — integer-exact, so the digit-serial path equals
+    the SIP/conventional path exactly, and equals float conv up to quantization.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .digits import fixed_to_sd
+from .early_term import TerminationReport, early_termination
+from .pe import PESchedule, pe_schedule, pe_sop_digits
+from .quantize import QTensor, quantize, quantize_unsigned
+from .sip import sip_sop
+
+__all__ = ["DSLOTConvResult", "extract_windows", "dslot_conv2d_stats",
+           "sip_conv2d"]
+
+
+class DSLOTConvResult(NamedTuple):
+    y_conv: jax.Array            # (B, Ho, Wo, M) dequantized conv output (pre-ReLU)
+    y_pooled: jax.Array          # (B, Ho//2, Wo//2, M) fused ReLU+maxpool output
+    report: TerminationReport    # per-(B,Ho,Wo,M) Algorithm-1 accounting
+    schedule: PESchedule
+    x_scale: jax.Array
+    w_scale: jax.Array
+
+
+def extract_windows(x: jax.Array, k: int) -> jax.Array:
+    """im2col: (B, H, W) -> (B, Ho, Wo, k*k), valid padding, stride 1."""
+    B, H, W = x.shape
+    Ho, Wo = H - k + 1, W - k + 1
+    i = jnp.arange(Ho)[:, None, None, None] + jnp.arange(k)[None, None, :, None]
+    j = jnp.arange(Wo)[None, :, None, None] + jnp.arange(k)[None, None, None, :]
+    win = x[:, i, j]                       # (B, Ho, Wo, k, k)
+    return win.reshape(B, Ho, Wo, k * k)
+
+
+def _digit_streams(x_q: jax.Array, n_bits: int) -> jax.Array:
+    """SD digit streams (n_bits, ...) valued ``x_q / 2^n_bits`` (exact)."""
+    return fixed_to_sd(x_q, n_bits)
+
+
+def dslot_conv2d_stats(x: jax.Array, w: jax.Array, *, n_bits: int = 8,
+                       pool: int = 2) -> DSLOTConvResult:
+    """Run the full DSLOT-NN digit-serial simulation of conv+ReLU+maxpool.
+
+    ``x``: (B, H, W) float input feature map (paper: single input fmap).
+    ``w``: (M, k, k) float kernels (M output feature maps).
+
+    Every output pixel's SOP is computed digit-serially through k*k online
+    multipliers + the online adder tree, monitored by Algorithm 1.
+    """
+    M, k, k2 = w.shape
+    assert k == k2, "square kernels only"
+    schedule = pe_schedule(k=k, n_fmaps=1, p_mult=2 * n_bits)
+
+    xq: QTensor = quantize_unsigned(x, n_bits=n_bits)
+    wq: QTensor = quantize(w, n_bits=n_bits)
+
+    win = extract_windows(xq.q, k)                      # (B,Ho,Wo,kk) int32
+    B, Ho, Wo, KK = win.shape
+    flat = win.reshape(B * Ho * Wo, KK).T               # (kk, NW)
+
+    # digit streams valued q/2^n  (|.| < 1/2): (n_bits, kk, NW)
+    x_digits = _digit_streams(flat, n_bits)
+
+    # parallel weight fractions w_q/2^n, |.| < 1/2: (M, kk) -> per-M broadcast
+    w_frac = wq.q.reshape(M, KK).astype(jnp.float32) * (2.0 ** -n_bits)
+
+    def one_channel(wf):                                # wf: (kk,)
+        sop = pe_sop_digits(x_digits, wf[:, None], schedule)   # (p_out, NW)
+        return sop
+
+    sop_digits = jax.vmap(one_channel)(w_frac)          # (M, p_out, NW)
+    sop_digits = jnp.moveaxis(sop_digits, 0, -1)        # (p_out, NW, M)
+
+    report = early_termination(sop_digits, schedule)
+
+    # Exact integer SOP from the digit stream: value * 2^(2n + S).
+    from .digits import sd_to_value
+    S = schedule.tree_stages + schedule.fmap_stages
+    sop_int = sd_to_value(sop_digits) * (2.0 ** (2 * n_bits + S))
+    # Dequantize: x = (x_q/2^{n-1}) sx, w = (w_q/2^{n-1}) sw
+    #  => SOP_real = SOP_int * sx*sw / 2^{2(n-1)}
+    scale = xq.scale * wq.scale * (2.0 ** -(2 * (n_bits - 1)))
+    y = (sop_int * scale).reshape(B, Ho, Wo, M)
+
+    relu = jnp.maximum(y, 0.0)
+    Hp, Wp = Ho // pool, Wo // pool
+    pooled = relu[:, :Hp * pool, :Wp * pool, :]
+    pooled = pooled.reshape(B, Hp, pool, Wp, pool, M).max(axis=(2, 4))
+
+    report = report._replace(
+        is_negative=report.is_negative.reshape(B, Ho, Wo, M),
+        term_digit=report.term_digit.reshape(B, Ho, Wo, M),
+        cycles_used=report.cycles_used.reshape(B, Ho, Wo, M),
+        cycles_saved=report.cycles_saved.reshape(B, Ho, Wo, M),
+        savings_frac=report.savings_frac.reshape(B, Ho, Wo, M),
+    )
+    return DSLOTConvResult(y_conv=y, y_pooled=pooled, report=report,
+                           schedule=schedule, x_scale=xq.scale, w_scale=wq.scale)
+
+
+def sip_conv2d(x: jax.Array, w: jax.Array, *, n_bits: int = 8) -> jax.Array:
+    """Same convolution through the Stripes SIP baseline (bit-exact integer)."""
+    M, k, _ = w.shape
+    xq = quantize_unsigned(x, n_bits=n_bits)
+    wq = quantize(w, n_bits=n_bits)
+    win = extract_windows(xq.q, k)                      # (B,Ho,Wo,kk)
+    B, Ho, Wo, KK = win.shape
+    flat = win.reshape(B * Ho * Wo, KK).T               # (kk, NW)
+    sop = jax.vmap(lambda wf: sip_sop(flat, wf[:, None], n_bits=n_bits))(
+        wq.q.reshape(M, KK))                            # (M, NW)
+    scale = xq.scale * wq.scale * (2.0 ** -(2 * (n_bits - 1)))
+    return (sop.T.astype(jnp.float32) * scale).reshape(B, Ho, Wo, M)

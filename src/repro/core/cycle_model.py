@@ -1,0 +1,134 @@
+"""Analytic FPGA timing / power / performance-density model (paper §III-B).
+
+The paper's Table I is a Virtex-7 implementation; this container has no FPGA,
+so Table I is reproduced through an analytic model:
+
+* **Critical paths** follow eqs. 8-11 with per-primitive delays calibrated so
+  the modeled CPDs equal the published ones (30.075 ns SIP / 15.436 ns DSLOT).
+* **Throughput** uses pipelined initiation intervals (II).  DSLOT PEs are
+  digit-pipelined: a window occupies an OLM for the ``p_mult`` digits it emits
+  (+1 reload bubble) -> II_DSLOT = p_mult + 1 = 17 cycles.  SIP accepts a new
+  window every ``n_bits + S_tree`` cycles (serial feed + pipelined reduction)
+  -> II_SIP = 12.  With the published CPD/power these IIs reproduce Table I's
+  GOPS/W within ~1 % (38.1 vs 37.69 and 25.19 vs 25.17) — the reverse-
+  engineered assumption is recorded in EXPERIMENTS.md.
+* **Early termination** shortens the *average* DSLOT II by the measured
+  cycles-saved fraction, which is where the paper's energy savings come from.
+
+Everything is deterministic python/float — no hardware is pretended to run.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+__all__ = ["FPGAModel", "TABLE1_PUBLISHED", "table1_model"]
+
+# Published Virtex-7 numbers (paper Table I).
+TABLE1_PUBLISHED = {
+    "stripes": dict(luts=830, dynamic_power_mw=22.0, cpd_ns=30.075,
+                    gops_per_watt=25.17),
+    "dslot": dict(luts=1302, dynamic_power_mw=20.0, cpd_ns=15.436,
+                  gops_per_watt=37.69),
+}
+
+# Calibrated primitive delays (ns) on Virtex-7 fabric.  Chosen so eqs. 8-11
+# hit the published CPDs exactly; individually they sit in the usual range for
+# 7-series LUT+carry logic (~0.5-2.5 ns per level incl. routing).
+_T_AND = 0.500
+_T_CPA8 = 4.415          # 8-bit ripple CPA stage      (eq. 8: 5 deep)
+_T_CPA21 = 7.500         # 21-bit accumulator CPA      (eq. 8)
+_T_MUX21 = 0.550         # [2:1] mux                   (eq. 9)
+_T_32ADDER = 0.900       # [3:2] carry-save adder      (eq. 9)
+_T_CPA4 = 1.800          # 4-bit CPA in selection      (eq. 9)
+_T_SELM = 0.936          # selection logic             (eq. 9)
+_T_XOR = 0.350           # output recode               (eq. 9)
+_T_FA = 0.940            # full adder                  (eq. 10)
+_T_FF = 0.300            # flip-flop clk->q            (eq. 10)
+
+
+def t_sip(k: int = 5) -> float:
+    """Paper eq. 8: t_AND + 5*t_CPA-8 + t_CPA-21 (k=5 -> 5 tree stages)."""
+    stages = math.ceil(math.log2(k * k))
+    return _T_AND + stages * _T_CPA8 + _T_CPA21
+
+
+def t_olm() -> float:
+    """Paper eq. 9."""
+    return _T_MUX21 + _T_32ADDER + _T_CPA4 + _T_SELM + _T_XOR
+
+
+def t_ola() -> float:
+    """Paper eq. 10: 2*t_FA + t_FF."""
+    return 2.0 * _T_FA + _T_FF
+
+
+def t_dslot(k: int = 5) -> float:
+    """Paper eq. 11: t_OLM + 5*t_OLA."""
+    stages = math.ceil(math.log2(k * k))
+    return t_olm() + stages * t_ola()
+
+
+@dataclass(frozen=True)
+class FPGAModel:
+    """Throughput/energy model of one engine configuration (4 PEs, k=5)."""
+    name: str
+    cpd_ns: float
+    dynamic_power_mw: float
+    luts: int
+    init_interval_cycles: float   # cycles between successive windows (pipelined)
+    n_pes: int = 4
+    k: int = 5
+
+    @property
+    def ops_per_window(self) -> int:
+        # k*k MACs = 2*k*k ops per PE per window.
+        return 2 * self.k * self.k * self.n_pes
+
+    @property
+    def gops(self) -> float:
+        window_time_ns = self.init_interval_cycles * self.cpd_ns
+        return self.ops_per_window / window_time_ns  # ops/ns == GOPS
+
+    @property
+    def gops_per_watt(self) -> float:
+        return self.gops / (self.dynamic_power_mw * 1e-3)
+
+    def energy_per_window_nj(self) -> float:
+        return (self.dynamic_power_mw * 1e-3) * \
+            (self.init_interval_cycles * self.cpd_ns)
+
+    def with_early_termination(self, mean_cycle_savings_frac: float
+                               ) -> "FPGAModel":
+        """Average-case model: early termination shortens the effective II."""
+        return FPGAModel(
+            name=f"{self.name}+early-term",
+            cpd_ns=self.cpd_ns,
+            dynamic_power_mw=self.dynamic_power_mw,
+            luts=self.luts,
+            init_interval_cycles=self.init_interval_cycles
+            * (1.0 - mean_cycle_savings_frac),
+            n_pes=self.n_pes, k=self.k)
+
+
+def table1_model(p_mult: int = 16, n_bits: int = 8, k: int = 5
+                 ) -> dict[str, FPGAModel]:
+    """Instantiate both engines with modeled CPDs and calibrated IIs."""
+    stages = math.ceil(math.log2(k * k))
+    return {
+        "stripes": FPGAModel(
+            name="stripes-SIP",
+            cpd_ns=t_sip(k),
+            dynamic_power_mw=TABLE1_PUBLISHED["stripes"]["dynamic_power_mw"],
+            luts=TABLE1_PUBLISHED["stripes"]["luts"],
+            init_interval_cycles=n_bits + (stages - 1),   # 8 + 4 = 12
+            k=k),
+        "dslot": FPGAModel(
+            name="DSLOT-NN",
+            cpd_ns=t_dslot(k),
+            dynamic_power_mw=TABLE1_PUBLISHED["dslot"]["dynamic_power_mw"],
+            luts=TABLE1_PUBLISHED["dslot"]["luts"],
+            init_interval_cycles=p_mult + 1,              # 17
+            k=k),
+    }

@@ -1,0 +1,118 @@
+"""Signed-digit (SD) radix-2 number system — the substrate of online arithmetic.
+
+DSLOT-NN (paper §II-A) computes with a symmetric radix-2 redundant digit set
+{-1, 0, 1}.  A value ``x`` with ``|x| < 1`` is represented most-significant-
+digit-first (MSDF) as ``x = sum_i d_i * 2^-i`` (i = 1..n), each digit stored in
+hardware as a bit pair ``(x+, x-)`` with ``d = x+ - x-`` (paper eq. 2).
+
+In this functional simulation a digit *stream* is an ``int8`` array whose
+LEADING axis is the digit index (MSDF order): ``digits.shape == (n, *batch)``.
+
+All routines are pure JAX, vectorized over arbitrary trailing batch shapes, and
+exact: residuals and prefix values are multiples of ``2^-p`` for small ``p`` and
+are represented exactly in float32 (tests assert bit-exact roundtrips).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "sd_from_value",
+    "sd_to_value",
+    "sd_prefix_values",
+    "sd_split_posneg",
+    "sd_from_bits_lsb",
+    "fixed_to_sd",
+    "first_negative_prefix",
+]
+
+
+def sd_from_value(x: jax.Array, n_digits: int) -> jax.Array:
+    """Convert ``x`` (float, ``|x| < 1``) into ``n_digits`` SD radix-2 digits, MSDF.
+
+    Greedy exact-residual selection: ``w <- x``; per digit ``v = 2w``;
+    ``d = sign(v)`` if ``|v| >= 1/2`` else ``0``; ``w <- v - d``.  The residual
+    obeys ``|w| <= 1`` throughout and the representation error after ``n``
+    digits is ``|x - value(d_1..d_n)| = |w_n| * 2^-n <= 2^-n``; it is *zero*
+    whenever ``x`` is a multiple of ``2^-n_digits``.
+
+    Returns int8 digits of shape ``(n_digits, *x.shape)``.
+    """
+    x = jnp.asarray(x, jnp.float32)
+
+    def step(w, _):
+        v = 2.0 * w
+        d = jnp.where(v >= 0.5, 1, jnp.where(v <= -0.5, -1, 0)).astype(jnp.int8)
+        w = v - d.astype(jnp.float32)
+        return w, d
+
+    _, digits = jax.lax.scan(step, x, None, length=n_digits)
+    return digits
+
+
+def sd_to_value(digits: jax.Array) -> jax.Array:
+    """Value of an SD digit stream: ``sum_i d_i 2^-i`` (leading axis = i)."""
+    n = digits.shape[0]
+    weights = 2.0 ** -jnp.arange(1, n + 1, dtype=jnp.float32)
+    return jnp.tensordot(weights, digits.astype(jnp.float32), axes=(0, 0))
+
+
+def sd_prefix_values(digits: jax.Array) -> jax.Array:
+    """Prefix values ``z[j] = sum_{i<=j} d_i 2^-i`` for every j (MSDF scan).
+
+    Shape-preserving: output ``(n, *batch)`` float32.  This is what the paper's
+    Algorithm-1 comparator observes (``z+[j] < z-[j]``  <=>  ``z[j] < 0``).
+    """
+    n = digits.shape[0]
+    weights = 2.0 ** -jnp.arange(1, n + 1, dtype=jnp.float32)
+    weights = weights.reshape((n,) + (1,) * (digits.ndim - 1))
+    return jnp.cumsum(digits.astype(jnp.float32) * weights, axis=0)
+
+
+def sd_split_posneg(digits: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Hardware bit-pair view (paper eq. 2): ``d = x+ - x-``; returns (x+, x-)."""
+    pos = (digits > 0).astype(jnp.int8)
+    neg = (digits < 0).astype(jnp.int8)
+    return pos, neg
+
+
+def sd_from_bits_lsb(bits: jax.Array) -> jax.Array:
+    """Reinterpret conventional bits (values {0,1}, leading axis = bit index
+    MSB-first) as SD digits — any non-redundant representation is a valid SD one.
+    """
+    return bits.astype(jnp.int8)
+
+
+def fixed_to_sd(q: jax.Array, n_bits: int) -> jax.Array:
+    """Exact SD recoding of a signed fixed-point integer ``q in [-(2^n-1), 2^n-1]``
+    interpreted as the fraction ``q / 2^n``.  Returns ``(n_bits, *q.shape)`` int8.
+
+    Uses sign-magnitude binary: ``|q|``'s bits (MSB first) times ``sign(q)`` —
+    digits in {-1,0,1}, exact, no residual.
+    """
+    q = jnp.asarray(q, jnp.int32)
+    sign = jnp.sign(q).astype(jnp.int8)
+    mag = jnp.abs(q)
+    shifts = jnp.arange(n_bits - 1, -1, -1, dtype=jnp.int32)
+    shifts = shifts.reshape((n_bits,) + (1,) * q.ndim)
+    bits = ((mag[None] >> shifts) & 1).astype(jnp.int8)
+    return bits * sign[None]
+
+
+def first_negative_prefix(digits: jax.Array) -> jax.Array:
+    """Index (1-based digit position) of the first strictly-negative prefix value,
+    or ``n+1`` if no prefix ever goes negative.  Paper Algorithm 1: the cycle at
+    which the termination signal fires.
+
+    Soundness (paper §II-B.2, proven in DESIGN.md §4.1): a negative prefix at
+    digit j implies ``z[j] <= -2^-j`` while all remaining digits contribute
+    ``< 2^-j``, so the final SOP is strictly negative — terminating is safe.
+    """
+    n = digits.shape[0]
+    prefix = sd_prefix_values(digits)
+    neg = prefix < 0.0
+    idx = jnp.argmax(neg, axis=0)  # first True, or 0 if none
+    any_neg = jnp.any(neg, axis=0)
+    return jnp.where(any_neg, idx + 1, n + 1).astype(jnp.int32)

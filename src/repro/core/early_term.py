@@ -1,0 +1,73 @@
+"""Early detection + termination of negative activations (paper Algorithm 1).
+
+The ReLU unit accumulates the SOP's redundant output digits ``z+[j]``/``z-[j]``
+and terminates the PE as soon as the concatenated prefix satisfies
+``z+[j] < z-[j]`` — i.e. the prefix *value* went negative.  MSDF emission makes
+this sound: once negative, the remaining digits (each weighted below the prefix
+LSB) cannot restore positivity, so the convolution is ineffectual under ReLU
+and its remaining cycles are skipped.
+
+This module evaluates Algorithm 1 over whole batches of SOP digit streams and
+returns per-SOP cycle accounting against the PE schedule (eq. 6) — the data
+behind the paper's Fig. 8 (negative-activation rates) and Fig. 9 (cycle
+savings).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .digits import first_negative_prefix, sd_prefix_values
+from .pe import PESchedule
+
+__all__ = ["TerminationReport", "early_termination"]
+
+
+class TerminationReport(NamedTuple):
+    """Per-SOP outcome of Algorithm 1 (leading axes = batch of SOPs)."""
+    is_negative: jax.Array        # bool — termination signal ever fired
+    term_digit: jax.Array         # int32 — 1-based digit index of firing (p_out+1 if never)
+    cycles_used: jax.Array        # int32 — hardware cycles actually spent (eq. 6 schedule)
+    cycles_full: int              # int — cycles without early termination
+    cycles_saved: jax.Array       # int32 — cycles_full - cycles_used
+    savings_frac: jax.Array       # float32 — cycles_saved / cycles_full
+
+    @property
+    def negative_rate(self):
+        return jnp.mean(self.is_negative.astype(jnp.float32))
+
+    @property
+    def mean_savings(self):
+        return jnp.mean(self.savings_frac)
+
+
+def early_termination(sop_digits: jax.Array, schedule: PESchedule
+                      ) -> TerminationReport:
+    """Apply Algorithm 1 to SOP digit streams ``(p_out, *batch)``.
+
+    A PE that never fires runs ``schedule.total_cycles``; one that fires at
+    digit j stops at cycle ``pipeline_fill + j`` (the comparator sits on the
+    output digits, so fill cycles are always paid).
+    """
+    p_out = sop_digits.shape[0]
+    term = first_negative_prefix(sop_digits)            # (batch,), p_out+1 if none
+    fired = term <= p_out
+    full = int(schedule.total_cycles)
+    used = jnp.where(fired, schedule.pipeline_fill + term, full).astype(jnp.int32)
+    saved = (full - used).astype(jnp.int32)
+    return TerminationReport(
+        is_negative=fired,
+        term_digit=term.astype(jnp.int32),
+        cycles_used=used,
+        cycles_full=full,
+        cycles_saved=saved,
+        savings_frac=saved.astype(jnp.float32) / float(full),
+    )
+
+
+def prefix_sign_trace(sop_digits: jax.Array) -> jax.Array:
+    """Sign of every prefix value — diagnostic view of the comparator input."""
+    return jnp.sign(sd_prefix_values(sop_digits))

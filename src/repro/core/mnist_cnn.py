@@ -1,0 +1,77 @@
+"""The paper's evaluation network (Fig. 6): bias-free MNIST CNN.
+
+conv 5x5 (no bias, per §III-A) -> ReLU -> 2x2 maxpool -> dense -> softmax.
+Trained in float; inference of the first three layers runs through the
+DSLOT-NN digit-serial engine (Fig. 7 dataflow) for the Fig. 8/9 statistics.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.dslot_mnist import MnistCNNConfig
+
+
+class CNNParams(NamedTuple):
+    conv: jax.Array    # (M, k, k)
+    dense: jax.Array   # (M*12*12, 10)
+
+
+def init_cnn(cfg: MnistCNNConfig, key) -> CNNParams:
+    k1, k2 = jax.random.split(key)
+    side = (cfg.image_size - cfg.kernel_size + 1) // cfg.pool
+    conv = jax.random.normal(k1, (cfg.conv_channels, cfg.kernel_size,
+                                  cfg.kernel_size)) * 0.2
+    dense = jax.random.normal(
+        k2, (cfg.conv_channels * side * side, cfg.n_classes)) * 0.05
+    return CNNParams(conv=conv, dense=dense)
+
+
+def forward(params: CNNParams, images: jax.Array, cfg: MnistCNNConfig
+            ) -> jax.Array:
+    """images: (B, 28, 28) in [0,1] -> logits (B, 10).  Bias-free."""
+    x = jax.lax.conv_general_dilated(
+        images[:, None], params.conv[:, None], (1, 1), "VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))       # (B, M, 24, 24)
+    x = jnp.maximum(x, 0.0)
+    x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                              (1, 1, cfg.pool, cfg.pool),
+                              (1, 1, cfg.pool, cfg.pool), "VALID")
+    return x.reshape(x.shape[0], -1) @ params.dense
+
+
+def train_cnn(cfg: MnistCNNConfig, images: np.ndarray, labels: np.ndarray,
+              *, epochs: int = 20, batch: int = 64, lr: float = 2e-2,
+              seed: int = 0) -> tuple[CNNParams, float]:
+    """Plain SGD+momentum training; returns (params, final accuracy)."""
+    params = init_cnn(cfg, jax.random.PRNGKey(seed))
+    mom = jax.tree.map(jnp.zeros_like, params)
+
+    def loss_fn(p, xb, yb):
+        logits = forward(p, xb, cfg)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, yb[:, None], 1))
+
+    @jax.jit
+    def step(p, m, xb, yb):
+        l, g = jax.value_and_grad(loss_fn)(p, xb, yb)
+        m = jax.tree.map(lambda mm, gg: 0.9 * mm + gg, m, g)
+        p = jax.tree.map(lambda pp, mm: pp - lr * mm, p, m)
+        return p, m, l
+
+    n = len(images)
+    rng = np.random.default_rng(seed)
+    for _ in range(epochs):
+        order = rng.permutation(n)
+        for i in range(0, n - batch + 1, batch):
+            idx = order[i:i + batch]
+            params, mom, _ = step(params, mom,
+                                  jnp.asarray(images[idx]),
+                                  jnp.asarray(labels[idx]))
+    logits = forward(params, jnp.asarray(images), cfg)
+    acc = float(jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(labels)))
+    return params, acc

@@ -1,0 +1,152 @@
+"""Online (MSDF) arithmetic operators: serial-parallel multiplier and adder.
+
+Faithful functional models of the paper's two datapath primitives:
+
+* ``online_mult_sp`` — the serial-parallel online multiplier of [15]
+  (paper Fig. 2a): serial SD input ``x`` digit-by-digit MSDF, parallel constant
+  operand ``Y``; output digits MSDF after an online delay ``delta = 2``.
+* ``online_add`` — the digit-serial online adder (paper Fig. 2b, [16]):
+  both inputs and the output are SD MSDF streams, ``delta = 2``.  To absorb the
+  carry/bit growth of addition the adder emits the *scaled* sum ``(a + b) / 2``,
+  mirroring the paper's ``p_out`` bit-growth bookkeeping (eq. 7): a depth-S
+  reduction tree yields ``sum / 2^S`` with the scaling removed at dequantize.
+
+Both are instances of one generic recurrence (DESIGN.md §4.1): with scaled
+residual ``W[t] = 2^{t-δ} (V[t] - z[t-δ])`` where ``V`` accumulates the inputs,
+
+    W[t] = 2 W[t-1] + u_t 2^{-δ}  - z_{t-δ},
+    z_j  = 0 if |v| < 1/2 else sign(v)   (exact-residual selection),
+
+which keeps ``|W| <= 3/4`` for the operand bounds used here, so each emitted
+digit is in {-1,0,1} and the stream converges to the true value.  Hardware uses
+truncated-estimate selection for short critical paths; the digit-serial
+semantics, online delays and cycle schedules are identical (DESIGN.md §2).
+
+Exactness: when the true result is a multiple of ``2^-n_out`` the final residual
+is an integer bounded by 3/4, hence zero — the emitted stream is bit-exact.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["online_emit", "online_mult_sp", "online_add", "online_add_tree",
+           "DELTA_MULT", "DELTA_ADD"]
+
+DELTA_MULT = 2  # paper §II-A.1: delta_x = 2
+DELTA_ADD = 2   # paper §II-A.2: delta_+ = 2
+
+
+def _select(v: jax.Array) -> jax.Array:
+    """Radix-2 SD digit selection on the exact residual (thresholds ±1/2)."""
+    return jnp.where(v >= 0.5, 1, jnp.where(v <= -0.5, -1, 0)).astype(jnp.int8)
+
+
+def online_emit(u_stream: jax.Array, n_out: int, delta: int) -> jax.Array:
+    """Generic MSDF digit emission.
+
+    ``u_stream``: (T, *batch) float32 — the per-cycle value increments; the
+    represented value is ``sum_t u_t 2^-t``.  Emits ``n_out`` SD digits with
+    online delay ``delta``: cycle t consumes ``u_t`` (zero once exhausted) and,
+    for ``t > delta``, emits digit ``z_{t-delta}``.
+
+    Requires ``|u_t| <= 1`` and total-value bound < 1 (callers guarantee this).
+    Returns (n_out, *batch) int8.
+    """
+    T = u_stream.shape[0]
+    batch_shape = u_stream.shape[1:]
+    total = n_out + delta
+    pad = total - T
+    if pad < 0:
+        raise ValueError(f"u_stream longer ({T}) than n_out+delta ({total})")
+    if pad:
+        u_stream = jnp.concatenate(
+            [u_stream, jnp.zeros((pad,) + batch_shape, jnp.float32)], axis=0)
+
+    scale = 2.0 ** (-delta)
+    w0 = jnp.zeros(batch_shape, jnp.float32)
+
+    # First `delta` cycles only accumulate (no digit emitted).
+    def fill(w, u_t):
+        return 2.0 * w + u_t * scale, None
+
+    w, _ = jax.lax.scan(fill, w0, u_stream[:delta])
+
+    def emit(w, u_t):
+        v = 2.0 * w + u_t * scale
+        z = _select(v)
+        return v - z.astype(jnp.float32), z
+
+    _, digits = jax.lax.scan(emit, w, u_stream[delta:])
+    return digits
+
+
+def online_mult_sp(x_digits: jax.Array, y: jax.Array, n_out: int,
+                   delta: int = DELTA_MULT) -> jax.Array:
+    """Serial-parallel online multiplier (paper Fig. 2a, [15]).
+
+    ``x_digits``: (n_in, *batch) SD stream, ``|x| < 1``.
+    ``y``: parallel operand, broadcastable to ``batch``; ``|y| < 1`` required
+    (the invariant needs ``|y| <= 1 - 2^-n``; int8 q-format weights satisfy it).
+    Emits ``n_out`` product digits MSDF with online delay ``delta`` (=2).
+
+    For full precision of an n×m-bit product choose ``n_out >= n + m``
+    (paper uses p_mult = 16 for 8-bit operands).
+    """
+    y = jnp.asarray(y, jnp.float32)
+    u = x_digits.astype(jnp.float32) * y  # u_t = x_t * Y, |u_t| <= |Y| < 1
+    return online_emit(u, n_out=n_out, delta=delta)
+
+
+def online_add(a_digits: jax.Array, b_digits: jax.Array, n_out: int,
+               delta: int = DELTA_ADD) -> jax.Array:
+    """Digit-serial online adder emitting the scaled sum ``(a + b) / 2``.
+
+    Both inputs are SD MSDF streams (padded with zero digits if lengths differ).
+    ``u_t = (a_t + b_t)/2 in [-1, 1]`` keeps the generic invariant; the output
+    stream represents ``(A + B)/2`` exactly given enough output digits.
+    """
+    Ta, Tb = a_digits.shape[0], b_digits.shape[0]
+    T = max(Ta, Tb)
+
+    def pad_to(d, T):
+        if d.shape[0] == T:
+            return d
+        pad = jnp.zeros((T - d.shape[0],) + d.shape[1:], d.dtype)
+        return jnp.concatenate([d, pad], axis=0)
+
+    a = pad_to(a_digits, T).astype(jnp.float32)
+    b = pad_to(b_digits, T).astype(jnp.float32)
+    u = (a + b) * 0.5
+    return online_emit(u, n_out=n_out, delta=delta)
+
+
+def online_add_tree(streams: jax.Array, n_out: int,
+                    delta: int = DELTA_ADD) -> tuple[jax.Array, int]:
+    """Digit-pipelined reduction tree of online adders (paper Fig. 3).
+
+    ``streams``: (n_terms, n_digits, *batch) SD streams.  Pads the term axis to
+    the next power of two with zero streams and reduces pairwise; a depth-S tree
+    emits the scaled SOP ``sum(streams) / 2^S``.
+
+    Returns ``(digits, n_stages)`` — the output stream (n_out, *batch) and the
+    tree depth S = ceil(log2(n_terms)) used by the cycle model (paper eq. 6).
+    """
+    n_terms = streams.shape[0]
+    stages = 0
+    level = streams  # (terms, digits, *batch)
+    while level.shape[0] > 1:
+        if level.shape[0] % 2:
+            level = jnp.concatenate(
+                [level, jnp.zeros((1,) + level.shape[1:], level.dtype)], axis=0)
+        # One vectorized online_add per tree level: pair terms along axis 0.
+        a, b = level[0::2], level[1::2]
+        flat_a = jnp.moveaxis(a, 0, 1)  # (digits, pairs, *batch)
+        flat_b = jnp.moveaxis(b, 0, 1)
+        summed = online_add(flat_a, flat_b, n_out=n_out, delta=delta)
+        level = jnp.moveaxis(summed, 1, 0)  # (pairs, n_out, *batch)
+        stages += 1
+    return level[0], stages

@@ -1,0 +1,72 @@
+"""Fixed-point quantization for the digit-serial datapath.
+
+The paper uses 8-bit fixed-point operands interpreted as fractions (the online
+modules work on fractional numbers so operand alignment is trivial, §II-A).
+We quantize symmetrically to ``n_bits`` with values ``q / 2^n in (-1, 1)``:
+
+    q = clip(round(x / s), -(2^{n-1} - 1), 2^{n-1} - 1) — per-tensor scale s
+
+so the *fraction* fed to the online operators is ``q * 2^{-(n-1)} * ... `` — we
+keep q as an integer and the fraction ``frac = q / 2^{n-1}``; note ``|frac| <=
+(2^{n-1}-1)/2^{n-1} < 1`` as the OLM invariant requires.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["QTensor", "quantize", "dequantize", "quantize_unsigned"]
+
+
+class QTensor(NamedTuple):
+    """Symmetric fixed-point tensor: ``value ~= frac * scale``.
+
+    ``q``     int32 integers in [-(2^{n-1}-1), 2^{n-1}-1]
+    ``scale`` float32 per-tensor scale applied to the *fraction* q / 2^{n-1}
+    ``n_bits`` total fraction bits (n-1 magnitude bits)
+    """
+    q: jax.Array
+    scale: jax.Array
+    n_bits: int
+
+    @property
+    def frac(self) -> jax.Array:
+        """Fractional value in (-1, 1) fed digit-serially to online operators."""
+        return self.q.astype(jnp.float32) * (2.0 ** -(self.n_bits - 1))
+
+    @property
+    def value(self) -> jax.Array:
+        return self.frac * self.scale
+
+
+def quantize(x: jax.Array, n_bits: int = 8, scale: jax.Array | None = None
+             ) -> QTensor:
+    """Symmetric signed quantization to ``n_bits`` (default int8-like)."""
+    x = jnp.asarray(x, jnp.float32)
+    qmax = 2 ** (n_bits - 1) - 1
+    if scale is None:
+        scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12)
+    q = jnp.clip(jnp.round(x / scale * qmax), -qmax, qmax).astype(jnp.int32)
+    # value = (q / 2^{n-1}) * scale_eff  with  scale_eff = scale * 2^{n-1}/qmax
+    scale_eff = jnp.asarray(scale, jnp.float32) * (2.0 ** (n_bits - 1) / qmax)
+    return QTensor(q=q, scale=scale_eff, n_bits=n_bits)
+
+
+def quantize_unsigned(x: jax.Array, n_bits: int = 8,
+                      scale: jax.Array | None = None) -> QTensor:
+    """Unsigned quantization for post-ReLU activations (paper feeds the image
+    pixels serially as non-negative fractions).  Digits stay in {0, 1}."""
+    x = jnp.asarray(x, jnp.float32)
+    qmax = 2 ** (n_bits - 1) - 1   # keep |frac| < 1 with the same n-1 split
+    if scale is None:
+        scale = jnp.maximum(jnp.max(x), 1e-12)
+    q = jnp.clip(jnp.round(x / scale * qmax), 0, qmax).astype(jnp.int32)
+    scale_eff = jnp.asarray(scale, jnp.float32) * (2.0 ** (n_bits - 1) / qmax)
+    return QTensor(q=q, scale=scale_eff, n_bits=n_bits)
+
+
+def dequantize(t: QTensor) -> jax.Array:
+    return t.value

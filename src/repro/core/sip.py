@@ -1,0 +1,80 @@
+"""Stripes' bit-serial inner-product unit (SIP) — the paper's baseline (Fig. 10/11).
+
+LSB-first bit-serial multiply-accumulate: each cycle i ANDs input bit ``x_i``
+with the parallel weight word, reduces the k*k partial products through an
+adder tree, and shift-adds into an accumulator.  After ``n`` cycles the SOP is
+complete.  Two structural facts drive the paper's comparison:
+
+* the result's sign is known only after the FINAL cycle (LSB-first carries can
+  flip the sign at any point) -> no early termination is possible;
+* the critical path chains the AND array, the tree of carry-propagate adders
+  and the wide accumulator (paper eq. 8), roughly 2x the DSLOT path (eq. 11).
+
+The functional model below is bit-exact int32 arithmetic (it IS conventional
+binary multiply-accumulate, evaluated serially) and doubles as the oracle for
+the online-arithmetic path: both must dequantize to identical SOPs.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["SIPSchedule", "sip_schedule", "sip_sop", "sip_sop_trace"]
+
+
+class SIPSchedule(NamedTuple):
+    n_bits: int            # serial input precision (cycles of bit feed)
+    tree_stages: int       # ceil(log2(k*k)) CPA stages per cycle (area/CPD model)
+    total_cycles: int      # cycles to a usable SOP (sign known only here)
+
+
+def sip_schedule(k: int, n_bits: int = 8) -> SIPSchedule:
+    tree_stages = max(0, math.ceil(math.log2(k * k)))
+    # One bit per cycle; the reduction tree + accumulator are combinational
+    # within the (long) cycle — matching the paper's eq. 8 critical path.
+    return SIPSchedule(n_bits=n_bits, tree_stages=tree_stages,
+                       total_cycles=n_bits)
+
+
+def sip_sop(x_q: jax.Array, w_q: jax.Array, n_bits: int = 8) -> jax.Array:
+    """Bit-exact SIP evaluation of ``sum_taps x*w`` on integer operands.
+
+    ``x_q``: (taps, *batch) non-negative int32 (post-ReLU activations, as in the
+    paper's pipeline), ``w_q``: (taps, *bcast) signed int32 weights (parallel).
+    Returns int32 SOP, identical to ``sum(x_q * w_q)`` — evaluated serially.
+    """
+    x_q = jnp.asarray(x_q, jnp.int32)
+    w_q = jnp.asarray(w_q, jnp.int32)
+
+    def cycle(acc, i):
+        bit = (x_q >> i) & 1                      # serial LSB-first input bit
+        pp = bit * w_q                            # AND array (PPG, Fig. 11a)
+        sopp = jnp.sum(pp, axis=0)                # reduction tree
+        return acc + (sopp << i), None            # shift-add accumulator
+
+    acc0 = jnp.zeros(jnp.broadcast_shapes(x_q.shape, w_q.shape)[1:], jnp.int32)
+    acc, _ = jax.lax.scan(cycle, acc0, jnp.arange(n_bits, dtype=jnp.int32))
+    return acc
+
+
+def sip_sop_trace(x_q: jax.Array, w_q: jax.Array, n_bits: int = 8) -> jax.Array:
+    """Accumulator value after every cycle — shows why early negative
+    detection fails for LSB-first arithmetic: the partial accumulator's sign is
+    uncorrelated with the final sign until the last (highest-weight) bits land.
+    Returns (n_bits, *batch) int32.
+    """
+    x_q = jnp.asarray(x_q, jnp.int32)
+    w_q = jnp.asarray(w_q, jnp.int32)
+
+    def cycle(acc, i):
+        bit = (x_q >> i) & 1
+        acc = acc + (jnp.sum(bit * w_q, axis=0) << i)
+        return acc, acc
+
+    acc0 = jnp.zeros(jnp.broadcast_shapes(x_q.shape, w_q.shape)[1:], jnp.int32)
+    _, trace = jax.lax.scan(cycle, acc0, jnp.arange(n_bits, dtype=jnp.int32))
+    return trace

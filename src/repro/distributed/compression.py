@@ -1,0 +1,94 @@
+"""Gradient compression with error feedback (for cross-pod all-reduce).
+
+At 2+ pods the gradient all-reduce crosses the slow inter-pod links
+(DCN/optical, far below ICI bandwidth), so the pod axis gets a compressed
+reduction:
+
+* ``int8_compress`` — per-tensor symmetric int8 quantization (8x smaller
+  payload) with error-feedback residual so quantization noise is unbiased
+  over steps (Seide et al. / 1-bit Adam lineage).
+* ``topk_compress`` — magnitude top-k sparsification (k as a fraction),
+  error feedback accumulates the dropped mass.
+
+Both return (payload, state) and compose with any reduction: the payloads
+are linear, so all-reduce(payload) then decompress ≈ all-reduce(grads).
+Convergence under compression is covered by tests/test_distributed.py.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    """Per-tensor error-feedback residuals (same pytree as grads)."""
+    residual: dict
+
+
+def init_ef_state(grads) -> EFState:
+    return EFState(residual=jax.tree.map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads))
+
+
+# ----------------------------------------------------------------- int8
+
+def int8_compress(grads, ef: EFState):
+    """-> ((q int8 tree, scale tree), new_ef).  q*scale ~= g + residual."""
+    def one(g, r):
+        x = g.astype(jnp.float32) + r
+        scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+        err = x - q.astype(jnp.float32) * scale
+        return q, scale, err
+
+    out = jax.tree.map(one, grads, ef.residual)
+    q = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    scale = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    err = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return (q, scale), EFState(residual=err)
+
+
+def int8_decompress(payload):
+    q, scale = payload
+    return jax.tree.map(lambda qq, s: qq.astype(jnp.float32) * s, q, scale)
+
+
+# ----------------------------------------------------------------- top-k
+
+def topk_compress(grads, ef: EFState, frac: float = 0.01):
+    """Keep the top `frac` fraction of entries by magnitude (per tensor);
+    -> ((values, indices) tree, new_ef)."""
+    def one(g, r):
+        x = (g.astype(jnp.float32) + r).reshape(-1)
+        k = max(1, int(x.size * frac))
+        vals, idx = jax.lax.top_k(jnp.abs(x), k)
+        kept = x[idx]
+        err = x.at[idx].set(0.0).reshape(g.shape)
+        return kept, idx, err
+
+    out = jax.tree.map(one, grads, ef.residual)
+    tup = lambda t: isinstance(t, tuple)
+    vals = jax.tree.map(lambda t: t[0], out, is_leaf=tup)
+    idx = jax.tree.map(lambda t: t[1], out, is_leaf=tup)
+    err = jax.tree.map(lambda t: t[2], out, is_leaf=tup)
+    return (vals, idx), EFState(residual=err)
+
+
+def topk_decompress(payload, like):
+    vals, idx = payload
+
+    def one(v, i, g):
+        flat = jnp.zeros(g.size, jnp.float32).at[i].set(v)
+        return flat.reshape(g.shape)
+
+    return jax.tree.map(one, vals, idx, like)
+
+
+def compressed_ratio(grads, payload) -> float:
+    """Payload bytes / raw fp32 bytes — the wire saving."""
+    raw = sum(g.size * 4 for g in jax.tree.leaves(grads))
+    comp = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(payload))
+    return comp / max(raw, 1)

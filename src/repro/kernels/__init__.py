@@ -1,0 +1,13 @@
+"""TPU hot-spot kernels: the DSLOT digit-plane matmul.
+
+``dslot_matmul.py`` — pl.pallas_call kernel (BlockSpec VMEM tiling, per-tile
+early negative termination); ``ops.py`` — jit'd wrapper with quantization /
+padding / column-sorting; ``ref.py`` — pure-jnp oracle the kernel is tested
+against (shape/dtype sweeps + hypothesis, tests/test_kernels.py).
+"""
+
+from .ops import DslotStats, dslot_matmul, quantize_activations
+from .ref import dslot_matmul_ref, make_planes
+
+__all__ = ["DslotStats", "dslot_matmul", "quantize_activations",
+           "dslot_matmul_ref", "make_planes"]

@@ -1,0 +1,137 @@
+"""Pallas TPU kernel: digit-plane MSDF matmul with per-tile early termination.
+
+TPU-native adaptation of DSLOT-NN's datapath (DESIGN.md §2/§4.2).  The FPGA
+design streams one signed digit per cycle through online multipliers and kills
+a SOP the moment its MSDF prefix goes negative.  A TPU has no per-lane early
+exit, so the unit of "digit" becomes a *digit plane* (one MXU matmul) and the
+unit of termination becomes an *output tile*:
+
+    C = sum_d 2^(n-1-d) * (P_d @ W),      P_d in {-1,0,1}^(M x K), d MSDF
+
+After accumulating plane d, the remaining planes can contribute at most
+``R_d[n] = (2^(n-1-d) - 2^(n-D)) * sum_k |W[k, n]|`` to any element of output
+column n (digits are bounded by 1 in magnitude).  A tile with
+``max_m(acc + R_d) < 0`` everywhere is provably negative under ReLU: its
+remaining ``D-d-1`` MXU passes are SKIPPED (predicated with ``pl.when``) and it
+emits zeros — the tile-granular Algorithm 1.  MSDF ordering makes ``R_d``
+shrink geometrically, which is exactly the paper's "sign is known from the
+first non-zero digit" property.
+
+Grid/layout: ``grid = (M/bm, N/bn, D)`` with the digit-plane axis innermost
+(sequential, "arbitrary" semantics); the f32 accumulator and the termination
+flag live in VMEM/SMEM scratch that persists across the plane axis.  Blocks
+are MXU-aligned (bm, bn multiples of 128 on real TPU; any size in interpret
+mode).  W is reloaded per (i, j) tile and stays VMEM-resident across planes
+(weight-stationary — the paper's dataflow).
+
+Validated in interpret mode against ``ref.dslot_matmul_ref`` (CPU container);
+targeted at TPU v5e (BlockSpec VMEM budget asserted at trace time).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["dslot_matmul_pallas", "DslotMatmulOut"]
+
+_VMEM_BUDGET_BYTES = 12 * 1024 * 1024  # leave headroom below v5e's ~16 MiB
+
+
+class DslotMatmulOut(NamedTuple):
+    out: jax.Array               # (M, N) f32 — [relu](A_D @ W)
+    planes_used: jax.Array       # (M/bm, N/bn) int32 — MXU passes per tile
+
+
+def _kernel(planes_ref, w_ref, out_ref, used_ref, acc_ref, term_ref, *,
+            n_bits: int, n_planes: int, relu: bool, block_m: int,
+            block_n: int):
+    d = pl.program_id(2)
+
+    @pl.when(d == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        term_ref[0] = 0
+        used_ref[...] = jnp.zeros_like(used_ref)
+
+    terminated = term_ref[0] > 0
+
+    @pl.when(jnp.logical_not(terminated))
+    def _accumulate():
+        plane = planes_ref[0].astype(jnp.float32)          # (bm, K)
+        w = w_ref[...].astype(jnp.float32)                 # (K, bn)
+        scale = jnp.exp2(jnp.asarray(n_bits - 1, jnp.float32)
+                         - d.astype(jnp.float32))
+        acc_ref[...] += scale * jnp.dot(
+            plane, w, preferred_element_type=jnp.float32)
+        used_ref[0, 0] += 1
+
+        if relu:
+            # Remaining-contribution bound per output column (see module doc).
+            rem = (scale - 2.0 ** (n_bits - n_planes)) * \
+                jnp.sum(jnp.abs(w), axis=0)                # (bn,)
+            provably_neg = jnp.all(acc_ref[...] + rem[None, :] < 0.0)
+            term_ref[0] = jnp.where(provably_neg, 1, term_ref[0])
+
+    @pl.when(d == n_planes - 1)
+    def _finalize():
+        acc = acc_ref[...]
+        if relu:
+            acc = jnp.maximum(acc, 0.0)
+            acc = jnp.where(term_ref[0] > 0, 0.0, acc)
+        out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_bits", "relu", "block_m", "block_n", "interpret"))
+def dslot_matmul_pallas(planes: jax.Array, w: jax.Array, *, n_bits: int = 8,
+                        relu: bool = True, block_m: int = 128,
+                        block_n: int = 128, interpret: bool = True
+                        ) -> DslotMatmulOut:
+    """Run the digit-plane matmul kernel.
+
+    planes: (D, M, K) int8 MSDF digit planes (see ``ref.make_planes``).
+    w:      (K, N) float32/bfloat16 weights.
+    M % block_m == 0 and N % block_n == 0 (callers pad — see ``ops.py``).
+    """
+    D, M, K = planes.shape
+    K2, N = w.shape
+    assert K == K2, (planes.shape, w.shape)
+    assert M % block_m == 0 and N % block_n == 0, (M, N, block_m, block_n)
+
+    vmem = (block_m * K * 1) + (K * block_n * w.dtype.itemsize) \
+        + 2 * (block_m * block_n * 4)
+    assert vmem <= _VMEM_BUDGET_BYTES, (
+        f"VMEM working set {vmem/2**20:.1f} MiB exceeds budget; "
+        f"shrink block_m/block_n or shard K")
+
+    grid = (M // block_m, N // block_n, D)
+    kernel = functools.partial(_kernel, n_bits=n_bits, n_planes=D, relu=relu,
+                               block_m=block_m, block_n=block_n)
+    out, used = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_m, K), lambda i, j, d: (d, i, 0)),
+            pl.BlockSpec((K, block_n), lambda i, j, d: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_m, block_n), lambda i, j, d: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j, d: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, N), jnp.float32),
+            jax.ShapeDtypeStruct((M // block_m, N // block_n), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_m, block_n), jnp.float32),   # accumulator
+            pltpu.SMEM((1,), jnp.int32),                   # termination flag
+        ],
+        interpret=interpret,
+    )(planes, w)
+    return DslotMatmulOut(out=out, planes_used=used)

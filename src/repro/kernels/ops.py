@@ -1,0 +1,150 @@
+"""Framework-facing ops for the digit-plane DSLOT engine.
+
+``dslot_matmul`` is the public entry point used by model layers and the
+serving engine.  It handles quantization, MSDF plane decomposition, block
+padding, backend selection and dequantization:
+
+* ``backend="pallas"`` — the Pallas kernel (interpret mode on CPU, compiled on
+  TPU).  Real per-tile early termination: skipped MXU passes.
+* ``backend="jnp"``    — pure-jnp evaluation with *identical semantics and
+  identical termination statistics* (the bound math is evaluated vectorized,
+  but all planes are computed) — fast on CPU, used for large-shape stats.
+* ``backend="auto"``   — pallas on TPU, jnp elsewhere.
+
+Beyond-paper optimization (``sort_columns=True``): weight-stationary column
+reordering.  Tile termination requires *spatially clustered* dead outputs;
+sorting output columns by their weight column-sum (a static, offline
+permutation — weights are stationary, exactly the paper's dataflow assumption)
+clusters ReLU-dead neurons into contiguous tiles, which measurably raises the
+skipped-pass fraction (see EXPERIMENTS.md §Perf).  The inverse permutation is
+applied to the output, so results are unchanged.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .dslot_matmul import dslot_matmul_pallas
+from .ref import dslot_matmul_ref, make_planes
+
+__all__ = ["DslotStats", "dslot_matmul", "quantize_activations"]
+
+
+class DslotStats(NamedTuple):
+    planes_used: jax.Array      # (Mt, Nt) int32 — MXU passes per output tile
+    n_planes: int               # D
+    skipped_frac: jax.Array     # scalar — fraction of plane-passes skipped
+
+
+def quantize_activations(x: jax.Array, n_bits: int = 8, signed: bool = False
+                         ) -> tuple[jax.Array, jax.Array]:
+    """Symmetric activation quantization -> (q int32, step float32)."""
+    qmax = float(2 ** n_bits - 1 if not signed else 2 ** (n_bits - 1) - 1)
+    amax = jnp.maximum(jnp.max(jnp.abs(x)) if signed else jnp.max(x), 1e-12)
+    step = amax / qmax
+    lo = -qmax if signed else 0.0
+    q = jnp.clip(jnp.round(x / step), lo, qmax).astype(jnp.int32)
+    return q, step
+
+
+def _pad_to(x: jax.Array, m: int, axis: int) -> jax.Array:
+    r = (-x.shape[axis]) % m
+    if r == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, r)
+    return jnp.pad(x, pads)
+
+
+def _jnp_path(planes: jax.Array, w: jax.Array, n_bits: int, relu: bool,
+              block_m: int, block_n: int):
+    """Reference evaluation + vectorized termination accounting.
+
+    Computes every plane (no skipping — this is CPU) but derives the exact
+    per-tile ``planes_used`` the Pallas kernel would report, by replaying the
+    bound check over the plane-wise cumulative accumulators.
+    """
+    D, M, K = planes.shape
+    N = w.shape[1]
+    wf = w.astype(jnp.float32)
+    scales = jnp.exp2(jnp.asarray(n_bits - 1, jnp.float32)
+                      - jnp.arange(D, dtype=jnp.float32))
+    partial = jnp.einsum("dmk,kn->dmn", planes.astype(jnp.float32), wf,
+                         preferred_element_type=jnp.float32)
+    cum = jnp.cumsum(scales[:, None, None] * partial, axis=0)   # (D, M, N)
+    out = cum[-1]
+    if relu:
+        out = jnp.maximum(out, 0.0)
+
+    # Termination replay: tile (i,j) is dead after plane d if every element's
+    # optimistic bound is < 0.
+    colsum = jnp.sum(jnp.abs(wf), axis=0)                       # (N,)
+    rem = (scales - 2.0 ** (n_bits - D))[:, None]               # (D, 1)
+    bound = cum + (rem * colsum[None, :])[:, None, :]           # (D, M, N)
+    Mt, Nt = M // block_m, N // block_n
+    tiles = bound.reshape(D, Mt, block_m, Nt, block_n)
+    dead_after = jnp.all(tiles < 0.0, axis=(2, 4))              # (D, Mt, Nt)
+    if relu:
+        ever = jnp.any(dead_after, axis=0)
+        first = jnp.argmax(dead_after, axis=0)                  # 0-based plane
+        used = jnp.where(ever, first + 1, D).astype(jnp.int32)
+    else:
+        used = jnp.full((Mt, Nt), D, jnp.int32)
+    return out, used
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_bits", "n_planes", "relu", "block_m", "block_n", "backend",
+    "sort_columns", "signed"))
+def dslot_matmul(x: jax.Array, w: jax.Array, *, n_bits: int = 8,
+                 n_planes: int | None = None, relu: bool = True,
+                 block_m: int = 128, block_n: int = 128,
+                 backend: str = "auto", sort_columns: bool = False,
+                 signed: bool = False
+                 ) -> tuple[jax.Array, DslotStats]:
+    """Digit-serial (MSDF digit-plane) matmul: ``[relu](x @ w)``.
+
+    ``x`` (M, K) float — activations, quantized here to ``n_bits``.
+    ``w`` (K, N) float — weights (kept full precision: the serial-parallel OLM
+    takes the weight operand in parallel, so only the streamed activation is
+    digit-decomposed; this matches the paper's serial x / parallel Y split).
+    ``n_planes`` — runtime precision knob (D <= n_bits), the paper's
+    "precision tuned at run time".
+    """
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    D = n_planes or n_bits
+    M, K = x.shape
+    N = w.shape[1]
+
+    q, step = quantize_activations(x, n_bits=n_bits, signed=signed)
+    planes = make_planes(q, n_bits, n_planes=D)                 # (D, M, K)
+
+    perm = None
+    if sort_columns:
+        perm = jnp.argsort(jnp.sum(w, axis=0))                  # dead cols first
+        w = w[:, perm]
+
+    planes_p = _pad_to(planes, block_m, axis=1)
+    w_p = _pad_to(w.astype(jnp.float32), block_n, axis=1)
+
+    if backend == "pallas":
+        out_p, used = dslot_matmul_pallas(
+            planes_p, w_p, n_bits=n_bits, relu=relu,
+            block_m=block_m, block_n=block_n,
+            interpret=jax.default_backend() != "tpu")
+        out_p = out_p
+    else:
+        out_p, used = _jnp_path(planes_p, w_p, n_bits, relu, block_m, block_n)
+
+    out = out_p[:M, :N] * step
+    if perm is not None:
+        inv = jnp.argsort(perm)
+        out = out[:, inv]
+
+    skipped = 1.0 - jnp.mean(used.astype(jnp.float32)) / D
+    return out, DslotStats(planes_used=used, n_planes=D, skipped_frac=skipped)

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for the digit-plane DSLOT kernels.
+
+The oracle defines the semantics the Pallas kernel must match bit-for-bit
+(up to float accumulation order): a quantized matmul evaluated MSDF over
+signed-digit planes, with optional fused ReLU.  Early termination in the
+kernel is a pure work-saving — it must never change the result, so the oracle
+simply computes the full product.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.digits import fixed_to_sd
+
+__all__ = ["make_planes", "dslot_matmul_ref", "plane_value_ref"]
+
+
+def make_planes(a_q: jax.Array, n_bits: int, n_planes: int | None = None
+                ) -> jax.Array:
+    """SD digit planes of a signed integer matrix, MSDF.
+
+    ``a_q`` int32 (M, K) with ``|a_q| < 2^n_bits``.  Returns int8
+    ``(D, M, K)`` planes with ``a_q ~= sum_d planes[d] * 2^(n_bits-1-d)``
+    (exact when D = n_bits; truncating D < n_bits is the paper's runtime
+    precision knob — error < 2^(n_bits-D)).
+    """
+    planes = fixed_to_sd(a_q, n_bits)          # digit d weight 2^-(d+1) of q/2^n
+    if n_planes is not None:
+        planes = planes[:n_planes]
+    return planes
+
+
+def plane_value_ref(planes: jax.Array, n_bits: int) -> jax.Array:
+    """Reconstruct the (possibly truncated) integer value of digit planes."""
+    D = planes.shape[0]
+    w = 2.0 ** (n_bits - 1 - jnp.arange(D, dtype=jnp.float32))
+    return jnp.tensordot(w, planes.astype(jnp.float32), axes=(0, 0))
+
+
+def dslot_matmul_ref(planes: jax.Array, w: jax.Array, n_bits: int,
+                     relu: bool = True) -> jax.Array:
+    """Oracle: ``C = [relu](A_D @ W)`` where ``A_D`` is the plane-truncated
+    integer activation.  Evaluated plane-by-plane MSDF exactly like the kernel
+    (same accumulation order, f32).
+
+    planes: (D, M, K) int8;  w: (K, N) float32.  Returns (M, N) float32.
+    """
+    D, M, K = planes.shape
+    w = w.astype(jnp.float32)
+
+    def body(d, acc):
+        scale = jnp.exp2(jnp.asarray(n_bits - 1 - d, jnp.float32))
+        return acc + scale * jnp.dot(planes[d].astype(jnp.float32), w,
+                                     preferred_element_type=jnp.float32)
+
+    acc = jax.lax.fori_loop(0, D, body, jnp.zeros((M, w.shape[1]), jnp.float32))
+    return jnp.maximum(acc, 0.0) if relu else acc

@@ -1,0 +1,22 @@
+"""Production meshes.  Functions, not module constants — importing this
+module never touches jax device state (dry-run sets
+``xla_force_host_platform_device_count`` before first jax init).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) = 256 chips, axes (data, model).
+    Multi-pod:  (2, 16, 16) = 512 chips, axes (pod, data, model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(n_devices: int | None = None, model: int = 2):
+    """Small mesh for in-process tests (requires host-device override)."""
+    n = n_devices or len(jax.devices())
+    return jax.make_mesh((n // model, model), ("data", "model"))

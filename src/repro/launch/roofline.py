@@ -1,0 +1,161 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape) cell, from the single-pod compiled program:
+
+    compute   = dot_FLOPs / peak_FLOPs          (197 TFLOP/s bf16, v5e)
+    memory    = HBM_bytes / HBM_bw              (819 GB/s)
+    collective= collective_bytes / link_bw      (~50 GB/s ICI per chip)
+
+All three numerators are per-device, trip-count-corrected (repro.launch.
+hlo_cost — `cost_analysis()` counts loop bodies once, see tests).  The
+dominant term is the modeled bottleneck; the roofline fraction is
+``(MODEL_FLOPS/chips/peak) / dominant`` — the fraction of peak MXU
+throughput the step would sustain if it ran exactly at the modeled
+bottleneck.  MODEL_FLOPS = 6·N·D for training (2·N·D prefill, 2·N·B decode),
+N_active for MoE.
+
+    python -m repro.launch.roofline [--dir experiments/dryrun] [--md out.md]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s
+LINK_BW = 50e9               # bytes/s ICI
+
+_PARAM_CACHE: dict[str, tuple[float, float]] = {}
+
+
+def param_counts(arch_name: str) -> tuple[float, float]:
+    """(N_total, N_active) — active discounts non-routed experts."""
+    if arch_name in _PARAM_CACHE:
+        return _PARAM_CACHE[arch_name]
+    import jax
+    import numpy as np
+    from repro.configs.registry import get_arch
+    from repro.models.model_zoo import build_model
+
+    cfg = get_arch(arch_name)
+    model = build_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    total = active = 0.0
+    for path, leaf in flat:
+        n = float(np.prod(leaf.shape))
+        total += n
+        p = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in path)
+        if cfg.n_experts and "moe/" in p and any(
+                p.endswith(x) for x in ("up", "gate", "down")):
+            active += n * cfg.top_k / cfg.n_experts
+        else:
+            active += n
+    _PARAM_CACHE[arch_name] = (total, active)
+    return total, active
+
+
+def model_flops_per_device(arch_name: str, shape_name: str, chips: int
+                           ) -> float:
+    from repro.configs.registry import get_shape
+    shape = get_shape(shape_name)
+    _, n_active = param_counts(arch_name)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens / chips
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens / chips
+    # decode: one token per sequence per step
+    return 2.0 * n_active * shape.global_batch / chips
+
+
+def analyze_cell(rec: dict) -> dict:
+    c = rec["corrected"]
+    chips = 1
+    for v in rec["mesh"].values():
+        chips *= v
+    compute_s = c["dot_flops"] / PEAK_FLOPS
+    # compulsory traffic (dot/conv operands incl. per-iteration weight
+    # streaming, collectives, scatters); hbm_bytes_upper is the loose
+    # fusion-boundary bound — truth lies between (hlo_cost.py docstring)
+    memory_s = c["hbm_bytes"] / HBM_BW
+    coll_s = c["coll_total_bytes"] / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_per_device(rec["arch"], rec["shape"], chips)
+    useful_s = mf / PEAK_FLOPS
+    frac = useful_s / max(terms[dominant], 1e-30)
+    peak_gib = (rec["memory"].get("temp_size_in_bytes", 0)
+                + rec["memory"].get("argument_size_in_bytes", 0)) / 2 ** 30
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "chips": chips,
+        "compute_s": compute_s, "memory_s": memory_s,
+        "memory_upper_s": c.get("hbm_bytes_upper", 0) / HBM_BW,
+        "collective_s": coll_s, "dominant": dominant,
+        "model_flops_dev": mf, "hlo_flops_dev": c["dot_flops"],
+        "useful_ratio": mf / max(c["dot_flops"], 1e-30),
+        "roofline_frac": frac, "peak_gib": peak_gib,
+        "tag": rec.get("tag", ""),
+    }
+
+
+def suggestion(row: dict) -> str:
+    d = row["dominant"]
+    if d == "compute":
+        if row["useful_ratio"] < 0.5:
+            return ("compute-bound with <50% useful FLOPs: cut remat/causal "
+                    "waste (pair-scan, smarter checkpoint policy)")
+        return "compute-bound near useful peak: quantize (DSLOT int8 planes)"
+    if d == "memory":
+        return ("memory-bound: fuse/stream weights (bigger microbatch, "
+                "int8 weights, DSLOT planes) to raise arithmetic intensity")
+    return ("collective-bound: overlap TP gathers (collective matmul), "
+            "compress cross-pod grads, or reshard the dominant tensor")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--md", default="experiments/roofline.md")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+
+    rows = []
+    for f in sorted(glob.glob(os.path.join(args.dir,
+                                           f"*__{args.mesh}.json"))):
+        rec = json.load(open(f))
+        if rec.get("tag"):
+            continue
+        rows.append(analyze_cell(rec))
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+
+    lines = ["| arch | shape | compute s | memory s (upper) | collective s |"
+             " bottleneck | MODEL/HLO | roofline frac | peak GiB |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} ({r['memory_upper_s']:.1e}) | "
+            f"{r['collective_s']:.3e} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_frac']:.1%} | {r['peak_gib']:.1f} |")
+    table = "\n".join(lines)
+    print(table)
+    notes = ["", "Per-cell bottleneck notes:"]
+    for r in rows:
+        notes.append(f"- {r['arch']} x {r['shape']}: {suggestion(r)}")
+    out = table + "\n" + "\n".join(notes) + "\n"
+    if args.md:
+        os.makedirs(os.path.dirname(args.md), exist_ok=True)
+        with open(args.md, "w") as fh:
+            fh.write(out)
+        print(f"\nwritten to {args.md}")
+
+
+if __name__ == "__main__":
+    main()

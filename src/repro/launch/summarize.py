@@ -1,0 +1,40 @@
+"""Render EXPERIMENTS.md §Dry-run table from the sweep artifacts."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def main():
+    rows = []
+    for f in sorted(glob.glob("experiments/dryrun/*.json")):
+        r = json.load(open(f))
+        if r.get("tag"):
+            continue
+        c = r.get("corrected", {})
+        peak = (r["memory"].get("temp_size_in_bytes", 0)
+                + r["memory"].get("argument_size_in_bytes", 0)) / 2 ** 30
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "mesh": "2x16x16" if r["multi_pod"] else "16x16",
+            "compile_s": r["compile_s"],
+            "flops": c.get("dot_flops", 0),
+            "hbm": c.get("hbm_bytes", 0),
+            "coll": c.get("coll_total_bytes", 0),
+            "peak": peak,
+            "fits": "yes" if peak <= 16.0 else f"NO ({peak:.1f})",
+        })
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    print("| arch | shape | mesh | compile s | dot FLOPs/dev | HBM B/dev |"
+          " coll B/dev | peak GiB | fits 16 GiB |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+              f"{r['compile_s']:.0f} | {r['flops']:.2e} | {r['hbm']:.2e} | "
+              f"{r['coll']:.2e} | {r['peak']:.1f} | {r['fits']} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,325 @@
+"""Attention: GQA/MQA, full-causal, sliding-window/local, cross; flash-style.
+
+Memory discipline: scores are never materialized for the full sequence.
+``flash_attention`` scans KV in chunks with running-max online softmax
+(O(S * chunk) score memory); the sliding-window path additionally chunks the
+query axis and slices only the in-window KV span (O(S * W) compute — this is
+what makes the `long_500k`/SWA cells sub-quadratic).
+
+Decode uses a ring-buffer KV cache: slot = position % capacity, with an
+explicit per-slot position array for exact masking.  Full attention uses
+capacity = seq_len (no wraparound); SWA uses capacity = window, so the cache
+footprint of a 500k-token stream is O(window).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, apply_dense, apply_rope, init_dense
+from .pspec import constrain, head_scheme
+
+_NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (B, C, Hkv, D)
+    v: jax.Array          # (B, C, Hkv, D)
+    positions: jax.Array  # (C,) int32, -1 = empty
+
+
+def init_attention(cfg, key, cross: bool = False) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    hd = cfg.head_dim_
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": init_dense(ks[0], cfg.d_model, cfg.n_heads * hd, dt,
+                         bias=cfg.qkv_bias),
+        "wk": init_dense(ks[1], cfg.d_model, cfg.n_kv_heads * hd, dt,
+                         bias=cfg.qkv_bias),
+        "wv": init_dense(ks[2], cfg.d_model, cfg.n_kv_heads * hd, dt,
+                         bias=cfg.qkv_bias),
+        "wo": init_dense(ks[3], cfg.n_heads * hd, cfg.d_model, dt),
+    }
+
+
+def cache_capacity(cfg, seq_len: int) -> int:
+    if cfg.attn_type == "swa" and cfg.window:
+        return min(seq_len, cfg.window)
+    return seq_len
+
+
+def init_kv_cache(cfg, batch: int, seq_len: int, dtype) -> KVCache:
+    C = cache_capacity(cfg, seq_len)
+    hd = cfg.head_dim_
+    return KVCache(
+        k=jnp.zeros((batch, C, cfg.n_kv_heads, hd), dtype),
+        v=jnp.zeros((batch, C, cfg.n_kv_heads, hd), dtype),
+        positions=jnp.full((C,), -1, jnp.int32),
+    )
+
+
+# ------------------------------------------------------------------ softmax core
+
+def _attend_block(q, k, v, mask, m, l, acc):
+    """One online-softmax update.  q:(B,Sq,Hkv,G,D) k/v:(B,Ck,Hkv,D)
+    mask:(Sq,Ck) or (B,Sq,Ck); m,l:(B,Sq,Hkv,G) acc:(B,Sq,Hkv,G,D)."""
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", q.astype(jnp.float32),
+                   k.astype(jnp.float32))
+    if mask.ndim == 2:
+        mask = mask[None]
+    s = jnp.where(mask[:, :, None, None, :], s, _NEG_INF)
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m - m_new)
+    l_new = l * corr + jnp.sum(p, axis=-1)
+    # bf16 probabilities for the PV matmul (standard flash practice): halves
+    # the per-chunk residuals saved for the backward pass, f32 accumulation.
+    acc_new = acc * corr[..., None] + jnp.einsum(
+        "bqhgk,bkhd->bqhgd", p.astype(v.dtype), v,
+        preferred_element_type=jnp.float32)
+    return m_new, l_new, acc_new
+
+
+def flash_attention(q, k, v, q_pos, k_pos, *, causal: bool, window: int,
+                    chunk: int) -> jax.Array:
+    """Chunked-KV online-softmax attention.
+
+    q: (B, Sq, Hq, D); k/v: (B, Sk, Hkv, D); positions int32 arrays
+    (q_pos: (Sq,), k_pos: (Sk,); k_pos may contain -1 = invalid slot).
+    GQA folds Hq into (Hkv, G).  Returns (B, Sq, Hq, D) in q.dtype.
+    """
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    scale = D ** -0.5
+    qg = (q * scale).reshape(B, Sq, Hkv, G, D)
+
+    Sk = k.shape[1]
+    if Sq == 1:
+        # Decode fast path: one un-chunked online-softmax block.  Keeps the
+        # KV cache shardable along its sequence axis (context parallelism):
+        # the softmax reductions over Sk become tiny cross-device
+        # all-reduces instead of a scan over a sharded axis.
+        mask = (k_pos >= 0)[None, :]
+        if causal:
+            mask = mask & (k_pos[None, :] <= q_pos[:, None])
+        if window:
+            mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+        m0 = jnp.full((B, Sq, Hkv, G), _NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Sq, Hkv, G), jnp.float32)
+        a0 = jnp.zeros((B, Sq, Hkv, G, D), jnp.float32)
+        m, l, acc = _attend_block(qg, k, v, mask, m0, l0, a0)
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+    ck = min(chunk, Sk)
+    n_chunks = -(-Sk // ck)
+    pad = n_chunks * ck - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=-1)
+
+    kc = k.reshape(B, n_chunks, ck, Hkv, D)
+    vc = v.reshape(B, n_chunks, ck, Hkv, D)
+    pc = k_pos.reshape(n_chunks, ck)
+
+    m0 = jnp.full((B, Sq, Hkv, G), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hkv, G), jnp.float32)
+    a0 = jnp.zeros((B, Sq, Hkv, G, D), jnp.float32)
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        kb, vb, pb = inputs
+        valid = pb >= 0
+        mask = valid[None, :]
+        if causal:
+            mask = mask & (pb[None, :] <= q_pos[:, None])
+        if window:
+            mask = mask & (pb[None, :] > q_pos[:, None] - window)
+        m, l, acc = _attend_block(qg, kb, vb, mask, m, l, acc)
+        return (m, l, acc), None
+
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), pc))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+def chunked_causal_attention(q, k, v, q_pos, k_pos, *, chunk: int
+                             ) -> jax.Array:
+    """Full causal attention with BOTH axes chunked: outer map over query
+    chunks, inner flash scan over KV.  Bounds the score/mask working set to
+    (B, cq, H, ck) regardless of sequence length — required for 32k+ prefill
+    to fit HBM (the unchunked-query form hoists O(S^2/ck) masks)."""
+    B, Sq, Hq, D = q.shape
+    cq = min(chunk, Sq)
+    n_q = -(-Sq // cq)
+    pad_q = n_q * cq - Sq
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, (0, pad_q), constant_values=-1)
+
+    def one_chunk(i):
+        qs = jax.lax.dynamic_slice_in_dim(q, i * cq, cq, axis=1)
+        qp = jax.lax.dynamic_slice_in_dim(q_pos, i * cq, cq)
+        return flash_attention(qs, k, v, qp, k_pos, causal=True, window=0,
+                               chunk=chunk)
+
+    outs = jax.lax.map(one_chunk, jnp.arange(n_q))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, n_q * cq, Hq, D)
+    return out[:, :Sq]
+
+
+def swa_attention(q, k, v, q_pos, k_pos, *, window: int, q_chunk: int
+                  ) -> jax.Array:
+    """Sub-quadratic sliding-window attention: chunk queries, slice only the
+    in-window KV span per chunk.  Compute O(S * (W + cq)), not O(S^2)."""
+    B, Sq, Hq, D = q.shape
+    Sk = k.shape[1]
+    cq = min(q_chunk, Sq)
+    n_q = -(-Sq // cq)
+    pad_q = n_q * cq - Sq
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, (0, pad_q), constant_values=-1)
+    span = min(Sk, window + cq)
+
+    def one_chunk(i):
+        qs = jax.lax.dynamic_slice_in_dim(q, i * cq, cq, axis=1)
+        qp = jax.lax.dynamic_slice_in_dim(q_pos, i * cq, cq)
+        # KV span covering (chunk_start - window, chunk_end]
+        start = jnp.clip(i * cq + cq - span, 0, Sk - span)
+        ks = jax.lax.dynamic_slice_in_dim(k, start, span, axis=1)
+        vs = jax.lax.dynamic_slice_in_dim(v, start, span, axis=1)
+        kp = jax.lax.dynamic_slice_in_dim(k_pos, start, span)
+        return flash_attention(qs, ks, vs, qp, kp, causal=True,
+                               window=window, chunk=span)
+
+    outs = jax.lax.map(one_chunk, jnp.arange(n_q))       # (n_q, B, cq, Hq, D)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, n_q * cq, Hq, D)
+    return out[:, :Sq]
+
+
+# ------------------------------------------------------------------ module API
+
+def attention_forward(p: Params, x: jax.Array, cfg, *, positions: jax.Array,
+                      cache: KVCache | None = None,
+                      kv_x: jax.Array | None = None,
+                      causal: bool = True,
+                      return_cache: bool = False,
+                      is_cross: bool = False,
+                      cache_len: int | None = None
+                      ) -> tuple[jax.Array, KVCache | None]:
+    """Full attention pass (train / prefill / decode / cross).
+
+    x: (B, S, d_model).  positions: (S,) int32 absolute positions.
+    cache: when given and S is small (decode), new KV are appended (ring) and
+    attention runs against the cache; when ``return_cache`` on a long pass
+    (prefill), the cache is built from this pass's KV.
+    kv_x: encoder output for cross-attention (keys/values from there, no
+    causal mask, no rope on cross keys beyond their own positions).
+    """
+    B, S, _ = x.shape
+    hd = cfg.head_dim_
+    cross = is_cross or kv_x is not None
+    q = apply_dense(p["wq"], x).reshape(B, S, cfg.n_heads, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+
+    if cross and cache is not None and kv_x is None:
+        # decode against a static (encoder) cross cache: no writes, no mask
+        q = constrain(q, "b", None, "tp", None)
+        out = flash_attention(q, cache.k, cache.v, positions,
+                              cache.positions, causal=False, window=0,
+                              chunk=cfg.attn_chunk)
+        y = apply_dense(p["wo"], out.reshape(B, S, cfg.n_heads * hd))
+        return y, cache
+
+    src = kv_x if kv_x is not None else x
+    Skv = src.shape[1]
+    k = apply_dense(p["wk"], src).reshape(B, Skv, cfg.n_kv_heads, hd)
+    v = apply_dense(p["wv"], src).reshape(B, Skv, cfg.n_kv_heads, hd)
+
+    if not cross:
+        k = apply_rope(k, positions, cfg.rope_theta)
+        kv_pos = positions
+    else:
+        kv_pos = jnp.arange(Skv, dtype=jnp.int32)
+        k = apply_rope(k, kv_pos, cfg.rope_theta)
+
+    # Shard attention across the model axis (DESIGN.md §5 / pspec.py):
+    # "kv" shards kv heads; "repeat" duplicates kv to q-heads so the head
+    # axis shards evenly (zero attention collectives at a small kv cost).
+    scheme = head_scheme(cfg.n_kv_heads, cfg.n_heads)
+    q = constrain(q, "b", None, "tp", None)
+
+    def _spread(kk, vv):
+        if scheme == "repeat":
+            g = cfg.n_heads // max(cfg.n_kv_heads, 1)
+            if g > 1:
+                kk = jnp.repeat(kk, g, axis=2)
+                vv = jnp.repeat(vv, g, axis=2)
+        kk = constrain(kk, "b", None, "tp", None)
+        vv = constrain(vv, "b", None, "tp", None)
+        return kk, vv
+
+    new_cache = None
+    if cache is not None and not cross:
+        # decode: write new kv into ring slots, attend against whole cache
+        C = cache.k.shape[1]
+        slots = positions % C
+        kc = cache.k.at[:, slots].set(k)
+        vc = cache.v.at[:, slots].set(v)
+        pc = cache.positions.at[slots].set(positions)
+        new_cache = KVCache(k=kc, v=vc, positions=pc)
+        window = cfg.window if cfg.attn_type == "swa" else 0
+        # decode: the cache is sequence-sharded (context parallelism); keep
+        # that layout — repeating kv heads is fine, but constraining heads
+        # onto the model axis here would force a full cache reshard.
+        if scheme == "repeat":
+            g = cfg.n_heads // max(cfg.n_kv_heads, 1)
+            ka = jnp.repeat(kc, g, axis=2) if g > 1 else kc
+            va = jnp.repeat(vc, g, axis=2) if g > 1 else vc
+        else:
+            ka, va = kc, vc
+        ka = constrain(ka, "b", "tp", None, None)
+        va = constrain(va, "b", "tp", None, None)
+        out = flash_attention(q, ka, va, positions, pc, causal=causal,
+                              window=window, chunk=cfg.attn_chunk)
+    else:
+        window = cfg.window if (cfg.attn_type == "swa" and not cross) else 0
+        ka, va = _spread(k, v)
+        if window and S > 1:
+            out = swa_attention(q, ka, va, positions, kv_pos, window=window,
+                                q_chunk=cfg.attn_chunk)
+        elif causal and not cross and S > 2 * cfg.attn_chunk:
+            out = chunked_causal_attention(q, ka, va, positions, kv_pos,
+                                           chunk=cfg.attn_chunk)
+        else:
+            out = flash_attention(q, ka, va, positions, kv_pos,
+                                  causal=causal and not cross, window=0,
+                                  chunk=cfg.attn_chunk)
+        if return_cache:
+            # Build the ring cache from the last kept positions (slot =
+            # pos % C; scatter keeps the ring invariant for any C).  The ring
+            # is sized for the TARGET sequence length (cache_len), not the
+            # prompt, so subsequent decode steps never clobber live slots.
+            C = Skv if cross else cache_capacity(cfg, cache_len or int(Skv))
+            n_keep = min(C, Skv)
+            keep = slice(Skv - n_keep, Skv)
+            kept_pos = kv_pos[keep].astype(jnp.int32)
+            slots = kept_pos % C
+            zk = jnp.zeros((B, C) + k.shape[2:], k.dtype)
+            new_cache = KVCache(
+                k=zk.at[:, slots].set(k[:, keep]),
+                v=zk.at[:, slots].set(v[:, keep]),
+                positions=jnp.full((C,), -1, jnp.int32).at[slots].set(kept_pos))
+
+    out = constrain(out, "b", None, "tp", None)
+    y = apply_dense(p["wo"], out.reshape(B, S, cfg.n_heads * hd))
+    return y, new_cache

@@ -1,0 +1,64 @@
+"""MLP blocks (SwiGLU / GeGLU / ReLU), with the DSLOT digit-serial execution
+mode for inference (the paper's technique as a first-class execution option).
+
+When ``cfg.dslot.enabled`` and the activation is ReLU (the only case where the
+early-negative-termination contract holds — DESIGN.md §6), the up-projection
+matmul runs through ``repro.kernels.ops.dslot_matmul`` with fused ReLU and
+per-tile early termination; termination statistics are surfaced through
+``repro.models.stats`` for the serving engine to report.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, apply_dense, init_dense
+from .pspec import constrain
+
+_ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "relu": lambda x: jnp.maximum(x, 0.0),
+}
+
+
+def init_mlp(cfg, key) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 3)
+    p = {"up": init_dense(ks[0], cfg.d_model, cfg.d_ff, dt),
+         "down": init_dense(ks[1], cfg.d_ff, cfg.d_model, dt)}
+    if cfg.glu:
+        p["gate"] = init_dense(ks[2], cfg.d_model, cfg.d_ff, dt)
+    return p
+
+
+def apply_mlp(p: Params, x: jax.Array, cfg) -> jax.Array:
+    act = _ACTS[cfg.act]
+    if cfg.dslot.enabled and cfg.act == "relu" and not cfg.glu:
+        return _apply_mlp_dslot(p, x, cfg)
+    up = constrain(apply_dense(p["up"], x), "b", None, "tp")
+    if cfg.glu:
+        h = act(constrain(apply_dense(p["gate"], x), "b", None, "tp")) * up
+    else:
+        h = act(up)
+    return apply_dense(p["down"], h)
+
+
+def _apply_mlp_dslot(p: Params, x: jax.Array, cfg) -> jax.Array:
+    """Digit-serial inference path: fused up-proj + ReLU with early
+    termination of provably-negative output tiles (paper Algorithm 1,
+    tile-granular TPU adaptation)."""
+    from repro.kernels.ops import dslot_matmul
+    from . import stats
+
+    B = x.shape[:-1]
+    flat = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    d = cfg.dslot
+    h, st = dslot_matmul(flat, p["up"]["w"].astype(jnp.float32),
+                         n_bits=d.n_bits, n_planes=d.n_planes, relu=True,
+                         block_m=d.block_m, block_n=d.block_n,
+                         sort_columns=d.sort_columns, signed=True)
+    stats.record("mlp_dslot_skipped_frac", st.skipped_frac)
+    h = h.astype(x.dtype).reshape(*B, cfg.d_ff)
+    return apply_dense(p["down"], h)

@@ -1,0 +1,165 @@
+"""Model builder: ModelConfig -> runnable model (train / prefill / decode).
+
+One ``Model`` class covers all 10 assigned architectures:
+
+* decoder-only LMs (dense / MoE / SSM / hybrid) — ``block_pattern`` drives the
+  layer mix;
+* enc-dec (seamless-m4t): an encoder ``Stack`` (non-causal) + decoder stack
+  with cross-attention;
+* [audio]/[vlm] frontends are STUBS per the assignment: ``input_specs`` (and
+  the data pipeline) provide precomputed frame/patch embeddings, which are
+  prepended to the token embeddings.
+
+Batch dicts:
+    LM      : {"tokens": (B, S) i32, "labels": (B, S) i32}
+    +frontend: {"frontend": (B, F, d_model)} and tokens/labels are (B, S-F)
+    enc-dec : {"src_embeds": (B, F, d_model), "tokens": (B, S), "labels": ...}
+Decode state: {"caches": ..., "enc": enc-dec encoder caches or None}
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (Params, apply_norm, embed_tokens, init_embedding,
+                     init_lm_head, init_norm, lm_logits)
+from .pspec import constrain
+from .transformer import Stack
+
+
+class Model:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        pattern = cfg.pattern_for_layers()[: len(cfg.block_pattern)]
+        if cfg.family == "encdec":
+            dec_pattern = ("attn_cross",)
+            self.encoder = Stack(cfg, ("attn",), cfg.encoder_layers,
+                                 causal=False)
+            self.decoder = Stack(cfg, dec_pattern, cfg.n_layers, causal=True)
+        else:
+            self.encoder = None
+            self.decoder = Stack(cfg, cfg.block_pattern, cfg.n_layers,
+                                 causal=True)
+
+    # ------------------------------------------------------------- params
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        ks = jax.random.split(key, 5)
+        p: Params = {
+            "embed": init_embedding(cfg, ks[0]),
+            "decoder": self.decoder.init(ks[1]),
+            "final_norm": init_norm(cfg),
+            "head": init_lm_head(cfg, ks[2]),
+        }
+        if self.encoder is not None:
+            p["encoder"] = self.encoder.init(ks[3])
+            p["enc_norm"] = init_norm(cfg)
+        return p
+
+    def param_count(self, params) -> int:
+        return sum(x.size for x in jax.tree.leaves(params))
+
+    # ------------------------------------------------------------- helpers
+
+    def _embed_inputs(self, params, batch) -> jax.Array:
+        cfg = self.cfg
+        tok = embed_tokens(params["embed"], batch["tokens"], cfg)
+        if cfg.frontend and "frontend" in batch:
+            front = batch["frontend"].astype(tok.dtype)
+            tok = jnp.concatenate([front, tok], axis=1)
+        return tok
+
+    def _encode(self, params, batch):
+        cfg = self.cfg
+        src = batch["src_embeds"].astype(jnp.dtype(cfg.dtype))
+        pos = jnp.arange(src.shape[1], dtype=jnp.int32)
+        enc, _, _ = self.encoder.apply(params["encoder"], src, positions=pos,
+                                       mode="train")
+        return apply_norm(params["enc_norm"], enc, cfg)
+
+    # ------------------------------------------------------------- forward
+
+    def forward(self, params, batch, mode: str = "train",
+                cache_len: int | None = None
+                ) -> tuple[jax.Array, jax.Array, Any]:
+        """Full-sequence pass.  Returns (logits, aux_loss, caches|None)."""
+        cfg = self.cfg
+        enc_out = self._encode(params, batch) if self.encoder is not None \
+            else None
+        x = constrain(self._embed_inputs(params, batch), "b", None, None)
+        S = x.shape[1]
+        pos = jnp.arange(S, dtype=jnp.int32)
+        x, caches, aux = self.decoder.apply(
+            params["decoder"], x, positions=pos, enc_out=enc_out, mode=mode,
+            cache_len=cache_len)
+        x = apply_norm(params["final_norm"], x, cfg)
+        if cfg.frontend:
+            x = x[:, S - batch["tokens"].shape[1]:]
+        if mode == "prefill":
+            # serving only needs the next-token distribution: computing the
+            # (B, S, V) logits for a 32k prompt is pure waste (multi-GB)
+            x = x[:, -1:]
+        logits = lm_logits(params["head"], params["embed"], x, cfg)
+        return logits, aux, caches if mode == "prefill" else None
+
+    # ------------------------------------------------------------- serving
+
+    def prefill(self, params, batch, max_len: int | None = None
+                ) -> tuple[jax.Array, dict]:
+        logits, _, caches = self.forward(params, batch, mode="prefill",
+                                         cache_len=max_len)
+        return logits[:, -1], {"caches": caches,
+                               "pos": jnp.asarray(
+                                   self._full_len(batch), jnp.int32)}
+
+    def _full_len(self, batch) -> int:
+        S = batch["tokens"].shape[1]
+        if self.cfg.frontend and "frontend" in batch:
+            S += batch["frontend"].shape[1]
+        return S
+
+    def decode_step(self, params, state: dict, tokens: jax.Array
+                    ) -> tuple[jax.Array, dict]:
+        """One token for every sequence.  tokens: (B, 1) int32."""
+        cfg = self.cfg
+        x = embed_tokens(params["embed"], tokens, cfg)
+        pos = state["pos"][None].astype(jnp.int32)
+        x, caches, _ = self.decoder.apply(
+            params["decoder"], x, positions=pos, caches=state["caches"],
+            mode="decode")
+        x = apply_norm(params["final_norm"], x, cfg)
+        logits = lm_logits(params["head"], params["embed"], x, cfg)
+        return logits[:, 0], {"caches": caches, "pos": state["pos"] + 1}
+
+    def init_decode_state(self, batch_size: int, seq_len: int,
+                          enc_len: int = 0) -> dict:
+        dtype = jnp.dtype(self.cfg.dtype)
+        caches = self.decoder.init_cache(batch_size, seq_len, enc_len, dtype)
+        return {"caches": caches, "pos": jnp.zeros((), jnp.int32)}
+
+
+def build_model(cfg) -> Model:
+    return Model(cfg)
+
+
+def loss_fn(model: Model, params, batch, aux_weight: float = 0.01):
+    """Next-token cross-entropy (+ MoE load-balance aux)."""
+    logits, aux, _ = model.forward(params, batch, mode="train")
+    labels = batch["labels"]
+    # CE without materializing a f32 (B, S, V) tensor: keep probabilities in
+    # the logits dtype (max-subtracted, safe) and accumulate reductions in
+    # f32 — with vocab-parallel logits the reductions become the only
+    # cross-model-axis traffic.
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = logits - m
+    sumexp = jnp.sum(jnp.exp(shifted).astype(jnp.float32), axis=-1)
+    lse = jnp.log(sumexp) + m[..., 0].astype(jnp.float32)
+    tgt = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ll = tgt.astype(jnp.float32) - lse
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss + aux_weight * aux, (loss, aux)

@@ -1,0 +1,146 @@
+"""Mixture-of-Experts layer: top-k router + capacity-based dispatch.
+
+Dispatch is scatter/gather based (O(T*D) data movement, no one-hot einsum
+blow-up): each (token, choice) is assigned a slot ``expert * C + rank`` where
+``rank`` is the token's arrival order within the expert (cumsum over the
+token axis) and ``C`` the per-expert capacity.  Overflowing tokens are dropped
+for that expert (standard GShard/Switch semantics, capacity_factor controls
+the drop rate); their combine weight is zero so the residual path carries them.
+
+Expert FFN compute is a single batched einsum over (E, C, D) — per-expert
+FLOPs proportional to *active* tokens only, which keeps the roofline's
+MODEL_FLOPS/HLO_FLOPs ratio honest (DESIGN.md §5).
+
+Expert-parallel (all_to_all) execution is provided separately in
+``repro.distributed.expert_parallel`` via shard_map; this module's dense
+einsum form is the pjit/GSPMD path (experts sharded over the model axis).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params
+from .mlp import _ACTS
+from .pspec import constrain
+
+
+def init_moe(cfg, key) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.d_ff
+    s = D ** -0.5
+    p = {
+        "router": (jax.random.normal(ks[0], (D, E), jnp.float32) * s
+                   ).astype(jnp.float32),
+        "up": (jax.random.normal(ks[1], (E, D, F), jnp.float32) * s
+               ).astype(dt),
+        "down": (jax.random.normal(ks[2], (E, F, D), jnp.float32) * F ** -0.5
+                 ).astype(dt),
+    }
+    if cfg.glu:
+        p["gate"] = (jax.random.normal(ks[3], (E, D, F), jnp.float32) * s
+                     ).astype(dt)
+    return p
+
+
+def moe_capacity(cfg, n_tokens: int) -> int:
+    per = n_tokens * cfg.top_k / cfg.n_experts
+    cap = int(per * cfg.capacity_factor) + 1
+    cap = max(cap, cfg.top_k)
+    return -(-cap // 128) * 128   # 128-aligned so capacity slots shard evenly
+
+
+def apply_moe(p: Params, x: jax.Array, cfg) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (y, aux_loss).  aux = load-balancing loss (Switch).
+
+    Decode steps (S == 1) use capacity = T*K: dropless by construction (the
+    worst case — every token picking the same expert — still fits).  At decode
+    the expert GEMMs are weight-memory-bound, so the nominal compute inflation
+    of generous capacity is invisible on the roofline (DESIGN.md §6)."""
+    from .pspec import fsdp_size
+    B, S, D = x.shape
+    T = B * S
+    E, K = cfg.n_experts, cfg.top_k
+
+    # Dispatch is computed per DATA SHARD (local capacity, as production MoE
+    # systems do): a token-indexed scatter into a global buffer cannot be
+    # partitioned by GSPMD (it replicates a multi-GB buffer and all-reduces
+    # it — measured 60 GiB/device on mixtral prefill).  With a leading shard
+    # axis everything — cumsum ranks, scatter, expert einsum, gather — stays
+    # batched over that axis and shards cleanly.  Without a mesh G == 1 and
+    # semantics are identical to global dispatch.
+    G = fsdp_size() if B % max(fsdp_size(), 1) == 0 else 1
+    Tl = T // G
+    flat = x.reshape(G, Tl, D)
+
+    # Long sequences stream through the experts in token BLOCKS (flash-style):
+    # dispatch buffers scale with the block, not the sequence — a 1M-token
+    # prefill would otherwise need ~4 GiB/device of (E*C, D) buffers.
+    tb = min(Tl, 4096)
+    nb = Tl // tb
+    if nb > 1 and Tl % tb == 0 and S > 1:
+        blocks = jnp.moveaxis(flat.reshape(G, nb, tb, D), 1, 0)
+
+        def one(block):
+            return _moe_block(p, block, cfg, S)
+
+        ys, auxs = jax.lax.map(one, blocks)
+        y = jnp.moveaxis(ys, 0, 1).reshape(B, S, D)
+        return y, jnp.mean(auxs)
+    y, aux = _moe_block(p, flat, cfg, S)
+    return y.reshape(B, S, D), aux
+
+
+def _moe_block(p: Params, flat: jax.Array, cfg, S: int
+               ) -> tuple[jax.Array, jax.Array]:
+    """One token block through the experts.  flat: (G, Tl, D) — G data
+    shards, local capacity per shard."""
+    G, Tl, D = flat.shape
+    E, K = cfg.n_experts, cfg.top_k
+    act = _ACTS[cfg.act]
+    C = Tl * K if S == 1 else moe_capacity(cfg, Tl)
+    logits = jnp.einsum("gtd,de->gte", flat.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                   # (G, Tl, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)           # (G, Tl, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # ----- load-balancing auxiliary loss (Switch eq. 4), global means
+    me = jnp.mean(probs, axis=(0, 1))                         # (E,)
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.float32)  # (G, Tl, K, E)
+    ce = jnp.mean(jnp.sum(onehot, axis=2), axis=(0, 1))
+    aux = E * jnp.sum(me * ce) / K
+
+    # ----- per-shard capacity ranks (arrival order within expert)
+    flat_choice = onehot.reshape(G, Tl * K, E)
+    ranks = jnp.cumsum(flat_choice, axis=1) - flat_choice
+    rank = jnp.sum(ranks * flat_choice, axis=-1).reshape(G, Tl, K)
+    keep = rank < C
+    slot = expert_idx * C + jnp.minimum(rank, C - 1).astype(jnp.int32)
+
+    # ----- dispatch: per-shard scatter into (G, E*C, D)
+    contrib = jnp.where(keep[..., None], 1.0, 0.0).astype(flat.dtype)
+    src = (flat[:, :, None, :] * contrib).reshape(G, Tl * K, D)
+    buf = jnp.zeros((G, E * C, D), flat.dtype)
+    buf = jax.vmap(lambda b, s, u: b.at[s].add(u))(
+        buf, slot.reshape(G, Tl * K), src)
+    xb = constrain(buf.reshape(G, E, C, D), "b", None, None, None)
+
+    # ----- expert FFN (batched over shards and experts; d_ff over "model")
+    up = constrain(jnp.einsum("gecd,edf->gecf", xb, p["up"], preferred_element_type=xb.dtype),
+                   "b", None, None, "tp")
+    if cfg.glu:
+        h = act(constrain(jnp.einsum("gecd,edf->gecf", xb, p["gate"], preferred_element_type=xb.dtype),
+                          "b", None, None, "tp")) * up
+    else:
+        h = act(up)
+    yb = constrain(jnp.einsum("gecf,efd->gecd", h, p["down"], preferred_element_type=h.dtype),
+                   "b", None, None, None).reshape(G, E * C, D)
+
+    # ----- combine: per-shard gather, weight by gate
+    gathered = jax.vmap(lambda y_, s: y_[s])(
+        yb, slot.reshape(G, Tl * K)).reshape(G, Tl, K, D)
+    w = (gate_vals * keep).astype(gathered.dtype)
+    y = jnp.einsum("gtkd,gtk->gtd", gathered, w)
+    return y, aux.astype(jnp.float32)

@@ -1,0 +1,105 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin) [arXiv:2402.19427].
+
+    r_t = sigmoid(W_a u_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x u_t + b_x)          (input gate)
+    a_t = exp(-c * softplus(Λ) * r_t)     (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t²) · (i_t ⊙ u_t)
+
+The full block is Griffin's recurrent temporal-mixing block: linear in →
+causal conv1d (k=4) → RG-LRU → (⊙ GeLU gate branch) → linear out.
+
+The linear recurrence is evaluated with ``jax.lax.associative_scan``
+(log-depth, O(S) work) — sequence-parallel and the reason the hybrid arch
+qualifies for the long_500k cell.  Decode is the O(1) per-token update.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params
+from .ssm import _causal_conv
+
+_C = 8.0
+
+
+class RGLRUState(NamedTuple):
+    conv: jax.Array    # (B, k-1, d_rnn)
+    h: jax.Array       # (B, d_rnn)
+
+
+def _width(cfg) -> int:
+    return cfg.rnn_width or cfg.d_model
+
+
+def init_rglru(cfg, key) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    d, w = cfg.d_model, _width(cfg)
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    return {
+        "w_in": (jax.random.normal(ks[0], (d, w), jnp.float32) * s).astype(dt),
+        "w_gate": (jax.random.normal(ks[1], (d, w), jnp.float32) * s).astype(dt),
+        "conv_w": (jax.random.normal(ks[2], (4, w), jnp.float32) * 0.2
+                   ).astype(dt),
+        "conv_b": jnp.zeros((w,), dt),
+        "wa": (jax.random.normal(ks[3], (w, w), jnp.float32) * w ** -0.5
+               ).astype(dt),
+        "wx": (jax.random.normal(ks[4], (w, w), jnp.float32) * w ** -0.5
+               ).astype(dt),
+        "ba": jnp.zeros((w,), jnp.float32),
+        "bx": jnp.zeros((w,), jnp.float32),
+        # Λ init so that a ~ U(0.9, 0.999)^c-ish (Griffin appendix)
+        "lam": jnp.full((w,), 0.5, jnp.float32),
+        "w_out": (jax.random.normal(ks[5], (w, d), jnp.float32) * w ** -0.5
+                  ).astype(dt),
+    }
+
+
+def _gates(p: Params, u: jax.Array):
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", uf, p["wa"].astype(jnp.float32))
+                       + p["ba"])
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", uf, p["wx"].astype(jnp.float32))
+                       + p["bx"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r          # (B,S,W)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * uf)
+    return a, b
+
+
+def apply_rglru(p: Params, x: jax.Array, cfg,
+                state: RGLRUState | None = None,
+                return_state: bool = False
+                ) -> tuple[jax.Array, RGLRUState | None]:
+    """x: (B, S, d_model) -> (B, S, d_model)."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gate"], preferred_element_type=x.dtype))
+    u = jnp.einsum("bsd,dw->bsw", x, p["w_in"], preferred_element_type=x.dtype)
+    u, new_tail = _causal_conv(u, p["conv_w"], p["conv_b"],
+                               state.conv if state is not None else None)
+    a, b = _gates(p, u)
+
+    if x.shape[1] == 1 and state is not None:
+        h = a[:, 0] * state.h + b[:, 0]
+        hs = h[:, None]
+    else:
+        h0 = state.h if state is not None else None
+        if h0 is not None:
+            # fold initial state into the first step: h_1 = a_1 h_0 + b_1
+            b = b.at[:, 0].add(a[:, 0] * h0)
+        # associative linear recurrence: (a, b) pairs compose as
+        # (a2, b2) ∘ (a1, b1) = (a1*a2, a2*b1 + b2)
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, ar * bl + br
+        _, hs = jax.lax.associative_scan(combine, (a, b), axis=1)
+        h = hs[:, -1]
+
+    y = hs * gate.astype(hs.dtype)
+    out = jnp.einsum("bsw,wd->bsd", y.astype(x.dtype), p["w_out"], preferred_element_type=x.dtype)
+    new_state = RGLRUState(conv=new_tail, h=h) if return_state else None
+    return out, new_state

@@ -1,0 +1,29 @@
+"""Lightweight side-channel for per-forward statistics (early-termination
+rates etc.).  Pure-functional JAX cannot thread auxiliary outputs through
+every layer without invasive plumbing; instead layers ``record`` named scalars
+into a context that callers open around a forward pass.  Inside ``jit`` the
+recorded values are traced arrays; the collector is only used by stats-mode
+entry points (serving engine, benchmarks), never by ``train_step``.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any
+
+_ACTIVE: list[dict[str, list[Any]]] = []
+
+
+@contextlib.contextmanager
+def collect():
+    sink: dict[str, list[Any]] = {}
+    _ACTIVE.append(sink)
+    try:
+        yield sink
+    finally:
+        _ACTIVE.pop()
+
+
+def record(name: str, value) -> None:
+    if _ACTIVE:
+        _ACTIVE[-1].setdefault(name, []).append(value)

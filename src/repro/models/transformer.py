@@ -1,0 +1,253 @@
+"""Block assembly: pattern-driven layer stacks with scan-over-layers + remat.
+
+A model is a sequence of blocks drawn from the config's ``block_pattern``
+(tiled to ``n_layers``): "attn" (self-attention + MLP), "attn_cross" (adds
+cross-attention, enc-dec decoder), "moe" (attention + MoE-FFN), "ssm"
+(mamba2 mixer), "rglru" (RG-LRU mixing + MLP).
+
+Layers are stacked per pattern position and iterated with ``jax.lax.scan``
+(+ ``jax.checkpoint`` rematerialization), so the lowered HLO is O(pattern)
+regardless of depth — a 95-layer model compiles as one scanned block.  The
+pattern remainder (e.g. recurrentgemma's 26 = 3*8 + 2) runs unscanned.
+
+Caches are pytrees mirroring the parameter stacking, so decode steps scan
+with the same structure.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (KVCache, attention_forward, init_attention,
+                        init_kv_cache)
+from .layers import Params, apply_norm, init_norm
+from .mlp import apply_mlp, init_mlp
+from .moe import apply_moe, init_moe
+from .rglru import RGLRUState, apply_rglru, init_rglru
+from .ssm import SSMState, apply_ssm, init_ssm
+
+
+# ------------------------------------------------------------- single layer
+
+def init_layer(cfg, key, kind: str) -> Params:
+    ks = jax.random.split(key, 4)
+    if kind == "ssm":
+        return {"norm": init_norm(cfg), "mixer": init_ssm(cfg, ks[0])}
+    if kind == "rglru":
+        return {"norm1": init_norm(cfg), "mixer": init_rglru(cfg, ks[0]),
+                "norm2": init_norm(cfg), "mlp": init_mlp(cfg, ks[1])}
+    if kind == "moe":
+        return {"norm1": init_norm(cfg), "attn": init_attention(cfg, ks[0]),
+                "norm2": init_norm(cfg), "moe": init_moe(cfg, ks[1])}
+    if kind == "attn_cross":
+        return {"norm1": init_norm(cfg), "attn": init_attention(cfg, ks[0]),
+                "normx": init_norm(cfg),
+                "cross": init_attention(cfg, ks[1], cross=True),
+                "norm2": init_norm(cfg), "mlp": init_mlp(cfg, ks[2])}
+    # "attn"
+    return {"norm1": init_norm(cfg), "attn": init_attention(cfg, ks[0]),
+            "norm2": init_norm(cfg), "mlp": init_mlp(cfg, ks[1])}
+
+
+def init_layer_cache(cfg, kind: str, batch: int, seq_len: int,
+                     enc_len: int, dtype) -> Any:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    if kind == "ssm":
+        from .ssm import _dims
+        _, H, P, N, G = _dims(cfg)
+        conv_ch = d_inner + 2 * G * N
+        return SSMState(
+            conv=jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+            ssm=jnp.zeros((batch, H, P, N), jnp.float32))
+    if kind == "rglru":
+        w = cfg.rnn_width or cfg.d_model
+        return RGLRUState(conv=jnp.zeros((batch, 3, w), dtype),
+                          h=jnp.zeros((batch, w), jnp.float32))
+    self_cache = init_kv_cache(cfg, batch, seq_len, dtype)
+    if kind == "attn_cross":
+        hd = cfg.head_dim_
+        cross = KVCache(k=jnp.zeros((batch, enc_len, cfg.n_kv_heads, hd), dtype),
+                        v=jnp.zeros((batch, enc_len, cfg.n_kv_heads, hd), dtype),
+                        positions=jnp.arange(enc_len, dtype=jnp.int32))
+        return (self_cache, cross)
+    return self_cache
+
+
+def apply_layer(p: Params, x: jax.Array, cfg, kind: str, *,
+                positions: jax.Array, cache: Any = None,
+                enc_out: jax.Array | None = None, mode: str = "train",
+                causal: bool = True, cache_len: int | None = None
+                ) -> tuple[jax.Array, Any, jax.Array]:
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    return_cache = mode == "prefill"
+    use_cache = mode == "decode"
+
+    if kind == "ssm":
+        h, new_state = apply_ssm(p["mixer"], apply_norm(p["norm"], x, cfg),
+                                 cfg, state=cache if use_cache else None,
+                                 return_state=return_cache or use_cache)
+        return x + h, new_state, aux
+
+    if kind == "rglru":
+        h, new_state = apply_rglru(p["mixer"], apply_norm(p["norm1"], x, cfg),
+                                   cfg, state=cache if use_cache else None,
+                                   return_state=return_cache or use_cache)
+        x = x + h
+        x = x + apply_mlp(p["mlp"], apply_norm(p["norm2"], x, cfg), cfg)
+        return x, new_state, aux
+
+    if kind == "attn_cross":
+        self_cache, cross_cache = cache if cache is not None else (None, None)
+        h, new_self = attention_forward(
+            p["attn"], apply_norm(p["norm1"], x, cfg), cfg,
+            positions=positions, cache=self_cache if use_cache else None,
+            causal=causal, return_cache=return_cache, cache_len=cache_len)
+        x = x + h
+        if use_cache:
+            # decode: static cross cache built at prefill
+            h, cross_cache = attention_forward(
+                p["cross"], apply_norm(p["normx"], x, cfg), cfg,
+                positions=positions, cache=cross_cache, is_cross=True,
+                causal=False)
+        else:
+            h, cross_cache = attention_forward(
+                p["cross"], apply_norm(p["normx"], x, cfg), cfg,
+                positions=positions, kv_x=enc_out, causal=False,
+                return_cache=return_cache)
+        x = x + h
+        x = x + apply_mlp(p["mlp"], apply_norm(p["norm2"], x, cfg), cfg)
+        return x, (new_self, cross_cache), aux
+
+    # attn / moe
+    h, new_cache = attention_forward(
+        p["attn"], apply_norm(p["norm1"], x, cfg), cfg, positions=positions,
+        cache=cache if use_cache else None, causal=causal,
+        return_cache=return_cache, cache_len=cache_len)
+    x = x + h
+    if kind == "moe":
+        h, aux = apply_moe(p["moe"], apply_norm(p["norm2"], x, cfg), cfg)
+    else:
+        h = apply_mlp(p["mlp"], apply_norm(p["norm2"], x, cfg), cfg)
+    return x + h, new_cache, aux
+
+
+# ------------------------------------------------------------- layer stacks
+
+class Stack:
+    """Pattern-tiled stack of layers with scan-over-groups execution."""
+
+    def __init__(self, cfg, pattern: tuple[str, ...], n_layers: int,
+                 causal: bool = True):
+        self.cfg = cfg
+        self.n_layers = n_layers
+        self.causal = causal
+        # one scan step covers `scan_unroll` pattern periods (fewer saved
+        # carries under full remat; recompute cost is unchanged)
+        unroll = max(1, cfg.scan_unroll)
+        self.pattern = tuple(pattern) * unroll
+        self.period = len(self.pattern)
+        if cfg.scan_layers and n_layers >= 2 * self.period:
+            self.n_groups = n_layers // self.period
+            self.n_rest = n_layers % self.period
+        else:
+            self.n_groups = 0
+            self.n_rest = n_layers
+
+    @property
+    def rest_kinds(self) -> tuple[str, ...]:
+        full = (self.pattern * (-(-self.n_layers // self.period)))
+        return full[self.n_groups * self.period: self.n_layers]
+
+    def init(self, key) -> Params:
+        p: Params = {"groups": [], "rest": []}
+        keys = jax.random.split(key, self.n_layers)
+        ki = 0
+        for pos in range(self.period if self.n_groups else 0):
+            kind = self.pattern[pos]
+            layers = []
+            for g in range(self.n_groups):
+                layers.append(init_layer(self.cfg, keys[ki], kind))
+                ki += 1
+            p["groups"].append(jax.tree.map(
+                lambda *xs: jnp.stack(xs), *layers))
+        for kind in self.rest_kinds:
+            p["rest"].append(init_layer(self.cfg, keys[ki], kind))
+            ki += 1
+        return p
+
+    def init_cache(self, batch: int, seq_len: int, enc_len: int, dtype):
+        c = {"groups": [], "rest": []}
+        for pos in range(self.period if self.n_groups else 0):
+            kind = self.pattern[pos]
+            per = [init_layer_cache(self.cfg, kind, batch, seq_len, enc_len,
+                                    dtype) for _ in range(self.n_groups)]
+            c["groups"].append(jax.tree.map(lambda *xs: jnp.stack(xs), *per))
+        for kind in self.rest_kinds:
+            c["rest"].append(init_layer_cache(self.cfg, kind, batch, seq_len,
+                                              enc_len, dtype))
+        return c
+
+    def apply(self, p: Params, x: jax.Array, *, positions, caches=None,
+              enc_out=None, mode: str = "train", cache_len: int | None = None):
+        cfg = self.cfg
+        aux_total = jnp.zeros((), jnp.float32)
+        new_caches = {"groups": [], "rest": []}
+
+        if self.n_groups:
+            def group_body(x, layer_inputs):
+                params_g, caches_g = layer_inputs
+                aux_g = jnp.zeros((), jnp.float32)
+                new_cs = []
+                for pos, kind in enumerate(self.pattern):
+                    c = None if caches_g is None else caches_g[pos]
+                    x, nc, aux = apply_layer(
+                        params_g[pos], x, cfg, kind, positions=positions,
+                        cache=c, enc_out=enc_out, mode=mode,
+                        causal=self.causal, cache_len=cache_len)
+                    new_cs.append(nc)
+                    aux_g = aux_g + aux
+                return x, (tuple(new_cs), aux_g)
+
+            body = group_body
+            if cfg.remat and mode == "train":
+                body = jax.checkpoint(
+                    group_body,
+                    policy=jax.checkpoint_policies.nothing_saveable)
+
+            caches_g = None
+            if caches is not None:
+                caches_g = tuple(caches["groups"])
+            xs = (tuple(p["groups"]), caches_g)
+            if caches_g is None:
+                xs = (tuple(p["groups"]), None)
+
+            def scan_body(x, inp):
+                return body(x, inp)
+
+            if caches_g is None:
+                # scan only over params
+                def scan_body_np(x, params_g):
+                    return body(x, (params_g, None))
+                x, (ncs, auxs) = jax.lax.scan(scan_body_np, x,
+                                              tuple(p["groups"]))
+                new_caches["groups"] = list(ncs) if mode == "prefill" else []
+            else:
+                x, (ncs, auxs) = jax.lax.scan(scan_body, x, xs)
+                new_caches["groups"] = list(ncs)
+            aux_total = aux_total + jnp.sum(auxs)
+
+        for i, kind in enumerate(self.rest_kinds):
+            c = None if caches is None else caches["rest"][i]
+            x, nc, aux = apply_layer(p["rest"][i], x, cfg, kind,
+                                     positions=positions, cache=c,
+                                     enc_out=enc_out, mode=mode,
+                                     causal=self.causal, cache_len=cache_len)
+            new_caches["rest"].append(nc)
+            aux_total = aux_total + aux
+
+        return x, new_caches, aux_total

@@ -1,0 +1,151 @@
+"""Sharding rules: FSDP x TP over the production mesh (DESIGN.md §5).
+
+Two logical parallel dimensions:
+
+* ``tp``   — the "model" mesh axis: Megatron-style tensor parallelism
+  (column-parallel up-projections / attention QKV, row-parallel
+  down-projections / attention output, vocab-sharded embedding + logits).
+* ``fsdp`` — the "data" axis (and "pod" when present): ZeRO-3 storage
+  sharding of the non-TP weight dimension; GSPMD inserts the all-gather at
+  use and the reduce-scatter on gradients.
+
+Rules are path-pattern based over the parameter pytree; stacked
+scan-over-layers params (a leading ``n_groups`` axis, path contains
+"groups") get their spec shifted right by one None.
+"""
+
+from __future__ import annotations
+
+import re
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def mesh_axes(mesh: Mesh) -> tuple:
+    """(fsdp_axes, tp_axis) for the given mesh."""
+    names = mesh.axis_names
+    fsdp = tuple(a for a in ("pod", "data") if a in names)
+    tp = "model" if "model" in names else None
+    return fsdp, tp
+
+
+# (regex over the flattened path, spec builder given (fsdp, tp))
+_RULES: list[tuple[str, object]] = [
+    (r"embed/embedding$",        lambda f, t: P(t, f)),
+    (r"head/w$",                 lambda f, t: P(f, t)),
+    (r"(wq|wk|wv)/w$",           lambda f, t: P(f, t)),
+    (r"(wq|wk|wv)/b$",           lambda f, t: P(t)),
+    (r"wo/w$",                   lambda f, t: P(t, f)),
+    (r"wo/b$",                   lambda f, t: P(None)),
+    (r"mlp/(up|gate)/w$",        lambda f, t: P(f, t)),
+    (r"mlp/down/w$",             lambda f, t: P(t, f)),
+    (r"moe/router$",             lambda f, t: P(f, None)),
+    (r"moe/(up|gate)$",          lambda f, t: P(None, f, t)),
+    (r"moe/down$",               lambda f, t: P(None, t, f)),
+    (r"mixer/w_in$",             lambda f, t: P(f, t)),
+    (r"mixer/w_gate$",           lambda f, t: P(f, t)),
+    (r"mixer/(wa|wx)$",          lambda f, t: P(f, t)),
+    (r"mixer/conv_w$",           lambda f, t: P(None, t)),
+    (r"mixer/(conv_b|norm_scale|ba|bx|lam)$", lambda f, t: P(t)),
+    (r"mixer/w_out$",            lambda f, t: P(t, f)),
+    (r"mixer/(A_log|D_skip|dt_bias)$", lambda f, t: P(None)),
+    (r"(norm\d?|normx|final_norm|enc_norm)/(scale|bias)$",
+     lambda f, t: P(None)),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_pspec(path, leaf) -> P:
+    s = _path_str(path)
+    stacked = "groups" in s.split("/")
+    for pat, rule in _RULES:
+        if re.search(pat, s):
+            def build(f, t):
+                spec = rule(f, t)
+                if stacked:
+                    spec = P(None, *spec)
+                # trim spec to array rank
+                spec = P(*tuple(spec)[: leaf.ndim]) if len(tuple(spec)) > leaf.ndim else spec
+                return spec
+            return build
+    return lambda f, t: P()
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def sanitize_spec(mesh: Mesh, spec: P, shape) -> P:
+    """jit in_shardings require exact divisibility; drop (→ replicate) any
+    axis that does not divide its dimension (e.g. granite's vocab 49155)."""
+    out = []
+    for i, axis in enumerate(tuple(spec)):
+        if axis is None or i >= len(shape):
+            out.append(None)
+            continue
+        out.append(axis if shape[i] % _axis_size(mesh, axis) == 0 else None)
+    return P(*out)
+
+
+def make_param_shardings(mesh: Mesh, params):
+    """NamedShardings for a parameter pytree (works on ShapeDtypeStructs)."""
+    fsdp, tp = mesh_axes(mesh)
+    f = fsdp if fsdp else None
+
+    def one(path, leaf):
+        builder = param_pspec(path, leaf)
+        spec = sanitize_spec(mesh, builder(f, tp), leaf.shape)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def batch_pspec(mesh: Mesh, global_batch: int) -> P:
+    """Shard the batch dim over (pod, data) when divisible, else replicate."""
+    fsdp, _ = mesh_axes(mesh)
+    n = 1
+    for a in fsdp:
+        n *= mesh.shape[a]
+    if fsdp and global_batch % n == 0:
+        return P(fsdp)
+    return P()
+
+
+def make_batch_shardings(mesh: Mesh, batch, global_batch: int,
+                         batch_axis: int = 0):
+    """Shard the batch dimension of every array in the batch pytree.
+    ``batch_axis=1`` for grad-accumulation layout (M, mb, ...)."""
+    spec = batch_pspec(mesh, global_batch)
+    axes = tuple(spec)[:1]
+
+    def one(leaf):
+        nd = getattr(leaf, "ndim", 0)
+        if nd <= batch_axis or not axes:
+            return NamedSharding(mesh, P())
+        s = P(*((None,) * batch_axis), axes[0])
+        return NamedSharding(mesh, s)
+
+    return jax.tree_util.tree_map(one, batch)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

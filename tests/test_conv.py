@@ -1,0 +1,65 @@
+"""Fused conv+ReLU+maxpool (paper Figs. 4-7): DSLOT == SIP == float conv."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import dslot_conv2d_stats, extract_windows, sip_conv2d
+
+
+def test_extract_windows():
+    x = jnp.arange(2 * 8 * 8, dtype=jnp.int32).reshape(2, 8, 8)
+    w = extract_windows(x, 3)
+    assert w.shape == (2, 6, 6, 9)
+    np.testing.assert_array_equal(
+        np.asarray(w[0, 0, 0]), np.asarray(x[0, :3, :3]).reshape(-1))
+    np.testing.assert_array_equal(
+        np.asarray(w[1, 2, 3]), np.asarray(x[1, 2:5, 3:6]).reshape(-1))
+
+
+def test_dslot_equals_sip_bit_exact():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.uniform(0, 1, size=(2, 14, 14)), jnp.float32)
+    w = jnp.asarray(rng.normal(0, 0.3, size=(4, 5, 5)), jnp.float32)
+    res = dslot_conv2d_stats(x, w)
+    ref = sip_conv2d(x, w)
+    np.testing.assert_allclose(np.asarray(res.y_conv), np.asarray(ref),
+                               atol=1e-5)
+
+
+def test_dslot_matches_float_conv_to_quantization():
+    rng = np.random.default_rng(1)
+    x = rng.uniform(0, 1, size=(2, 12, 12)).astype(np.float32)
+    w = rng.normal(0, 0.25, size=(3, 5, 5)).astype(np.float32)
+    res = dslot_conv2d_stats(jnp.asarray(x), jnp.asarray(w))
+    # float oracle
+    from numpy.lib.stride_tricks import sliding_window_view
+    win = sliding_window_view(x, (5, 5), axis=(1, 2))       # (B,8,8,5,5)
+    ref = np.einsum("bijkl,mkl->bijm", win, w)
+    err = np.abs(np.asarray(res.y_conv) - ref).max()
+    assert err < 0.05 * max(np.abs(ref).max(), 1.0), err
+
+
+def test_fused_relu_maxpool():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.uniform(0, 1, size=(1, 12, 12)), jnp.float32)
+    w = jnp.asarray(rng.normal(0, 0.3, size=(2, 5, 5)), jnp.float32)
+    res = dslot_conv2d_stats(x, w, pool=2)
+    relu = np.maximum(np.asarray(res.y_conv), 0.0)
+    B, H, W, M = relu.shape
+    pooled = relu[:, : H // 2 * 2, : W // 2 * 2].reshape(
+        B, H // 2, 2, W // 2, 2, M).max(axis=(2, 4))
+    np.testing.assert_allclose(np.asarray(res.y_pooled), pooled, atol=1e-6)
+
+
+def test_termination_stats_are_consistent():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.uniform(0, 1, size=(1, 12, 12)), jnp.float32)
+    w = jnp.asarray(rng.normal(-0.15, 0.2, size=(2, 5, 5)), jnp.float32)
+    res = dslot_conv2d_stats(x, w)
+    neg = np.asarray(res.y_conv) < 0
+    fired = np.asarray(res.report.is_negative)
+    assert (fired <= neg).all()                   # soundness
+    assert fired.mean() > 0.2                     # actually fires here
+    saved = np.asarray(res.report.cycles_saved)
+    assert (saved[fired] > 0).all()
+    assert (saved[~fired] == 0).all()

@@ -1,0 +1,38 @@
+"""FPGA analytic model: eqs. 8-11 calibration against Table I."""
+
+import pytest
+
+from repro.core import TABLE1_PUBLISHED, table1_model
+from repro.core.cycle_model import t_dslot, t_ola, t_olm, t_sip
+
+
+def test_critical_paths_match_published():
+    assert abs(t_sip(5) - 30.075) < 1e-6
+    assert abs(t_dslot(5) - 15.436) < 1e-6
+
+
+def test_dslot_cpd_is_half_of_sip():
+    """Paper: 'approximately 48.6% shorter' critical path."""
+    assert abs(1 - t_dslot(5) / t_sip(5) - 0.4867) < 0.01
+
+
+def test_gops_per_watt_within_2pct():
+    m = table1_model()
+    for name, eng in m.items():
+        pub = TABLE1_PUBLISHED[name]["gops_per_watt"]
+        assert abs(eng.gops_per_watt - pub) / pub < 0.02, (name,
+                                                           eng.gops_per_watt)
+
+
+def test_dslot_perf_density_gain():
+    """Paper abstract: ~49.7% higher OPS/W than SIP."""
+    m = table1_model()
+    gain = m["dslot"].gops_per_watt / m["stripes"].gops_per_watt - 1
+    assert 0.40 <= gain <= 0.60, gain
+
+
+def test_early_termination_improves_energy():
+    m = table1_model()["dslot"]
+    better = m.with_early_termination(0.06)   # ~12.5% negatives x ~50% saved
+    assert better.gops_per_watt > m.gops_per_watt
+    assert better.energy_per_window_nj() < m.energy_per_window_nj()

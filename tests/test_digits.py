@@ -1,0 +1,67 @@
+"""SD radix-2 digit codec: exactness + properties (paper §II-A)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (fixed_to_sd, first_negative_prefix, sd_from_value,
+                        sd_prefix_values, sd_split_posneg, sd_to_value)
+
+
+def test_fixed_to_sd_roundtrip_exact():
+    rng = np.random.default_rng(0)
+    q = rng.integers(-255, 256, size=(512,))
+    d = fixed_to_sd(jnp.asarray(q), 9)
+    assert set(np.unique(np.asarray(d))) <= {-1, 0, 1}
+    v = np.asarray(sd_to_value(d)) * 2.0 ** 9
+    np.testing.assert_array_equal(v, q)
+
+
+def test_sd_from_value_exact_on_grid():
+    rng = np.random.default_rng(1)
+    q = rng.integers(-255, 256, size=(512,))
+    d = sd_from_value(jnp.asarray(q / 256.0, jnp.float32), 8)
+    np.testing.assert_allclose(np.asarray(sd_to_value(d)), q / 256.0,
+                               rtol=0, atol=0)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(min_value=-4095, max_value=4095))
+def test_sd_from_value_property(q):
+    d = sd_from_value(jnp.float32(q / 4096.0), 12)
+    assert abs(float(sd_to_value(d)) - q / 4096.0) == 0.0
+    assert set(np.unique(np.asarray(d))) <= {-1, 0, 1}
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(min_value=-1, max_value=1), min_size=1,
+                max_size=20))
+def test_posneg_bit_pair_identity(digits):
+    """Paper eq. 2: d = x+ - x-."""
+    d = jnp.asarray(np.array(digits, np.int8))
+    pos, neg = sd_split_posneg(d)
+    np.testing.assert_array_equal(np.asarray(pos) - np.asarray(neg),
+                                  np.asarray(d))
+    assert not np.any(np.asarray(pos) & np.asarray(neg))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(min_value=-1, max_value=1), min_size=1,
+                max_size=18))
+def test_first_negative_prefix_matches_bruteforce(digits):
+    d = jnp.asarray(np.array(digits, np.int8))[:, None]
+    idx = int(first_negative_prefix(d)[0])
+    prefix = np.cumsum(np.array(digits) * 0.5 ** np.arange(1, len(digits) + 1))
+    neg = np.nonzero(prefix < 0)[0]
+    expected = (neg[0] + 1) if len(neg) else len(digits) + 1
+    assert idx == expected
+
+
+def test_prefix_values_shape_and_final():
+    rng = np.random.default_rng(2)
+    q = rng.integers(-200, 200, size=(64,))
+    d = fixed_to_sd(jnp.asarray(q), 8)
+    pv = sd_prefix_values(d)
+    assert pv.shape == d.shape
+    np.testing.assert_allclose(np.asarray(pv[-1]), q / 256.0, atol=1e-7)

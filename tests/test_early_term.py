@@ -1,0 +1,84 @@
+"""Algorithm 1: early negative detection — soundness, savings, and the
+contrast with LSB-first SIP (whose partial sums cannot be used this way)."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (early_termination, fixed_to_sd, pe_schedule,
+                        pe_sop_digits, sd_to_value, sip_sop_trace)
+
+
+def _sop_digits(xq, wq, k=5):
+    sch = pe_schedule(k=k, p_mult=16)
+    xd = fixed_to_sd(jnp.asarray(xq), 8)
+    wf = jnp.asarray(wq / 256.0, jnp.float32)[:, None]
+    return pe_sop_digits(xd, wf, sch), sch
+
+
+def test_soundness_batch():
+    """Termination may fire ONLY on SOPs whose true value is negative."""
+    rng = np.random.default_rng(0)
+    xq = rng.integers(0, 128, size=(25, 512))
+    wq = rng.integers(-127, 32, size=(25,))       # negative-leaning weights
+    sop, sch = _sop_digits(xq, wq)
+    rep = early_termination(sop, sch)
+    true = (xq * wq[:, None]).sum(0)
+    fired = np.asarray(rep.is_negative)
+    assert fired.any(), "test should exercise termination"
+    assert ((~fired) | (true < 0)).all(), "unsound termination"
+
+
+def test_savings_range_on_negatives():
+    """Paper §II-B.2: 45-50% of cycles saved on negative convolutions (the
+    exact number depends on magnitudes; we check savings are substantial)."""
+    rng = np.random.default_rng(1)
+    xq = rng.integers(32, 128, size=(25, 256))
+    wq = rng.integers(-127, -32, size=(25,))      # strongly negative SOPs
+    sop, sch = _sop_digits(xq, wq)
+    rep = early_termination(sop, sch)
+    assert bool(np.all(np.asarray(rep.is_negative)))
+    mean_saving = float(np.mean(np.asarray(rep.savings_frac)))
+    assert 0.30 <= mean_saving <= 0.65, mean_saving
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=0, max_value=2 ** 32 - 1))
+def test_soundness_property(seed):
+    rng = np.random.default_rng(seed)
+    xq = rng.integers(0, 128, size=(9, 64))
+    wq = rng.integers(-127, 128, size=(9,))
+    sch = pe_schedule(k=3, p_mult=16)
+    xd = fixed_to_sd(jnp.asarray(xq), 8)
+    sop = pe_sop_digits(xd, jnp.asarray(wq / 256.0, jnp.float32)[:, None],
+                        sch)
+    rep = early_termination(sop, sch)
+    true = (xq * wq[:, None]).sum(0)
+    assert ((~np.asarray(rep.is_negative)) | (true < 0)).all()
+
+
+def test_sip_partial_sign_is_unreliable():
+    """LSB-first bit-serial accumulators change sign late — the structural
+    reason SIP cannot terminate early (paper §II-B.2)."""
+    rng = np.random.default_rng(2)
+    found = False
+    for _ in range(60):
+        xq = rng.integers(0, 256, size=(25, 1))
+        wq = rng.integers(-127, 128, size=(25, 1))
+        trace = np.asarray(sip_sop_trace(jnp.asarray(xq), jnp.asarray(wq)))
+        final = trace[-1, 0]
+        # look for a case where some partial sum's sign != final sign
+        if np.any(np.sign(trace[:-1, 0]) != np.sign(final)):
+            found = True
+            break
+    assert found, "expected at least one sign flip in SIP partial sums"
+
+
+def test_no_false_negative_rate_on_positive_sops():
+    rng = np.random.default_rng(3)
+    xq = rng.integers(0, 128, size=(25, 128))
+    wq = rng.integers(16, 127, size=(25,))        # all-positive weights
+    sop, sch = _sop_digits(xq, wq)
+    rep = early_termination(sop, sch)
+    assert not np.asarray(rep.is_negative).any()
+    assert (np.asarray(rep.cycles_used) == sch.total_cycles).all()

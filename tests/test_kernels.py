@@ -1,0 +1,138 @@
+"""Pallas dslot_matmul vs pure-jnp oracle: shape/dtype sweeps, termination
+soundness, runtime precision, column sorting (per-kernel requirement)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.dslot_matmul import dslot_matmul_pallas
+from repro.kernels.ops import dslot_matmul, quantize_activations
+from repro.kernels.ref import dslot_matmul_ref, make_planes, plane_value_ref
+
+
+@pytest.mark.parametrize("M,K,N,bm,bn", [
+    (32, 16, 32, 16, 16),
+    (64, 48, 64, 32, 32),
+    (128, 96, 128, 32, 64),
+    (64, 128, 32, 64, 16),
+])
+@pytest.mark.parametrize("wdtype", [jnp.float32, jnp.bfloat16])
+def test_kernel_matches_oracle_sweep(M, K, N, bm, bn, wdtype):
+    rng = np.random.default_rng(M + N)
+    aq = jnp.asarray(rng.integers(0, 256, size=(M, K)), jnp.int32)
+    w = jnp.asarray(rng.normal(0, 0.05, size=(K, N)), wdtype)
+    planes = make_planes(aq, 8)
+    ref = dslot_matmul_ref(planes, w.astype(jnp.float32), 8, relu=True)
+    out = dslot_matmul_pallas(planes, w.astype(jnp.float32), n_bits=8,
+                              relu=True, block_m=bm, block_n=bn)
+    np.testing.assert_allclose(np.asarray(out.out), np.asarray(ref),
+                               atol=1e-2, rtol=1e-5)
+
+
+@pytest.mark.parametrize("n_planes", [2, 4, 6, 8])
+def test_runtime_precision_knob(n_planes):
+    """Paper: 'precision of the online operators can be tuned at run-time'."""
+    rng = np.random.default_rng(n_planes)
+    aq = jnp.asarray(rng.integers(0, 256, size=(32, 32)), jnp.int32)
+    w = jnp.asarray(rng.normal(0, 0.06, size=(32, 32)), jnp.float32)
+    planes = make_planes(aq, 8, n_planes=n_planes)
+    ref = dslot_matmul_ref(planes, w, 8, relu=True)
+    out = dslot_matmul_pallas(planes, w, n_bits=8, relu=True,
+                              block_m=16, block_n=16)
+    np.testing.assert_allclose(np.asarray(out.out), np.asarray(ref),
+                               atol=1e-2)
+    # truncated value error is bounded by 2^(8-D) per element
+    approx = np.asarray(plane_value_ref(planes, 8))
+    assert np.abs(approx - np.asarray(aq)).max() < 2 ** (8 - n_planes)
+
+
+def test_termination_soundness_and_savings():
+    rng = np.random.default_rng(7)
+    aq = jnp.asarray(rng.integers(0, 256, size=(64, 64)), jnp.int32)
+    w = rng.normal(0, 0.04, size=(64, 64)).astype(np.float32)
+    w[:, :32] -= 0.08                       # clustered dead columns
+    planes = make_planes(aq, 8)
+    ref = dslot_matmul_ref(planes, jnp.asarray(w), 8, relu=True)
+    out = dslot_matmul_pallas(planes, jnp.asarray(w), n_bits=8, relu=True,
+                              block_m=32, block_n=32)
+    np.testing.assert_allclose(np.asarray(out.out), np.asarray(ref),
+                               atol=1e-2)
+    pu = np.asarray(out.planes_used)
+    r = np.asarray(ref)
+    assert pu.min() < 8, "termination should fire on dead tiles"
+    for i in range(pu.shape[0]):
+        for j in range(pu.shape[1]):
+            if pu[i, j] < 8:
+                assert (r[i * 32:(i + 1) * 32, j * 32:(j + 1) * 32]
+                        == 0).all()
+
+
+def test_no_termination_without_relu():
+    rng = np.random.default_rng(8)
+    aq = jnp.asarray(rng.integers(0, 256, size=(32, 32)), jnp.int32)
+    w = jnp.asarray(rng.normal(0, 0.05, size=(32, 32)) - 0.1, jnp.float32)
+    planes = make_planes(aq, 8)
+    out = dslot_matmul_pallas(planes, w, n_bits=8, relu=False,
+                              block_m=16, block_n=16)
+    assert (np.asarray(out.planes_used) == 8).all()
+    ref = dslot_matmul_ref(planes, w, 8, relu=False)
+    np.testing.assert_allclose(np.asarray(out.out), np.asarray(ref),
+                               atol=1e-2)
+
+
+def test_ops_wrapper_padding_and_sorting():
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(np.maximum(rng.normal(0.3, 0.4, size=(50, 40)), 0),
+                    jnp.float32)
+    w = rng.normal(0, 0.05, size=(40, 70)).astype(np.float32)
+    w[:, rng.permutation(70)[:35]] -= 0.09
+    ref = np.maximum(np.asarray(x) @ w, 0)
+    for sort in (False, True):
+        out, st_ = dslot_matmul(x, jnp.asarray(w), backend="jnp",
+                                sort_columns=sort, block_m=32, block_n=32)
+        err = np.abs(np.asarray(out) - ref).max()
+        assert err < 0.02 * max(ref.max(), 1.0)
+    # sorting must increase (or preserve) skipped fraction
+    _, s0 = dslot_matmul(x, jnp.asarray(w), backend="jnp",
+                         sort_columns=False, block_m=32, block_n=32)
+    _, s1 = dslot_matmul(x, jnp.asarray(w), backend="jnp",
+                         sort_columns=True, block_m=32, block_n=32)
+    assert float(s1.skipped_frac) >= float(s0.skipped_frac)
+
+
+def test_backends_agree():
+    rng = np.random.default_rng(10)
+    x = jnp.asarray(np.maximum(rng.normal(0.2, 0.5, size=(64, 48)), 0),
+                    jnp.float32)
+    w = jnp.asarray(rng.normal(-0.02, 0.05, size=(48, 64)), jnp.float32)
+    o1, s1 = dslot_matmul(x, w, backend="jnp", block_m=32, block_n=32)
+    o2, s2 = dslot_matmul(x, w, backend="pallas", block_m=32, block_n=32)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(s1.planes_used),
+                                  np.asarray(s2.planes_used))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(min_value=0, max_value=10 ** 6))
+def test_kernel_oracle_property(seed):
+    rng = np.random.default_rng(seed)
+    M = int(rng.integers(1, 3)) * 16
+    K = int(rng.integers(1, 5)) * 8
+    N = int(rng.integers(1, 3)) * 16
+    aq = jnp.asarray(rng.integers(-255, 256, size=(M, K)), jnp.int32)
+    w = jnp.asarray(rng.normal(0, 0.1, size=(K, N)), jnp.float32)
+    planes = make_planes(aq, 8)
+    ref = dslot_matmul_ref(planes, w, 8, relu=True)
+    out = dslot_matmul_pallas(planes, w, n_bits=8, relu=True,
+                              block_m=16, block_n=16)
+    np.testing.assert_allclose(np.asarray(out.out), np.asarray(ref),
+                               atol=5e-2, rtol=1e-4)
+
+
+def test_quantize_activations():
+    x = jnp.asarray([0.0, 0.5, 1.0, 2.0], jnp.float32)
+    q, step = quantize_activations(x, 8)
+    np.testing.assert_allclose(np.asarray(q) * float(step),
+                               np.asarray(x), atol=float(step) / 2)

@@ -1,0 +1,74 @@
+"""Online multiplier / adder: bit-exactness, digit validity, online-delay
+invariants (paper §II-A, DESIGN.md §4.1)."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (DELTA_ADD, DELTA_MULT, fixed_to_sd, online_add,
+                        online_add_tree, online_mult_sp, sd_to_value)
+
+
+def test_olm_bit_exact_batch():
+    rng = np.random.default_rng(0)
+    xq = rng.integers(0, 256, size=(256,))
+    wq = rng.integers(-255, 256, size=(256,))
+    xd = fixed_to_sd(jnp.asarray(xq), 9)            # value xq/512 < 1/2
+    z = online_mult_sp(xd, jnp.asarray(wq / 512.0, jnp.float32), n_out=18)
+    got = np.asarray(sd_to_value(z)) * 2.0 ** 18
+    np.testing.assert_allclose(got, xq * wq, rtol=0, atol=1e-3)
+
+
+def test_olm_digit_validity():
+    rng = np.random.default_rng(1)
+    xq = rng.integers(0, 128, size=(64,))
+    xd = fixed_to_sd(jnp.asarray(xq), 8)
+    z = online_mult_sp(xd, jnp.float32(0.49), n_out=16)
+    assert set(np.unique(np.asarray(z))) <= {-1, 0, 1}
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(min_value=0, max_value=127),
+       st.integers(min_value=-127, max_value=127))
+def test_olm_property(xq, wq):
+    xd = fixed_to_sd(jnp.asarray([xq]), 8)
+    z = online_mult_sp(xd, jnp.float32(wq / 256.0), n_out=16)
+    assert float(sd_to_value(z)[0]) * 2 ** 16 == xq * wq
+
+
+def test_olm_msdf_prefix_convergence():
+    """MSDF property: prefix after j digits is within 2^-j of the result —
+    the basis of early sign detection (paper §I)."""
+    xq, wq = 97, -113
+    xd = fixed_to_sd(jnp.asarray([xq]), 8)
+    z = online_mult_sp(xd, jnp.float32(wq / 256.0), n_out=16)
+    true = xq * wq / 2.0 ** 16
+    prefix = 0.0
+    for j in range(16):
+        prefix += float(z[j, 0]) * 2.0 ** -(j + 1)
+        assert abs(prefix - true) <= 2.0 ** -(j + 1) + 1e-9
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(min_value=-16000, max_value=16000),
+       st.integers(min_value=-16000, max_value=16000))
+def test_ola_property(aq, bq):
+    a = fixed_to_sd(jnp.asarray([aq]), 16)
+    b = fixed_to_sd(jnp.asarray([bq]), 16)
+    s = online_add(a, b, n_out=17)
+    assert float(sd_to_value(s)[0]) * 2 ** 17 == aq + bq
+
+
+def test_adder_tree_scaling_and_exactness():
+    rng = np.random.default_rng(3)
+    terms = rng.integers(-12000, 12000, size=(25, 32))
+    streams = jnp.stack([fixed_to_sd(jnp.asarray(terms[i]), 16)
+                         for i in range(25)])
+    out, stages = online_add_tree(streams, n_out=21)
+    assert stages == 5                               # ceil(log2 25)
+    got = np.asarray(sd_to_value(out)) * 2.0 ** (16 + 5)
+    np.testing.assert_allclose(got, terms.sum(0), rtol=0, atol=1e-2)
+
+
+def test_online_delays_are_papers():
+    assert DELTA_MULT == 2 and DELTA_ADD == 2

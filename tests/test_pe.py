@@ -1,0 +1,48 @@
+"""Processing engine: eq.(6) cycle schedule + SOP bit-exactness."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import fixed_to_sd, pe_schedule, pe_sop_digits, sd_to_value
+
+
+def test_eq6_paper_example():
+    """Paper §II-B.2: k=5, N=1, p_out=21  ->  33 cycles."""
+    s = pe_schedule(k=5, n_fmaps=1, p_mult=16)
+    assert s.p_out == 21
+    assert s.tree_stages == 5
+    assert s.total_cycles == 33
+    assert s.pipeline_fill == 2 + 2 * 5
+
+
+@pytest.mark.parametrize("k,n_fmaps,p_mult,expected", [
+    (3, 1, 16, 2 + 2 * 4 + (16 + 4)),          # ceil(log2 9) = 4
+    (5, 4, 16, 2 + 2 * 5 + 2 * 2 + (16 + 5)),  # fmap stages = 2
+    (7, 1, 16, 2 + 2 * 6 + (16 + 6)),
+])
+def test_eq6_general(k, n_fmaps, p_mult, expected):
+    assert pe_schedule(k=k, n_fmaps=n_fmaps, p_mult=p_mult).total_cycles \
+        == expected
+
+
+@pytest.mark.parametrize("k", [3, 5])
+def test_pe_sop_bit_exact(k):
+    rng = np.random.default_rng(k)
+    sch = pe_schedule(k=k, p_mult=16)
+    taps = k * k
+    xq = rng.integers(0, 128, size=(taps, 24))
+    wq = rng.integers(-127, 128, size=(taps,))
+    xd = fixed_to_sd(jnp.asarray(xq), 8)
+    wf = jnp.asarray(wq / 256.0, jnp.float32)[:, None]
+    sop = pe_sop_digits(xd, wf, sch)
+    assert sop.shape[0] == sch.p_out
+    S = sch.tree_stages + sch.fmap_stages
+    got = np.asarray(sd_to_value(sop)) * 2.0 ** (16 + S)
+    np.testing.assert_allclose(got, (xq * wq[:, None]).sum(0), atol=1e-3)
+
+
+def test_cycle_of_digit():
+    s = pe_schedule(k=5, p_mult=16)
+    assert s.cycle_of_digit(1) == s.pipeline_fill + 1
+    assert s.cycle_of_digit(s.p_out) == s.total_cycles

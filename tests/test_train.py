@@ -1,0 +1,80 @@
+"""Training substrate: convergence, grad-accumulation equivalence, optimizer."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ARCHS
+from repro.data.pipeline import TokenPipeline
+from repro.models.model_zoo import build_model
+from repro.optim.adamw import (AdamWConfig, adamw_update, global_norm,
+                               init_opt_state, schedule)
+from repro.train.step import init_train_state, make_train_step
+
+
+def test_loss_decreases():
+    cfg = ARCHS["olmo-1b"].reduced()
+    model = build_model(cfg)
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(
+        model, AdamWConfig(peak_lr=3e-3, warmup_steps=5, decay_steps=200)))
+    pipe = TokenPipeline(vocab=cfg.vocab_size, seq_len=32, global_batch=8,
+                         microbatches=2)
+    losses = []
+    for _ in range(40):
+        state, m = step(state, jax.tree.map(jnp.asarray,
+                                            pipe.next_host_batch()))
+        losses.append(float(m["loss"]))
+    assert min(losses[-5:]) < losses[0] - 0.4, (losses[0], losses[-5:])
+
+
+def test_grad_accumulation_equivalent():
+    """M=1 vs M=4 microbatches: same data -> (near-)identical update."""
+    cfg = ARCHS["olmo-1b"].reduced()
+    model = build_model(cfg)
+    opt = AdamWConfig(peak_lr=1e-3, warmup_steps=0, decay_steps=10)
+    step = jax.jit(make_train_step(model, opt))
+    pipe = TokenPipeline(vocab=cfg.vocab_size, seq_len=16, global_batch=8,
+                         microbatches=1)
+    raw = pipe.next_host_batch()
+    b1 = jax.tree.map(jnp.asarray, raw)
+    b4 = jax.tree.map(lambda a: jnp.asarray(a).reshape(4, 2, *a.shape[2:]),
+                      raw)
+    s0 = init_train_state(model, jax.random.PRNGKey(0))
+    s1, m1 = step(s0, b1)
+    s0b = init_train_state(model, jax.random.PRNGKey(0))
+    s4, m4 = step(s0b, b4)
+    assert abs(float(m1["loss"]) - float(m4["loss"])) < 1e-4
+    diffs = jax.tree.map(lambda a, b: float(jnp.abs(
+        a.astype(jnp.float32) - b.astype(jnp.float32)).max()),
+        s1.params, s4.params)
+    assert max(jax.tree.leaves(diffs)) < 5e-3
+
+
+def test_adamw_state_and_clipping():
+    params = {"w": jnp.ones((4, 4)), "b": jnp.zeros((4,))}
+    opt = init_opt_state(params)
+    big = {"w": jnp.full((4, 4), 100.0), "b": jnp.full((4,), 100.0)}
+    cfg = AdamWConfig(clip_norm=1.0, warmup_steps=0, decay_steps=10,
+                      peak_lr=0.1)
+    newp, newopt, m = adamw_update(params, big, opt, cfg)
+    assert float(m["grad_norm"]) > 1.0
+    # clipped: effective step bounded by lr-ish magnitude
+    assert float(jnp.abs(newp["w"] - params["w"]).max()) < 0.5
+    assert int(newopt.count) == 1
+
+
+def test_schedule_shape():
+    cfg = AdamWConfig(peak_lr=1.0, warmup_steps=10, decay_steps=100,
+                      min_lr_frac=0.1)
+    lrs = [float(schedule(cfg, jnp.asarray(s))) for s in
+           [0, 5, 10, 50, 100, 1000]]
+    assert lrs[1] < lrs[2]                       # warmup rises
+    assert abs(lrs[2] - 1.0) < 1e-6              # peak
+    assert lrs[3] < lrs[2]                       # decays
+    assert abs(lrs[-1] - 0.1) < 1e-6             # floor
+
+
+def test_global_norm():
+    t = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+    assert abs(float(global_norm(t)) - 5.0) < 1e-6
