@@ -1,10 +1,18 @@
 """Digit-plane DSLOT kernel benchmark: skipped-MXU-pass fraction vs output
-negativity (the TPU adaptation of Fig. 9), runtime-precision scaling, and
-wall-time of the jnp path (CPU container; Pallas numbers are structural —
-interpret mode is not a performance proxy)."""
+negativity (the TPU adaptation of Fig. 9), runtime-precision scaling,
+``block_k`` streaming sweep, and per-layer planes-skipped for the MNIST
+network through the unified layer API — the software proxy for the paper's
+energy-saving claim.  Wall-times are for the jnp path (CPU container; Pallas
+numbers are structural — interpret mode is not a performance proxy).
+
+Standalone CLI (used by the CI smoke job):
+    python benchmarks/bench_kernel.py [--smoke] [--json out.json]
+"""
 
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import numpy as np
@@ -23,11 +31,12 @@ def _timeit(fn, *args, iters=3, **kw):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def run() -> list[str]:
+def run(smoke: bool = False) -> list[str]:
     rows = []
     rng = np.random.default_rng(0)
-    M, K, N = 256, 256, 256
+    M = K = N = 64 if smoke else 256
     x = jnp.asarray(np.maximum(rng.normal(0.3, 0.4, (M, K)), 0), jnp.float32)
+    bm = bn = 32 if smoke else 64
 
     for dead_frac in (0.0, 0.25, 0.5, 0.75):
         w = rng.normal(0, 0.05, (K, N)).astype(np.float32)
@@ -35,28 +44,84 @@ def run() -> list[str]:
         if n_dead:
             w[:, rng.permutation(N)[:n_dead]] -= 0.10
         out, st = dslot_matmul(x, jnp.asarray(w), backend="jnp",
-                               sort_columns=True, block_m=64, block_n=64)
+                               sort_columns=True, block_m=bm, block_n=bn)
         rows.append(f"kernel.skipped_frac_dead{int(dead_frac*100)},"
                     f"{float(st.skipped_frac):.4f},sorted-tiles")
+
+    # block_k streaming sweep: same workload, weights streamed through VMEM
+    # in chunks.  The chunk-aware bound can only terminate earlier, so the
+    # skipped fraction is monotone non-decreasing as chunks shrink.
+    w = rng.normal(0, 0.05, (K, N)).astype(np.float32)
+    w[:, rng.permutation(N)[:N // 2]] -= 0.10
+    for bk in (None, K, K // 2, K // 4):
+        out, st = dslot_matmul(x, jnp.asarray(w), backend="jnp",
+                               sort_columns=True, block_m=bm, block_n=bn,
+                               block_k=bk)
+        us = _timeit(dslot_matmul, x, jnp.asarray(w), backend="jnp",
+                     sort_columns=True, block_m=bm, block_n=bn, block_k=bk)
+        tag = "auto" if bk is None else str(bk)
+        rows.append(f"kernel.blockk{tag}_skipped_frac,"
+                    f"{float(st.skipped_frac):.4f},us={us:.0f}")
 
     w = jnp.asarray(rng.normal(0, 0.05, (K, N)), jnp.float32)
     for D in (8, 6, 4, 2):
         us = _timeit(dslot_matmul, x, w, backend="jnp", n_planes=D,
-                     block_m=64, block_n=64)
+                     block_m=bm, block_n=bn)
         out, _ = dslot_matmul(x, w, backend="jnp", n_planes=D,
-                              block_m=64, block_n=64)
+                              block_m=bm, block_n=bn)
         ref = jnp.maximum(x @ w, 0)
         rel = float(jnp.abs(out - ref).mean() / (jnp.abs(ref).mean() + 1e-9))
         rows.append(f"kernel.planes{D}_us,{us:.0f},rel_err={rel:.4f}")
 
-    # pallas interpret-mode parity check at bench scale (small shape)
+    # per-layer planes-skipped for the MNIST network through the layer API
+    # (trained-free: random weights biased negative in the head so early
+    # termination has something to kill — the per-layer reporting path is
+    # what's exercised here, not the paper's accuracies).
+    from repro.configs.dslot_mnist import CONFIG
+    from repro.core.mnist_cnn import forward_dslot, init_cnn
+    params = init_cnn(CONFIG, jax.random.PRNGKey(0))
+    imgs = jnp.asarray(rng.uniform(0, 1, (4 if smoke else 16, 28, 28)),
+                       jnp.float32)
+    res = forward_dslot(params, imgs, CONFIG, block_m=32,
+                        block_k=None if smoke else 64)
+    for name, st in res.layer_stats.items():
+        used = np.asarray(st.planes_used)
+        rows.append(f"kernel.layer_{name}_planes_used,"
+                    f"{used.mean():.3f},skipped={float(st.skipped_frac):.4f}")
+
+    # pallas interpret-mode parity check at bench scale, tiled K
     from repro.kernels.ref import make_planes, dslot_matmul_ref
     from repro.kernels.dslot_matmul import dslot_matmul_pallas
     aq = jnp.asarray(rng.integers(0, 256, (64, 64)), jnp.int32)
     wp = jnp.asarray(rng.normal(0, 0.05, (64, 64)), jnp.float32)
     planes = make_planes(aq, 8)
-    o1 = dslot_matmul_pallas(planes, wp, block_m=32, block_n=32).out
+    o1 = dslot_matmul_pallas(planes, wp, block_m=32, block_n=32,
+                             block_k=32).out
     o2 = dslot_matmul_ref(planes, wp, 8)
     rows.append(f"kernel.pallas_vs_ref_maxerr,"
-                f"{float(jnp.abs(o1 - o2).max()):.2e},interpret-mode")
+                f"{float(jnp.abs(o1 - o2).max()):.2e},interpret-tiled-k")
     return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes (CI smoke job)")
+    ap.add_argument("--json", type=str, default=None,
+                    help="also write rows as JSON to this path")
+    args = ap.parse_args()
+    rows = run(smoke=args.smoke)
+    print("name,value,derived")
+    for row in rows:
+        print(row, flush=True)
+    if args.json:
+        records = []
+        for row in rows:
+            name, value, derived = row.split(",", 2)
+            records.append({"name": name, "value": value, "derived": derived})
+        with open(args.json, "w") as f:
+            json.dump({"smoke": args.smoke, "rows": records}, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""configs subpackage of the DSLOT-NN reproduction."""

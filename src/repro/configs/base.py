@@ -21,6 +21,8 @@ class DslotConfig:
     sort_columns: bool = True  # beyond-paper: cluster dead output columns
     block_m: int = 128
     block_n: int = 128
+    block_k: int | None = None  # K chunk streamed through VMEM (None = auto)
+    use_pallas: bool = False    # Pallas kernel (interpret off-TPU) vs jnp
 
 
 @dataclass(frozen=True)

@@ -10,7 +10,7 @@ from .quantize import QTensor, dequantize, quantize, quantize_unsigned
 from .sip import SIPSchedule, sip_schedule, sip_sop, sip_sop_trace
 from .cycle_model import FPGAModel, TABLE1_PUBLISHED, table1_model
 from .conv import (DSLOTConvResult, dslot_conv2d_stats, extract_windows,
-                   sip_conv2d)
+                   im2col, sip_conv2d)
 
 __all__ = [
     "fixed_to_sd", "first_negative_prefix", "sd_from_value",
@@ -22,5 +22,6 @@ __all__ = [
     "QTensor", "dequantize", "quantize", "quantize_unsigned",
     "SIPSchedule", "sip_schedule", "sip_sop", "sip_sop_trace",
     "FPGAModel", "TABLE1_PUBLISHED", "table1_model",
-    "DSLOTConvResult", "dslot_conv2d_stats", "extract_windows", "sip_conv2d",
+    "DSLOTConvResult", "dslot_conv2d_stats", "extract_windows", "im2col",
+    "sip_conv2d",
 ]

@@ -29,8 +29,8 @@ from .pe import PESchedule, pe_schedule, pe_sop_digits
 from .quantize import QTensor, quantize, quantize_unsigned
 from .sip import sip_sop
 
-__all__ = ["DSLOTConvResult", "extract_windows", "dslot_conv2d_stats",
-           "sip_conv2d"]
+__all__ = ["DSLOTConvResult", "extract_windows", "im2col",
+           "dslot_conv2d_stats", "sip_conv2d"]
 
 
 class DSLOTConvResult(NamedTuple):
@@ -42,14 +42,28 @@ class DSLOTConvResult(NamedTuple):
     w_scale: jax.Array
 
 
+def im2col(x: jax.Array, k: int, stride: int = 1) -> jax.Array:
+    """Multi-channel im2col: (B, H, W, C) -> (B, Ho, Wo, k*k*C).
+
+    Valid padding.  Column ordering is (ki, kj, c) — matmul against weights
+    reshaped from (k, k, C, M) to (k*k*C, M) reproduces a conventional
+    convolution.  This is the lowering used by ``layers.DslotConv2d`` to route
+    conv layers through the digit-plane matmul kernel.
+    """
+    B, H, W, C = x.shape
+    Ho = (H - k) // stride + 1
+    Wo = (W - k) // stride + 1
+    i = (stride * jnp.arange(Ho)[:, None, None, None]
+         + jnp.arange(k)[None, None, :, None])                 # (Ho,1,k,1)
+    j = (stride * jnp.arange(Wo)[None, :, None, None]
+         + jnp.arange(k)[None, None, None, :])                 # (1,Wo,1,k)
+    win = x[:, i, j]                       # (B, Ho, Wo, k, k, C)
+    return win.reshape(B, Ho, Wo, k * k * C)
+
+
 def extract_windows(x: jax.Array, k: int) -> jax.Array:
     """im2col: (B, H, W) -> (B, Ho, Wo, k*k), valid padding, stride 1."""
-    B, H, W = x.shape
-    Ho, Wo = H - k + 1, W - k + 1
-    i = jnp.arange(Ho)[:, None, None, None] + jnp.arange(k)[None, None, :, None]
-    j = jnp.arange(Wo)[None, :, None, None] + jnp.arange(k)[None, None, None, :]
-    win = x[:, i, j]                       # (B, Ho, Wo, k, k)
-    return win.reshape(B, Ho, Wo, k * k)
+    return im2col(x[..., None], k)
 
 
 def _digit_streams(x_q: jax.Array, n_bits: int) -> jax.Array:

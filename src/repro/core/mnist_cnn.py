@@ -1,8 +1,12 @@
 """The paper's evaluation network (Fig. 6): bias-free MNIST CNN.
 
 conv 5x5 (no bias, per §III-A) -> ReLU -> 2x2 maxpool -> dense -> softmax.
-Trained in float; inference of the first three layers runs through the
-DSLOT-NN digit-serial engine (Fig. 7 dataflow) for the Fig. 8/9 statistics.
+Trained in float (``forward``/``train_cnn``); inference runs through the
+DSLOT digit-plane engine via the unified layer API (``forward_dslot``:
+``layers.DslotConv2d`` for conv+ReLU, ``layers.DslotDense`` for the head),
+reporting per-layer ``planes_used`` — the TPU-tile analogue of the paper's
+Fig. 8/9 statistics.  The cycle-accurate per-window simulation of the FPGA
+datapath lives in ``core.conv.dslot_conv2d_stats``.
 """
 
 from __future__ import annotations
@@ -19,6 +23,11 @@ from repro.configs.dslot_mnist import MnistCNNConfig
 class CNNParams(NamedTuple):
     conv: jax.Array    # (M, k, k)
     dense: jax.Array   # (M*12*12, 10)
+
+
+class DslotForwardResult(NamedTuple):
+    logits: jax.Array                    # (B, n_classes)
+    layer_stats: dict                    # name -> DslotLayerStats
 
 
 def init_cnn(cfg: MnistCNNConfig, key) -> CNNParams:
@@ -42,6 +51,49 @@ def forward(params: CNNParams, images: jax.Array, cfg: MnistCNNConfig
                               (1, 1, cfg.pool, cfg.pool),
                               (1, 1, cfg.pool, cfg.pool), "VALID")
     return x.reshape(x.shape[0], -1) @ params.dense
+
+
+def forward_dslot(params: CNNParams, images: jax.Array, cfg: MnistCNNConfig,
+                  *, use_pallas: bool = False, n_planes: int | None = None,
+                  block_k: int | None = None, block_m: int = 128,
+                  block_n: int = 8) -> DslotForwardResult:
+    """Inference through the digit-plane engine via the unified layer API.
+
+    Every matmul-shaped layer routes through ``DslotConv2d``/``DslotDense``;
+    the fused conv+ReLU gets per-tile early termination, the logits head
+    (no ReLU) runs all planes.  ``block_n`` defaults small because the CNN
+    has few output channels/classes; ``use_pallas`` selects the Pallas
+    kernel (interpret mode off-TPU).
+    """
+    from repro.layers import DslotConv2d, DslotDense
+
+    k, m = cfg.kernel_size, cfg.conv_channels
+    side = (cfg.image_size - k + 1) // cfg.pool
+    conv = DslotConv2d(
+        in_channels=1, out_channels=m, kernel_size=k, name="conv1",
+        n_bits=cfg.n_bits, n_planes=n_planes, relu=True,
+        block_m=block_m, block_n=min(block_n, m), block_k=block_k,
+        use_pallas=use_pallas)
+    head = DslotDense(
+        d_in=m * side * side, d_out=cfg.n_classes, name="dense1",
+        n_bits=cfg.n_bits, n_planes=n_planes, relu=False, signed=False,
+        block_m=block_m, block_n=min(block_n, cfg.n_classes),
+        block_k=block_k, use_pallas=use_pallas)
+
+    # conv weights (M, k, k) -> layer layout (k, k, 1, M)
+    wc = jnp.transpose(params.conv, (1, 2, 0))[:, :, None, :]
+    x, conv_stats = conv.apply({"w": wc}, images[..., None])   # (B,Ho,Wo,M)
+    B, Ho, Wo, _ = x.shape
+    Hp, Wp = Ho // cfg.pool, Wo // cfg.pool
+    x = x[:, :Hp * cfg.pool, :Wp * cfg.pool, :]
+    x = x.reshape(B, Hp, cfg.pool, Wp, cfg.pool, m).max(axis=(2, 4))
+    # float forward flattens (M, H, W); the dslot path is NHWC — match the
+    # trained dense layout by moving channels first before flattening.
+    flat = jnp.transpose(x, (0, 3, 1, 2)).reshape(B, -1)
+    logits, head_stats = head.apply({"w": params.dense}, flat)
+    return DslotForwardResult(
+        logits=logits,
+        layer_stats={"conv1": conv_stats, "dense1": head_stats})
 
 
 def train_cnn(cfg: MnistCNNConfig, images: np.ndarray, labels: np.ndarray,

@@ -36,8 +36,9 @@ def collective_matmul_ag(x, w, mesh: Mesh, axis: str = "model"):
     def body(xl, wl):                       # xl: (S/n, K), wl: (K, N/n)
         idx = jax.lax.axis_index(axis)
         s_local = xl.shape[0]
-        y0 = jax.lax.pvary(
-            jnp.zeros((s_local * n, wl.shape[1]), jnp.float32), (axis,))
+        y0 = jnp.zeros((s_local * n, wl.shape[1]), jnp.float32)
+        if hasattr(jax.lax, "pvary"):       # newer jax: mark device-varying
+            y0 = jax.lax.pvary(y0, (axis,))
         # device i sends to i-1: after r rounds, device d holds slice (d+r)%n
         perm = [(i, (i - 1) % n) for i in range(n)]
 

@@ -1,13 +1,19 @@
 """TPU hot-spot kernels: the DSLOT digit-plane matmul.
 
-``dslot_matmul.py`` — pl.pallas_call kernel (BlockSpec VMEM tiling, per-tile
-early negative termination); ``ops.py`` — jit'd wrapper with quantization /
-padding / column-sorting; ``ref.py`` — pure-jnp oracle the kernel is tested
-against (shape/dtype sweeps + hypothesis, tests/test_kernels.py).
+``dslot_matmul.py`` — pl.pallas_call kernel (K-chunked VMEM streaming with a
+chunk-aware per-tile early-termination bound, auto block-size selection,
+bf16 weights, batched entry); ``ops.py`` — jit'd wrapper with quantization /
+padding / column-sorting and a jnp backend replaying identical termination
+accounting; ``ref.py`` — pure-jnp oracle the kernel is tested against
+(tests/test_kernels.py, tests/test_ktiling.py).
 """
 
+from .dslot_matmul import (DslotMatmulOut, dslot_matmul_pallas,
+                           dslot_matmul_pallas_batched, select_block_k)
 from .ops import DslotStats, dslot_matmul, quantize_activations
 from .ref import dslot_matmul_ref, make_planes
 
-__all__ = ["DslotStats", "dslot_matmul", "quantize_activations",
+__all__ = ["DslotMatmulOut", "DslotStats", "dslot_matmul",
+           "dslot_matmul_pallas", "dslot_matmul_pallas_batched",
+           "select_block_k", "quantize_activations",
            "dslot_matmul_ref", "make_planes"]

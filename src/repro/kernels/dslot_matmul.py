@@ -8,24 +8,39 @@ unit of termination becomes an *output tile*:
 
     C = sum_d 2^(n-1-d) * (P_d @ W),      P_d in {-1,0,1}^(M x K), d MSDF
 
-After accumulating plane d, the remaining planes can contribute at most
-``R_d[n] = (2^(n-1-d) - 2^(n-D)) * sum_k |W[k, n]|`` to any element of output
-column n (digits are bounded by 1 in magnitude).  A tile with
-``max_m(acc + R_d) < 0`` everywhere is provably negative under ReLU: its
-remaining ``D-d-1`` MXU passes are SKIPPED (predicated with ``pl.when``) and it
-emits zeros — the tile-granular Algorithm 1.  MSDF ordering makes ``R_d``
-shrink geometrically, which is exactly the paper's "sign is known from the
-first non-zero digit" property.
+Weights stream through VMEM in ``block_k`` chunks (grid axis ``c``), so ``K``
+is no longer bounded by what fits in VMEM at once.  After accumulating
+(plane d, chunk c) the remaining work can contribute at most
 
-Grid/layout: ``grid = (M/bm, N/bn, D)`` with the digit-plane axis innermost
-(sequential, "arbitrary" semantics); the f32 accumulator and the termination
-flag live in VMEM/SMEM scratch that persists across the plane axis.  Blocks
-are MXU-aligned (bm, bn multiples of 128 on real TPU; any size in interpret
-mode).  W is reloaded per (i, j) tile and stays VMEM-resident across planes
-(weight-stationary — the paper's dataflow).
+    R[d, c][n] = 2^(n-1-d) * S_c[n]  +  (2^(n-1-d) - 2^(n-D)) * T[n]
+
+to output column n, where ``S_c`` is the |W| column-sum over the K chunks not
+yet seen in the current plane and ``T`` the |W| column-sum over ALL of K
+(digits are bounded by 1 in magnitude; the second term is the geometric sum of
+the unseen planes).  ``R`` decreases monotonically along the (d, c) iteration
+order, so a tile with ``max_m(acc + R) < 0`` everywhere is *provably* negative
+under ReLU at the earliest chunk that observes it: its remaining MXU passes
+are SKIPPED (predicated with ``pl.when``) and it emits zeros — the
+tile-granular Algorithm 1, now chunk-aware.  At the last chunk of a plane
+``S_c = 0`` and the bound coincides with the untiled kernel's, so tiling can
+only terminate a tile at the same plane or an earlier one.
+
+Grid/layout: ``grid = (M/bm, N/bn, D, K/bk)`` with the digit-plane and
+K-chunk axes innermost (sequential, "arbitrary" semantics); the f32
+accumulator and the termination flag live in VMEM/SMEM scratch that persists
+across the (d, c) axes.  Blocks are MXU-aligned on real TPU (bm, bn multiples
+of 128, bk a multiple of 128 when tiled; any size in interpret mode).
+``block_k=None`` picks the largest K chunk that keeps the working set inside
+the VMEM budget — there is no whole-K residency requirement anymore.
+
+Weights may be float32 or bfloat16 (accumulation is always f32).
+``dslot_matmul_pallas_batched`` is the batched entry point: it folds a leading
+batch axis into M (every output tile stays inside one batch element because
+``M % block_m == 0``), which is exactly equivalent to a vmap but keeps a
+single sequential grid.
 
 Validated in interpret mode against ``ref.dslot_matmul_ref`` (CPU container);
-targeted at TPU v5e (BlockSpec VMEM budget asserted at trace time).
+targeted at TPU v5e.
 """
 
 from __future__ import annotations
@@ -38,22 +53,47 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["dslot_matmul_pallas", "DslotMatmulOut"]
+__all__ = ["dslot_matmul_pallas", "dslot_matmul_pallas_batched",
+           "DslotMatmulOut", "select_block_k"]
 
 _VMEM_BUDGET_BYTES = 12 * 1024 * 1024  # leave headroom below v5e's ~16 MiB
+_LANE = 128                            # TPU lane width: K-chunk alignment
 
 
 class DslotMatmulOut(NamedTuple):
     out: jax.Array               # (M, N) f32 — [relu](A_D @ W)
-    planes_used: jax.Array       # (M/bm, N/bn) int32 — MXU passes per tile
+    planes_used: jax.Array       # (M/bm, N/bn) int32 — digit planes entered
 
 
-def _kernel(planes_ref, w_ref, out_ref, used_ref, acc_ref, term_ref, *,
-            n_bits: int, n_planes: int, relu: bool, block_m: int,
-            block_n: int):
+def select_block_k(K: int, block_m: int, block_n: int, w_itemsize: int,
+                   budget: int = _VMEM_BUDGET_BYTES) -> int:
+    """Largest K chunk whose working set fits the VMEM budget.
+
+    Working set per grid step: one int8 plane chunk (bm, bk), one weight chunk
+    (bk, bn), the f32 accumulator + output tile (bm, bn) and two f32 colsum
+    rows (bn).  Returns K itself when the whole reduction fits (the untiled
+    fast path); otherwise a lane-aligned chunk size.
+    """
+    fixed = 2 * block_m * block_n * 4 + 2 * block_n * 4
+    per_k = block_m * 1 + block_n * w_itemsize
+    avail = budget - fixed
+    if avail < per_k * _LANE:
+        raise ValueError(
+            f"block_m={block_m} x block_n={block_n} alone exceeds the VMEM "
+            f"budget ({budget} B); shrink the output tile")
+    bk = avail // per_k
+    if bk >= K:
+        return K
+    return max(_LANE, (bk // _LANE) * _LANE)
+
+
+def _kernel(planes_ref, w_ref, sfx_ref, tot_ref, out_ref, used_ref,
+            acc_ref, term_ref, *, n_bits: int, n_planes: int, n_kchunks: int,
+            relu: bool):
     d = pl.program_id(2)
+    c = pl.program_id(3)
 
-    @pl.when(d == 0)
+    @pl.when(jnp.logical_and(d == 0, c == 0))
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
         term_ref[0] = 0
@@ -63,22 +103,26 @@ def _kernel(planes_ref, w_ref, out_ref, used_ref, acc_ref, term_ref, *,
 
     @pl.when(jnp.logical_not(terminated))
     def _accumulate():
-        plane = planes_ref[0].astype(jnp.float32)          # (bm, K)
-        w = w_ref[...].astype(jnp.float32)                 # (K, bn)
+        plane = planes_ref[0].astype(jnp.float32)          # (bm, bk)
+        w = w_ref[...].astype(jnp.float32)                 # (bk, bn)
         scale = jnp.exp2(jnp.asarray(n_bits - 1, jnp.float32)
                          - d.astype(jnp.float32))
         acc_ref[...] += scale * jnp.dot(
             plane, w, preferred_element_type=jnp.float32)
-        used_ref[0, 0] += 1
+
+        @pl.when(c == 0)
+        def _count_plane():
+            used_ref[0, 0] += 1
 
         if relu:
-            # Remaining-contribution bound per output column (see module doc).
-            rem = (scale - 2.0 ** (n_bits - n_planes)) * \
-                jnp.sum(jnp.abs(w), axis=0)                # (bn,)
+            # Chunk-aware remaining-contribution bound (module docstring):
+            # unseen chunks of this plane + all chunks of unseen planes.
+            rem = scale * sfx_ref[0] \
+                + (scale - 2.0 ** (n_bits - n_planes)) * tot_ref[0]  # (bn,)
             provably_neg = jnp.all(acc_ref[...] + rem[None, :] < 0.0)
             term_ref[0] = jnp.where(provably_neg, 1, term_ref[0])
 
-    @pl.when(d == n_planes - 1)
+    @pl.when(jnp.logical_and(d == n_planes - 1, c == n_kchunks - 1))
     def _finalize():
         acc = acc_ref[...]
         if relu:
@@ -87,16 +131,29 @@ def _kernel(planes_ref, w_ref, out_ref, used_ref, acc_ref, term_ref, *,
         out_ref[...] = acc
 
 
+def _pad_to(x: jax.Array, m: int, axis: int) -> jax.Array:
+    """Zero-pad ``axis`` up to the next multiple of ``m`` (shared with ops.py)."""
+    r = (-x.shape[axis]) % m
+    if r == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, r)
+    return jnp.pad(x, pads)
+
+
 @functools.partial(jax.jit, static_argnames=(
-    "n_bits", "relu", "block_m", "block_n", "interpret"))
+    "n_bits", "relu", "block_m", "block_n", "block_k", "interpret"))
 def dslot_matmul_pallas(planes: jax.Array, w: jax.Array, *, n_bits: int = 8,
                         relu: bool = True, block_m: int = 128,
-                        block_n: int = 128, interpret: bool = True
-                        ) -> DslotMatmulOut:
+                        block_n: int = 128, block_k: int | None = None,
+                        interpret: bool = True) -> DslotMatmulOut:
     """Run the digit-plane matmul kernel.
 
-    planes: (D, M, K) int8 MSDF digit planes (see ``ref.make_planes``).
-    w:      (K, N) float32/bfloat16 weights.
+    planes:  (D, M, K) int8 MSDF digit planes (see ``ref.make_planes``).
+    w:       (K, N) float32/bfloat16 weights.
+    block_k: K chunk size streamed through VMEM (None = auto-select the
+             largest chunk that fits the budget; K is zero-padded to a
+             multiple — zero rows contribute nothing to sums or bounds).
     M % block_m == 0 and N % block_n == 0 (callers pad — see ``ops.py``).
     """
     D, M, K = planes.shape
@@ -104,25 +161,40 @@ def dslot_matmul_pallas(planes: jax.Array, w: jax.Array, *, n_bits: int = 8,
     assert K == K2, (planes.shape, w.shape)
     assert M % block_m == 0 and N % block_n == 0, (M, N, block_m, block_n)
 
-    vmem = (block_m * K * 1) + (K * block_n * w.dtype.itemsize) \
-        + 2 * (block_m * block_n * 4)
-    assert vmem <= _VMEM_BUDGET_BYTES, (
-        f"VMEM working set {vmem/2**20:.1f} MiB exceeds budget; "
-        f"shrink block_m/block_n or shard K")
+    bk = block_k or select_block_k(K, block_m, block_n, w.dtype.itemsize)
+    vmem = (block_m * bk) + (bk * block_n * w.dtype.itemsize) \
+        + 2 * (block_m * block_n * 4) + 2 * block_n * 4
+    if vmem > _VMEM_BUDGET_BYTES:
+        raise ValueError(
+            f"working set {vmem / 2**20:.1f} MiB for block_k={bk} exceeds the "
+            f"VMEM budget; pass a smaller block_k (or None to auto-select)")
+    planes = _pad_to(planes, bk, axis=2)
+    w = _pad_to(w, bk, axis=0)
+    Kp = w.shape[0]
+    Kt = Kp // bk
 
-    grid = (M // block_m, N // block_n, D)
-    kernel = functools.partial(_kernel, n_bits=n_bits, n_planes=D, relu=relu,
-                               block_m=block_m, block_n=block_n)
+    # |W| column-sums for the termination bound: per-chunk suffix (what the
+    # current plane has not seen yet) and the all-of-K total.
+    absw = jnp.abs(w.astype(jnp.float32))
+    chunk_colsum = absw.reshape(Kt, bk, N).sum(axis=1)          # (Kt, N)
+    total_colsum = chunk_colsum.sum(axis=0, keepdims=True)      # (1, N)
+    suffix_colsum = total_colsum - jnp.cumsum(chunk_colsum, axis=0)
+
+    grid = (M // block_m, N // block_n, D, Kt)
+    kernel = functools.partial(_kernel, n_bits=n_bits, n_planes=D,
+                               n_kchunks=Kt, relu=relu)
     out, used = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, block_m, K), lambda i, j, d: (d, i, 0)),
-            pl.BlockSpec((K, block_n), lambda i, j, d: (0, j)),
+            pl.BlockSpec((1, block_m, bk), lambda i, j, d, c: (d, i, c)),
+            pl.BlockSpec((bk, block_n), lambda i, j, d, c: (c, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, d, c: (c, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, d, c: (0, j)),
         ],
         out_specs=[
-            pl.BlockSpec((block_m, block_n), lambda i, j, d: (i, j)),
-            pl.BlockSpec((1, 1), lambda i, j, d: (i, j)),
+            pl.BlockSpec((block_m, block_n), lambda i, j, d, c: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j, d, c: (i, j)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((M, N), jnp.float32),
@@ -133,5 +205,30 @@ def dslot_matmul_pallas(planes: jax.Array, w: jax.Array, *, n_bits: int = 8,
             pltpu.SMEM((1,), jnp.int32),                   # termination flag
         ],
         interpret=interpret,
-    )(planes, w)
+    )(planes, w, suffix_colsum, total_colsum)
     return DslotMatmulOut(out=out, planes_used=used)
+
+
+def dslot_matmul_pallas_batched(planes: jax.Array, w: jax.Array, *,
+                                n_bits: int = 8, relu: bool = True,
+                                block_m: int = 128, block_n: int = 128,
+                                block_k: int | None = None,
+                                interpret: bool = True) -> DslotMatmulOut:
+    """Batched entry point: planes (B, D, M, K) sharing one weight matrix.
+
+    The batch axis is folded into M — with ``M % block_m == 0`` every output
+    tile lies inside a single batch element, so results and per-tile
+    termination are identical to B independent kernel launches, but the grid
+    stays one sequential sweep.  Returns out (B, M, N) and planes_used
+    (B, M/bm, N/bn).
+    """
+    B, D, M, K = planes.shape
+    assert M % block_m == 0, (M, block_m)
+    flat = jnp.moveaxis(planes, 1, 0).reshape(D, B * M, K)
+    r = dslot_matmul_pallas(flat, w, n_bits=n_bits, relu=relu,
+                            block_m=block_m, block_n=block_n,
+                            block_k=block_k, interpret=interpret)
+    N = r.out.shape[-1]
+    return DslotMatmulOut(
+        out=r.out.reshape(B, M, N),
+        planes_used=r.planes_used.reshape(B, M // block_m, -1))

@@ -28,7 +28,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .dslot_matmul import dslot_matmul_pallas
+from .dslot_matmul import _pad_to, dslot_matmul_pallas, select_block_k
 from .ref import dslot_matmul_ref, make_planes
 
 __all__ = ["DslotStats", "dslot_matmul", "quantize_activations"]
@@ -51,58 +51,75 @@ def quantize_activations(x: jax.Array, n_bits: int = 8, signed: bool = False
     return q, step
 
 
-def _pad_to(x: jax.Array, m: int, axis: int) -> jax.Array:
-    r = (-x.shape[axis]) % m
-    if r == 0:
-        return x
-    pads = [(0, 0)] * x.ndim
-    pads[axis] = (0, r)
-    return jnp.pad(x, pads)
-
-
 def _jnp_path(planes: jax.Array, w: jax.Array, n_bits: int, relu: bool,
-              block_m: int, block_n: int):
-    """Reference evaluation + vectorized termination accounting.
+              block_m: int, block_n: int, block_k: int | None):
+    """Reference evaluation + termination accounting.
 
     Computes every plane (no skipping — this is CPU) but derives the exact
     per-tile ``planes_used`` the Pallas kernel would report, by replaying the
-    bound check over the plane-wise cumulative accumulators.
+    chunk-aware bound check in the kernel's (plane outer, K-chunk inner)
+    iteration order.  A ``lax.scan`` over the D*Kt steps keeps peak memory at
+    O(M*N) regardless of how small ``block_k`` is (only the per-step per-tile
+    dead flags, (D*Kt, Mt, Nt) booleans, are stacked).
     """
     D, M, K = planes.shape
     N = w.shape[1]
+    bk = block_k or select_block_k(K, block_m, block_n, 4)
+    if K % bk:
+        planes = _pad_to(planes, bk, axis=2)
+        w = _pad_to(w, bk, axis=0)
+        K = w.shape[0]
+    Kt = K // bk
+    Mt, Nt = M // block_m, N // block_n
     wf = w.astype(jnp.float32)
+    w_chunks = wf.reshape(Kt, bk, N)
+    # int8 plane chunks in step order (d outer, c inner): (D*Kt, M, bk)
+    p_chunks = planes.reshape(D, M, Kt, bk).transpose(0, 2, 1, 3) \
+        .reshape(D * Kt, M, bk)
     scales = jnp.exp2(jnp.asarray(n_bits - 1, jnp.float32)
                       - jnp.arange(D, dtype=jnp.float32))
-    partial = jnp.einsum("dmk,kn->dmn", planes.astype(jnp.float32), wf,
-                         preferred_element_type=jnp.float32)
-    cum = jnp.cumsum(scales[:, None, None] * partial, axis=0)   # (D, M, N)
-    out = cum[-1]
-    if relu:
-        out = jnp.maximum(out, 0.0)
+    step_scale = jnp.repeat(scales, Kt)                         # (D*Kt,)
 
-    # Termination replay: tile (i,j) is dead after plane d if every element's
-    # optimistic bound is < 0.
-    colsum = jnp.sum(jnp.abs(wf), axis=0)                       # (N,)
-    rem = (scales - 2.0 ** (n_bits - D))[:, None]               # (D, 1)
-    bound = cum + (rem * colsum[None, :])[:, None, :]           # (D, M, N)
-    Mt, Nt = M // block_m, N // block_n
-    tiles = bound.reshape(D, Mt, block_m, Nt, block_n)
-    dead_after = jnp.all(tiles < 0.0, axis=(2, 4))              # (D, Mt, Nt)
+    # Remaining-contribution bound after step (d, c):
+    # scale_d * suffix_colsum[c] + (scale_d - 2^(n-D)) * total.
+    chunk_colsum = jnp.sum(jnp.abs(w_chunks), axis=1)           # (Kt, N)
+    total = jnp.sum(chunk_colsum, axis=0)                       # (N,)
+    suffix = total[None, :] - jnp.cumsum(chunk_colsum, axis=0)  # (Kt, N)
+    step_rem = (scales[:, None, None] * suffix[None, :, :]
+                + ((scales - 2.0 ** (n_bits - D))[:, None, None]
+                   * total[None, None, :])).reshape(D * Kt, N)
+
+    def body(acc, step):
+        p, c, scale, rem = step
+        wc = jax.lax.dynamic_index_in_dim(w_chunks, c, keepdims=False)
+        acc = acc + scale * jnp.dot(p.astype(jnp.float32), wc,
+                                    preferred_element_type=jnp.float32)
+        bound = acc + rem[None, :]
+        dead = jnp.all(bound.reshape(Mt, block_m, Nt, block_n) < 0.0,
+                       axis=(1, 3))                             # (Mt, Nt)
+        return acc, dead
+
+    c_idx = jnp.tile(jnp.arange(Kt), D)                         # w chunk per step
+    acc, dead_after = jax.lax.scan(
+        body, jnp.zeros((M, N), jnp.float32),
+        (p_chunks, c_idx, step_scale, step_rem))
+    out = jnp.maximum(acc, 0.0) if relu else acc
     if relu:
         ever = jnp.any(dead_after, axis=0)
-        first = jnp.argmax(dead_after, axis=0)                  # 0-based plane
-        used = jnp.where(ever, first + 1, D).astype(jnp.int32)
+        first = jnp.argmax(dead_after, axis=0)                  # 0-based step
+        used = jnp.where(ever, first // Kt + 1, D).astype(jnp.int32)
     else:
         used = jnp.full((Mt, Nt), D, jnp.int32)
     return out, used
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "n_bits", "n_planes", "relu", "block_m", "block_n", "backend",
+    "n_bits", "n_planes", "relu", "block_m", "block_n", "block_k", "backend",
     "sort_columns", "signed"))
 def dslot_matmul(x: jax.Array, w: jax.Array, *, n_bits: int = 8,
                  n_planes: int | None = None, relu: bool = True,
                  block_m: int = 128, block_n: int = 128,
+                 block_k: int | None = None,
                  backend: str = "auto", sort_columns: bool = False,
                  signed: bool = False
                  ) -> tuple[jax.Array, DslotStats]:
@@ -114,10 +131,15 @@ def dslot_matmul(x: jax.Array, w: jax.Array, *, n_bits: int = 8,
     digit-decomposed; this matches the paper's serial x / parallel Y split).
     ``n_planes`` — runtime precision knob (D <= n_bits), the paper's
     "precision tuned at run time".
+    ``block_k`` — K chunk streamed through VMEM (None = auto-select the
+    largest chunk fitting the VMEM budget); both backends replay the same
+    chunk-aware termination bound, so ``planes_used`` agrees.
     """
     if backend == "auto":
         backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
-    D = n_planes or n_bits
+    # make_planes can only produce n_bits planes; clamp so planes_used /
+    # skipped_frac never report savings against planes that don't exist.
+    D = min(n_planes or n_bits, n_bits)
     M, K = x.shape
     N = w.shape[1]
 
@@ -135,11 +157,11 @@ def dslot_matmul(x: jax.Array, w: jax.Array, *, n_bits: int = 8,
     if backend == "pallas":
         out_p, used = dslot_matmul_pallas(
             planes_p, w_p, n_bits=n_bits, relu=relu,
-            block_m=block_m, block_n=block_n,
+            block_m=block_m, block_n=block_n, block_k=block_k,
             interpret=jax.default_backend() != "tpu")
-        out_p = out_p
     else:
-        out_p, used = _jnp_path(planes_p, w_p, n_bits, relu, block_m, block_n)
+        out_p, used = _jnp_path(planes_p, w_p, n_bits, relu,
+                                block_m, block_n, block_k)
 
     out = out_p[:M, :N] * step
     if perm is not None:

@@ -1,0 +1,7 @@
+"""Model-facing DSLOT layers: the one API every network uses to run a layer
+on the digit-plane engine (quantize -> MSDF planes -> kernel -> dequantize,
+with per-layer early-termination statistics)."""
+
+from .dslot import DslotConv2d, DslotDense, DslotLayerStats
+
+__all__ = ["DslotConv2d", "DslotDense", "DslotLayerStats"]

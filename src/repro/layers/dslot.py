@@ -1,0 +1,144 @@
+"""Unified DSLOT layer API: ``DslotDense`` and ``DslotConv2d``.
+
+Every model-facing use of the digit-plane engine goes through these two
+layers.  A layer owns the full lowering pipeline — quantize activations,
+encode MSDF digit planes, invoke the kernel (Pallas with per-tile early
+termination when ``use_pallas``, the chunk-aware jnp replay otherwise),
+dequantize — and surfaces per-call ``planes_used`` statistics both as a
+return value and through the ``repro.models.stats`` side channel (key
+``{name}.skipped_frac`` / ``{name}.planes_used_mean``), so serving and
+benchmark entry points can report the paper's energy-saving proxy per layer.
+
+Layers are frozen dataclasses (configuration only); parameters are plain
+dicts of jnp arrays like the rest of the model stack (``models/layers.py``).
+``DslotConv2d`` lowers convolution through ``core.conv.im2col`` so the conv
+SOPs hit exactly the same kernel datapath as dense layers — the DSLR-CNN
+extension of the paper's PE array to full CNN layers, at tile granularity.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.conv import im2col
+from repro.kernels.ops import DslotStats, dslot_matmul
+from repro.models import stats as stats_channel
+
+__all__ = ["DslotDense", "DslotConv2d", "DslotLayerStats"]
+
+
+class DslotLayerStats(NamedTuple):
+    name: str
+    planes_used: jax.Array       # (Mt, Nt) int32 — digit planes per tile
+    n_planes: int
+    skipped_frac: jax.Array      # scalar f32 — fraction of planes skipped
+
+    @classmethod
+    def of(cls, name: str, st: DslotStats) -> "DslotLayerStats":
+        return cls(name=name, planes_used=st.planes_used,
+                   n_planes=st.n_planes, skipped_frac=st.skipped_frac)
+
+
+def _record(name: str, st: DslotStats) -> None:
+    stats_channel.record(f"{name}.skipped_frac", st.skipped_frac)
+    stats_channel.record(f"{name}.planes_used_mean",
+                         jnp.mean(st.planes_used.astype(jnp.float32)))
+
+
+@dataclasses.dataclass(frozen=True)
+class DslotDense:
+    """Dense layer executed on the digit-plane DSLOT engine.
+
+    ``relu=True`` fuses the activation into the kernel and enables per-tile
+    early termination (the paper's Algorithm 1); ``relu=False`` (e.g. a
+    logits head) runs all planes.  ``use_pallas`` selects the Pallas kernel
+    (interpret mode off-TPU) over the vectorized jnp replay — identical
+    semantics and identical ``planes_used``, different execution.
+    """
+    d_in: int
+    d_out: int
+    name: str = "dslot_dense"
+    n_bits: int = 8
+    n_planes: int | None = None      # runtime precision knob (<= n_bits)
+    relu: bool = True
+    signed: bool = False             # activation quantization range
+    sort_columns: bool = False
+    block_m: int = 128
+    block_n: int = 128
+    block_k: int | None = None       # None = auto VMEM-budget selection
+    use_pallas: bool = False
+
+    def init(self, key, dtype=jnp.float32) -> dict:
+        w = jax.random.normal(key, (self.d_in, self.d_out),
+                              jnp.float32) * self.d_in ** -0.5
+        return {"w": w.astype(dtype)}
+
+    def apply(self, params: dict, x: jax.Array
+              ) -> tuple[jax.Array, DslotLayerStats]:
+        """x: (..., d_in) -> (..., d_out), plus per-tile plane statistics."""
+        lead = x.shape[:-1]
+        flat = x.reshape(-1, self.d_in).astype(jnp.float32)
+        y, st = dslot_matmul(
+            flat, params["w"].astype(jnp.float32),
+            n_bits=self.n_bits, n_planes=self.n_planes, relu=self.relu,
+            block_m=self.block_m, block_n=self.block_n, block_k=self.block_k,
+            backend="pallas" if self.use_pallas else "jnp",
+            sort_columns=self.sort_columns, signed=self.signed)
+        _record(self.name, st)
+        return (y.astype(x.dtype).reshape(*lead, self.d_out),
+                DslotLayerStats.of(self.name, st))
+
+
+@dataclasses.dataclass(frozen=True)
+class DslotConv2d:
+    """2-D convolution lowered to the DSLOT kernel via im2col.
+
+    Input (B, H, W, C), weights (k, k, C, M), valid padding.  The im2col
+    matrix (B*Ho*Wo, k*k*C) streams through the digit-plane matmul, so a
+    "tile" is a block of spatial output positions x output channels — the
+    tile-granular analogue of the paper's four-PE pooling group, and early
+    termination kills provably-ReLU-dead spatial regions per channel block.
+    """
+    in_channels: int
+    out_channels: int
+    kernel_size: int
+    stride: int = 1
+    name: str = "dslot_conv2d"
+    n_bits: int = 8
+    n_planes: int | None = None
+    relu: bool = True
+    signed: bool = False
+    sort_columns: bool = False
+    block_m: int = 128
+    block_n: int = 128
+    block_k: int | None = None
+    use_pallas: bool = False
+
+    def init(self, key, dtype=jnp.float32) -> dict:
+        k, c, m = self.kernel_size, self.in_channels, self.out_channels
+        fan_in = k * k * c
+        w = jax.random.normal(key, (k, k, c, m), jnp.float32) * fan_in ** -0.5
+        return {"w": w.astype(dtype)}
+
+    def apply(self, params: dict, x: jax.Array
+              ) -> tuple[jax.Array, DslotLayerStats]:
+        """x: (B, H, W, C) -> (B, Ho, Wo, M), plus plane statistics."""
+        B = x.shape[0]
+        k, c, m = self.kernel_size, self.in_channels, self.out_channels
+        assert x.shape[-1] == c, (x.shape, c)
+        cols = im2col(x.astype(jnp.float32), k, self.stride)
+        _, Ho, Wo, kkc = cols.shape
+        y, st = dslot_matmul(
+            cols.reshape(B * Ho * Wo, kkc),
+            params["w"].astype(jnp.float32).reshape(kkc, m),
+            n_bits=self.n_bits, n_planes=self.n_planes, relu=self.relu,
+            block_m=self.block_m, block_n=self.block_n, block_k=self.block_k,
+            backend="pallas" if self.use_pallas else "jnp",
+            sort_columns=self.sort_columns, signed=self.signed)
+        _record(self.name, st)
+        return (y.astype(x.dtype).reshape(B, Ho, Wo, m),
+                DslotLayerStats.of(self.name, st))

@@ -1,0 +1,1 @@
+"""models subpackage of the DSLOT-NN reproduction."""

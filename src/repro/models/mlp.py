@@ -48,17 +48,19 @@ def apply_mlp(p: Params, x: jax.Array, cfg) -> jax.Array:
 def _apply_mlp_dslot(p: Params, x: jax.Array, cfg) -> jax.Array:
     """Digit-serial inference path: fused up-proj + ReLU with early
     termination of provably-negative output tiles (paper Algorithm 1,
-    tile-granular TPU adaptation)."""
-    from repro.kernels.ops import dslot_matmul
+    tile-granular TPU adaptation), routed through the unified
+    ``repro.layers.DslotDense`` layer API."""
+    from repro.layers import DslotDense
     from . import stats
 
-    B = x.shape[:-1]
-    flat = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
     d = cfg.dslot
-    h, st = dslot_matmul(flat, p["up"]["w"].astype(jnp.float32),
-                         n_bits=d.n_bits, n_planes=d.n_planes, relu=True,
-                         block_m=d.block_m, block_n=d.block_n,
-                         sort_columns=d.sort_columns, signed=True)
+    layer = DslotDense(
+        d_in=cfg.d_model, d_out=cfg.d_ff, name="mlp_up_dslot",
+        n_bits=d.n_bits, n_planes=d.n_planes, relu=True, signed=True,
+        sort_columns=d.sort_columns, block_m=d.block_m, block_n=d.block_n,
+        block_k=d.block_k, use_pallas=d.use_pallas)
+    h, st = layer.apply(p["up"], x.astype(jnp.float32))
     stats.record("mlp_dslot_skipped_frac", st.skipped_frac)
-    h = h.astype(x.dtype).reshape(*B, cfg.d_ff)
-    return apply_dense(p["down"], h)
+    stats.record("mlp_dslot_planes_used",
+                 jnp.mean(st.planes_used.astype(jnp.float32)))
+    return apply_dense(p["down"], h.astype(x.dtype))

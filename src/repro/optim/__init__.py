@@ -1,0 +1,1 @@
+"""optim subpackage of the DSLOT-NN reproduction."""

@@ -1,0 +1,1 @@
+"""serve subpackage of the DSLOT-NN reproduction."""

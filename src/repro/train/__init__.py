@@ -1,0 +1,1 @@
+"""train subpackage of the DSLOT-NN reproduction."""

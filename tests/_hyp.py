@@ -1,0 +1,32 @@
+"""Optional-``hypothesis`` shim so the suite collects everywhere.
+
+``pip install -e .[test]`` brings in hypothesis and the property tests run
+for real.  Without the extra (the seed container, minimal envs), importing
+``given``/``settings``/``st`` from here makes the property tests SKIP at
+collection instead of erroring the whole module — the deterministic tests in
+the same files keep running either way.
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAS_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAS_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stands in for ``hypothesis.strategies``: any strategy constructor
+        returns None — only ever passed to the no-op ``given`` below."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def settings(*args, **kwargs):
+        return lambda f: f
+
+    def given(*args, **kwargs):
+        return pytest.mark.skip(reason="hypothesis not installed "
+                                       "(pip install -e .[test])")

@@ -3,7 +3,7 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis or skip-shim
 
 from repro.core import (fixed_to_sd, first_negative_prefix, sd_from_value,
                         sd_prefix_values, sd_split_posneg, sd_to_value)

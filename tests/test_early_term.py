@@ -3,7 +3,7 @@ contrast with LSB-first SIP (whose partial sums cannot be used this way)."""
 
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis or skip-shim
 
 from repro.core import (early_termination, fixed_to_sd, pe_schedule,
                         pe_sop_digits, sd_to_value, sip_sop_trace)

@@ -5,7 +5,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis or skip-shim
 
 from repro.kernels.dslot_matmul import dslot_matmul_pallas
 from repro.kernels.ops import dslot_matmul, quantize_activations

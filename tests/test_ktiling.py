@@ -1,0 +1,192 @@
+"""K-tiled digit-plane kernel: streaming correctness + chunk-aware early
+termination soundness (the bound must cover unseen K chunks as well as unseen
+digit planes), automatic block-size selection, bf16 weights, batched entry."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.dslot_matmul import (dslot_matmul_pallas,
+                                        dslot_matmul_pallas_batched,
+                                        select_block_k)
+from repro.kernels.ops import dslot_matmul
+from repro.kernels.ref import dslot_matmul_ref, make_planes
+
+
+def _dyadic_w(rng, K, N, denom=128, lo=-64, hi=65):
+    """Weights on the 2^-7 grid: every partial product and sum is exactly
+    representable in f32 (well under 2^24 ulps), so ANY accumulation order —
+    whole-K, chunked, reference — produces bit-identical results."""
+    return jnp.asarray(rng.integers(lo, hi, size=(K, N)) / denom, jnp.float32)
+
+
+@pytest.mark.parametrize("block_k", [None, 96, 48, 32, 16, 40])
+def test_bitexact_across_block_k_sweep(block_k):
+    rng = np.random.default_rng(0)
+    aq = jnp.asarray(rng.integers(0, 256, (64, 96)), jnp.int32)
+    w = _dyadic_w(rng, 96, 64)
+    planes = make_planes(aq, 8)
+    ref = dslot_matmul_ref(planes, w, 8, relu=True)
+    out = dslot_matmul_pallas(planes, w, n_bits=8, relu=True,
+                              block_m=32, block_n=32, block_k=block_k)
+    np.testing.assert_array_equal(np.asarray(out.out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("n_planes", [2, 4, 8])
+def test_bitexact_truncated_planes_tiled(n_planes):
+    """Runtime-precision truncation interacts with the chunk-aware bound via
+    the 2^(n_bits - D) term — must stay exact for every D."""
+    rng = np.random.default_rng(n_planes)
+    aq = jnp.asarray(rng.integers(-255, 256, (32, 64)), jnp.int32)
+    w = _dyadic_w(rng, 64, 32)
+    planes = make_planes(aq, 8, n_planes=n_planes)
+    ref = dslot_matmul_ref(planes, w, 8, relu=True)
+    out = dslot_matmul_pallas(planes, w, n_bits=8, relu=True,
+                              block_m=16, block_n=16, block_k=16)
+    np.testing.assert_array_equal(np.asarray(out.out), np.asarray(ref))
+
+
+def test_negative_first_chunk_positive_overall_must_not_terminate():
+    """Adversarial: the first K chunk drives every accumulator strongly
+    negative, later chunks recover to a positive SOP.  A bound unaware of the
+    unseen K chunks would kill the tile after chunk 0; the chunk-aware bound
+    must keep it alive and the result exact."""
+    rng = np.random.default_rng(42)
+    M, K, N, bk = 16, 32, 16, 16
+    aq = jnp.asarray(rng.integers(64, 256, (M, K)), jnp.int32)   # positive
+    w = np.empty((K, N), np.float32)
+    w[:bk] = -64 / 128.0      # chunk 0: uniformly negative columns
+    w[bk:] = 80 / 128.0       # chunk 1: stronger positive columns
+    w = jnp.asarray(w)
+    planes = make_planes(aq, 8)
+    ref = dslot_matmul_ref(planes, w, 8, relu=True)
+    assert float(jnp.min(ref)) > 0.0, "workload must be positive overall"
+    out = dslot_matmul_pallas(planes, w, n_bits=8, relu=True,
+                              block_m=16, block_n=16, block_k=bk)
+    # termination never fired (output positive everywhere) and all planes ran
+    np.testing.assert_array_equal(np.asarray(out.out), np.asarray(ref))
+    assert (np.asarray(out.planes_used) == 8).all()
+
+
+def test_tiled_planes_used_only_leq_untiled():
+    """Tiling adds intermediate bound checks whose bound coincides with the
+    untiled one at each plane's last chunk — so a tiled run may terminate a
+    tile EARLIER (mid-plane) but never later, and never changes the output."""
+    rng = np.random.default_rng(7)
+    aq = jnp.asarray(rng.integers(0, 256, (64, 96)), jnp.int32)
+    w = rng.normal(0, 0.04, (96, 64)).astype(np.float32)
+    w[:, :32] -= 0.08                       # clustered dead columns
+    planes = make_planes(aq, 8)
+    ref = dslot_matmul_ref(planes, jnp.asarray(w), 8, relu=True)
+    untiled = dslot_matmul_pallas(planes, jnp.asarray(w), n_bits=8,
+                                  relu=True, block_m=32, block_n=32,
+                                  block_k=96)
+    assert np.asarray(untiled.planes_used).min() < 8, \
+        "workload must actually terminate somewhere"
+    for bk in (48, 32, 16):
+        tiled = dslot_matmul_pallas(planes, jnp.asarray(w), n_bits=8,
+                                    relu=True, block_m=32, block_n=32,
+                                    block_k=bk)
+        np.testing.assert_allclose(np.asarray(tiled.out), np.asarray(ref),
+                                   atol=1e-2)
+        assert (np.asarray(tiled.planes_used)
+                <= np.asarray(untiled.planes_used)).all(), bk
+
+
+def test_terminated_tiles_are_zero_and_sound():
+    rng = np.random.default_rng(3)
+    aq = jnp.asarray(rng.integers(0, 256, (64, 64)), jnp.int32)
+    w = rng.normal(0, 0.04, (64, 64)).astype(np.float32)
+    w[:, :32] -= 0.08
+    planes = make_planes(aq, 8)
+    ref = np.asarray(dslot_matmul_ref(planes, jnp.asarray(w), 8, relu=True))
+    out = dslot_matmul_pallas(planes, jnp.asarray(w), n_bits=8, relu=True,
+                              block_m=32, block_n=32, block_k=16)
+    pu = np.asarray(out.planes_used)
+    assert pu.min() < 8
+    for i in range(pu.shape[0]):
+        for j in range(pu.shape[1]):
+            if pu[i, j] < 8:
+                tile = ref[i * 32:(i + 1) * 32, j * 32:(j + 1) * 32]
+                assert (tile == 0).all(), (i, j)
+
+
+def test_k_not_multiple_of_block_k_pads():
+    rng = np.random.default_rng(5)
+    aq = jnp.asarray(rng.integers(0, 256, (32, 72)), jnp.int32)  # 72 % 32 != 0
+    w = _dyadic_w(rng, 72, 32)
+    planes = make_planes(aq, 8)
+    ref = dslot_matmul_ref(planes, w, 8, relu=True)
+    out = dslot_matmul_pallas(planes, w, n_bits=8, relu=True,
+                              block_m=16, block_n=16, block_k=32)
+    np.testing.assert_array_equal(np.asarray(out.out), np.asarray(ref))
+
+
+def test_bf16_weights_tiled():
+    rng = np.random.default_rng(11)
+    aq = jnp.asarray(rng.integers(0, 256, (32, 64)), jnp.int32)
+    # 2^-7-grid values with tiny integer numerators are exact in bf16 too
+    w32 = _dyadic_w(rng, 64, 32)
+    wb = w32.astype(jnp.bfloat16)
+    assert (np.asarray(wb.astype(jnp.float32)) == np.asarray(w32)).all()
+    planes = make_planes(aq, 8)
+    ref = dslot_matmul_ref(planes, w32, 8, relu=True)
+    out = dslot_matmul_pallas(planes, wb, n_bits=8, relu=True,
+                              block_m=16, block_n=16, block_k=16)
+    np.testing.assert_array_equal(np.asarray(out.out), np.asarray(ref))
+
+
+def test_batched_entry_matches_per_sample():
+    rng = np.random.default_rng(13)
+    w = _dyadic_w(rng, 48, 32)
+    batch_planes = jnp.stack(
+        [make_planes(jnp.asarray(rng.integers(0, 256, (32, 48)), jnp.int32), 8)
+         for _ in range(3)])                                   # (B, D, M, K)
+    out = dslot_matmul_pallas_batched(batch_planes, w, n_bits=8, relu=True,
+                                      block_m=16, block_n=16, block_k=16)
+    assert out.out.shape == (3, 32, 32)
+    assert out.planes_used.shape == (3, 2, 2)
+    for b in range(3):
+        single = dslot_matmul_pallas(batch_planes[b], w, n_bits=8, relu=True,
+                                     block_m=16, block_n=16, block_k=16)
+        np.testing.assert_array_equal(np.asarray(out.out[b]),
+                                      np.asarray(single.out))
+        np.testing.assert_array_equal(np.asarray(out.planes_used[b]),
+                                      np.asarray(single.planes_used))
+
+
+def test_select_block_k_respects_budget():
+    # whole K fits comfortably -> untiled fast path
+    assert select_block_k(256, 128, 128, 4) == 256
+    # constrained budget -> lane-aligned chunk strictly below K
+    bk = select_block_k(65536, 128, 128, 4, budget=2 * 1024 * 1024)
+    assert bk < 65536 and bk % 128 == 0 and bk >= 128
+    fixed = 2 * 128 * 128 * 4 + 2 * 128 * 4
+    assert fixed + bk * (128 + 128 * 4) <= 2 * 1024 * 1024
+    # an output tile that alone blows the budget is a hard error
+    with pytest.raises(ValueError):
+        select_block_k(1024, 1024, 1024, 4, budget=1024 * 1024)
+
+
+def test_explicit_block_k_over_budget_raises():
+    planes = make_planes(jnp.ones((128, 65536), jnp.int32), 8)
+    w = jnp.ones((65536, 128), jnp.float32)
+    with pytest.raises(ValueError, match="VMEM budget"):
+        dslot_matmul_pallas(planes, w, block_m=128, block_n=128,
+                            block_k=65536)
+
+
+def test_ops_backends_agree_under_tiling():
+    rng = np.random.default_rng(17)
+    x = jnp.asarray(np.maximum(rng.normal(0.2, 0.5, (64, 48)), 0),
+                    jnp.float32)
+    w = rng.normal(0, 0.04, (48, 64)).astype(np.float32)
+    w[:, :32] -= 0.08
+    for bk in (None, 16, 24):
+        o1, s1 = dslot_matmul(x, jnp.asarray(w), backend="jnp",
+                              block_m=32, block_n=32, block_k=bk)
+        o2, s2 = dslot_matmul(x, jnp.asarray(w), backend="pallas",
+                              block_m=32, block_n=32, block_k=bk)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-4)
+        np.testing.assert_array_equal(np.asarray(s1.planes_used),
+                                      np.asarray(s2.planes_used))

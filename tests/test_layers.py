@@ -1,0 +1,121 @@
+"""Unified layer API: DslotDense / DslotConv2d lower through the digit-plane
+kernel (both backends), match float references up to quantization, and
+surface per-layer planes_used statistics; the model stack (MNIST CNN, MLP
+dslot mode) routes through them."""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.layers import DslotConv2d, DslotDense
+from repro.models import stats
+
+
+def test_dense_matches_float_reference_both_backends():
+    key = jax.random.PRNGKey(0)
+    layer = DslotDense(48, 64, name="d", block_m=32, block_n=32)
+    p = layer.init(key)
+    x = jnp.maximum(jax.random.normal(jax.random.PRNGKey(1), (3, 10, 48)), 0)
+    ref = jnp.maximum(x.reshape(-1, 48) @ p["w"], 0).reshape(3, 10, 64)
+    y_jnp, st_jnp = layer.apply(p, x)
+    assert y_jnp.shape == (3, 10, 64)
+    assert float(jnp.abs(y_jnp - ref).max()) < 0.02 * float(ref.max())
+
+    pallas = dataclasses.replace(layer, use_pallas=True, block_k=16)
+    y_pl, st_pl = pallas.apply(p, x)
+    np.testing.assert_allclose(np.asarray(y_pl), np.asarray(y_jnp),
+                               atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(st_jnp.planes_used),
+                                  np.asarray(st_pl.planes_used))
+
+
+def test_dense_no_relu_head_runs_all_planes():
+    layer = DslotDense(32, 16, name="head", relu=False,
+                       block_m=16, block_n=16)
+    p = layer.init(jax.random.PRNGKey(2))
+    x = jnp.maximum(jax.random.normal(jax.random.PRNGKey(3), (16, 32)), 0)
+    y, st = layer.apply(p, x)
+    ref = x @ p["w"]
+    assert float(jnp.abs(y - ref).max()) < 0.02 * float(jnp.abs(ref).max())
+    assert (np.asarray(st.planes_used) == st.n_planes).all()
+
+
+def test_conv2d_matches_lax_conv_multichannel_strided():
+    key = jax.random.PRNGKey(4)
+    layer = DslotConv2d(3, 4, 3, stride=2, name="c",
+                        block_m=16, block_n=4)
+    p = layer.init(key)
+    x = jax.random.uniform(jax.random.PRNGKey(5), (2, 9, 9, 3))
+    y, st = layer.apply(p, x)
+    ref = jnp.maximum(jax.lax.conv_general_dilated(
+        x, p["w"], (2, 2), "VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")), 0)
+    assert y.shape == ref.shape == (2, 4, 4, 4)
+    assert float(jnp.abs(y - ref).max()) < 0.02 * float(ref.max())
+    assert st.n_planes == 8
+
+
+def test_layer_stats_side_channel():
+    layer = DslotDense(32, 32, name="probe", block_m=16, block_n=16)
+    p = layer.init(jax.random.PRNGKey(6))
+    x = jnp.maximum(jax.random.normal(jax.random.PRNGKey(7), (16, 32)), 0)
+    with stats.collect() as sink:
+        layer.apply(p, x)
+    assert "probe.skipped_frac" in sink
+    assert "probe.planes_used_mean" in sink
+
+
+def test_dense_early_termination_on_dead_columns():
+    rng = np.random.default_rng(8)
+    w = rng.normal(0, 0.04, (64, 64)).astype(np.float32)
+    w[:, :32] -= 0.08                       # clustered dead columns
+    layer = DslotDense(64, 64, name="dead", block_m=32, block_n=32,
+                       block_k=16)
+    x = jnp.asarray(np.maximum(rng.normal(0.3, 0.4, (64, 64)), 0),
+                    jnp.float32)
+    y, st = layer.apply({"w": jnp.asarray(w)}, x)
+    assert float(st.skipped_frac) > 0.0
+    ref = np.maximum(np.asarray(x) @ w, 0)
+    assert np.abs(np.asarray(y) - ref).max() < 0.02 * max(ref.max(), 1.0)
+
+
+def test_mnist_forward_dslot_routes_through_layers():
+    from repro.configs.dslot_mnist import CONFIG
+    from repro.core.mnist_cnn import forward, forward_dslot, init_cnn
+
+    params = init_cnn(CONFIG, jax.random.PRNGKey(0))
+    imgs = jax.random.uniform(jax.random.PRNGKey(1), (4, 28, 28))
+    ref = forward(params, imgs, CONFIG)
+    res = forward_dslot(params, imgs, CONFIG, block_m=32, block_k=64)
+    assert set(res.layer_stats) == {"conv1", "dense1"}
+    for st_ in res.layer_stats.values():
+        assert st_.planes_used.dtype == jnp.int32
+        assert st_.n_planes == CONFIG.n_bits
+    agree = float(jnp.mean(jnp.argmax(res.logits, -1)
+                           == jnp.argmax(ref, -1)))
+    assert agree == 1.0
+    # logits head has no ReLU: every plane must run
+    assert (np.asarray(res.layer_stats["dense1"].planes_used)
+            == CONFIG.n_bits).all()
+
+
+def test_mlp_dslot_mode_uses_layer_api():
+    from repro.configs.base import DslotConfig
+    from repro.configs.registry import ARCHS
+    from repro.models.mlp import apply_mlp, init_mlp
+
+    cfg = dataclasses.replace(
+        ARCHS["olmo-1b"].reduced(), act="relu", glu=False,
+        dslot=DslotConfig(enabled=True, block_m=32, block_n=32, block_k=16))
+    p = init_mlp(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 4, cfg.d_model),
+                          jnp.float32) * 0.5
+    with stats.collect() as sink:
+        y = apply_mlp(p, x, cfg)
+    assert "mlp_up_dslot.skipped_frac" in sink
+    assert "mlp_dslot_planes_used" in sink
+    y_ref = apply_mlp(p, x, dataclasses.replace(cfg, dslot=DslotConfig()))
+    rel = float(jnp.abs(y - y_ref).max() / jnp.abs(y_ref).max())
+    assert rel < 0.1, rel

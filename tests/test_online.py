@@ -3,7 +3,7 @@ invariants (paper §II-A, DESIGN.md §4.1)."""
 
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis or skip-shim
 
 from repro.core import (DELTA_ADD, DELTA_MULT, fixed_to_sd, online_add,
                         online_add_tree, online_mult_sp, sd_to_value)

@@ -4,7 +4,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis or skip-shim
 
 from repro.configs.mamba2_780m import CONFIG as MAMBA
 from repro.configs.recurrentgemma_2b import CONFIG as RG
