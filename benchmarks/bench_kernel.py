@@ -5,8 +5,14 @@ network through the unified layer API — the software proxy for the paper's
 energy-saving claim.  Wall-times are for the jnp path (CPU container; Pallas
 numbers are structural — interpret mode is not a performance proxy).
 
+``--sweep-precision`` measures the prepare/execute split: calls/s of
+``dslot_execute`` against cached weight tables vs the fused per-call
+``dslot_matmul`` (which re-sorts/re-encodes the weight side every call),
+plus skipped-frac per runtime precision — written to ``BENCH_precision.json``.
+
 Standalone CLI (used by the CI smoke job):
     python benchmarks/bench_kernel.py [--smoke] [--json out.json]
+        [--sweep-precision [--precision-json BENCH_precision.json]]
 """
 
 from __future__ import annotations
@@ -19,6 +25,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops
 from repro.kernels.ops import dslot_matmul
 
 
@@ -103,13 +110,108 @@ def run(smoke: bool = False) -> list[str]:
     return rows
 
 
+def run_precision_sweep(smoke: bool = False) -> dict:
+    """Prepare-once/execute-many amortization + skipped-frac per precision.
+
+    Two costs are measured per precision D:
+
+    * ``first_call_us`` — latency of the FIRST call at a new precision.
+      The fused path takes D as a static argument, so every precision is a
+      fresh trace + compile; ``dslot_execute`` takes it as a runtime value
+      against cached weight tables, so switching precision costs one normal
+      dispatch.  This is the serving-path win: precision becomes a
+      per-request parameter instead of a recompile.
+    * ``steady_us`` — steady-state per-call latency (jnp backend on CPU;
+      note the split path always scans ``n_bits`` plane chunks with masked
+      digits — on TPU the Pallas kernel predicates those passes off).
+    """
+    rng = np.random.default_rng(0)
+    M = K = N = 64 if smoke else 256
+    bm = bn = 32 if smoke else 64
+    bk = K // 4
+    x = jnp.asarray(np.maximum(rng.normal(0.3, 0.4, (M, K)), 0), jnp.float32)
+    w = rng.normal(0, 0.05, (K, N)).astype(np.float32)
+    w[:, rng.permutation(N)[:N // 2]] -= 0.10          # dead columns
+    w = jnp.asarray(w)
+    iters = 3 if smoke else 10
+
+    # fused baseline: first call per precision = fresh trace + compile
+    fused_first, fused_steady = {}, {}
+    for D in (8, 6, 4, 2):
+        t0 = time.perf_counter()
+        dslot_matmul(x, w, backend="jnp", n_planes=D, sort_columns=True,
+                     block_m=bm, block_n=bn, block_k=bk)[0] \
+            .block_until_ready()
+        fused_first[D] = (time.perf_counter() - t0) * 1e6
+        fused_steady[D] = _timeit(
+            dslot_matmul, x, w, backend="jnp", n_planes=D,
+            sort_columns=True, block_m=bm, block_n=bn, block_k=bk,
+            iters=iters)
+
+    n0 = ops.prepare_call_count()
+    t0 = time.perf_counter()
+    prep = ops.dslot_prepare(w, relu=True, sort_columns=True, block_m=bm,
+                             block_n=bn, block_k=bk, backend="jnp")
+    prep = prep.with_scale(ops.calibrate_scale(x))
+    prepare_us = (time.perf_counter() - t0) * 1e6
+    prepares = ops.prepare_call_count() - n0
+
+    ops.dslot_execute(prep, x, n_planes=8)[0].block_until_ready()  # warm
+    n1 = ops.prepare_call_count()
+    sweep = []
+    for D in (8, 6, 4, 2):
+        t0 = time.perf_counter()
+        out, st = ops.dslot_execute(prep, x, n_planes=D)
+        out.block_until_ready()
+        ex_first = (time.perf_counter() - t0) * 1e6
+        ex_us = _timeit(ops.dslot_execute, prep, x, n_planes=D, iters=iters)
+        ref = jnp.maximum(x @ w, 0)
+        rel = float(jnp.abs(out - ref).mean()
+                    / (jnp.abs(ref).mean() + 1e-9))
+        sweep.append({
+            "n_planes": D,
+            "first_call_us": {"fused": fused_first[D], "execute": ex_first},
+            "precision_switch_speedup": fused_first[D] / ex_first,
+            "steady_us": {"fused": fused_steady[D], "execute": ex_us},
+            "execute_calls_per_s": 1e6 / ex_us,
+            "skipped_frac": float(st.skipped_frac),
+            "planes_used_mean": float(jnp.mean(
+                st.planes_used.astype(jnp.float32))),
+            "rel_err_vs_float": rel,
+        })
+    assert ops.prepare_call_count() == n1, \
+        "execute sweep must not re-prepare weights"
+    return {"smoke": smoke, "shape": [M, K, N], "block": [bm, bn, bk],
+            "prepares": prepares, "prepare_us": prepare_us, "sweep": sweep}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes (CI smoke job)")
     ap.add_argument("--json", type=str, default=None,
                     help="also write rows as JSON to this path")
+    ap.add_argument("--sweep-precision", action="store_true",
+                    help="measure prepare-once/execute-many amortization "
+                         "and skipped-frac per runtime precision")
+    ap.add_argument("--precision-json", type=str,
+                    default="BENCH_precision.json",
+                    help="output path for the --sweep-precision report")
     args = ap.parse_args()
+    if args.sweep_precision:
+        report = run_precision_sweep(smoke=args.smoke)
+        print("n_planes,switch_us_fused,switch_us_execute,switch_speedup,"
+              "steady_us_execute,skipped_frac")
+        for row in report["sweep"]:
+            print(f"{row['n_planes']},{row['first_call_us']['fused']:.0f},"
+                  f"{row['first_call_us']['execute']:.0f},"
+                  f"{row['precision_switch_speedup']:.1f},"
+                  f"{row['steady_us']['execute']:.0f},"
+                  f"{row['skipped_frac']:.4f}")
+        with open(args.precision_json, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"wrote {args.precision_json}")
+        return
     rows = run(smoke=args.smoke)
     print("name,value,derived")
     for row in rows:

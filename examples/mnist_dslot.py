@@ -3,24 +3,33 @@
 train the bias-free 5x5 CNN, then run its conv+ReLU+maxpool layers through
 the DSLOT-NN digit-serial engine, reporting per-class negative-activation
 rates (Fig. 8) and cycle savings (Fig. 9), plus the SIP baseline comparison.
-The whole network is then re-run through the unified layer API
-(``DslotConv2d``/``DslotDense`` -> digit-plane kernel) with per-layer
-``planes_used`` statistics — ``--use-pallas`` executes the Pallas kernel
-(interpret mode on CPU), ``--block-k`` streams weights in K chunks.
+
+The whole network then goes through the prepare/execute split: the trained
+weights are lowered ONCE (``prepare_cnn`` — column sorts, block geometry,
+termination tables), activation scales are fixed from a calibration batch
+(``calibrate_cnn``), and the same prepared state serves every request — a
+runtime precision sweep re-executes at 8..2 digit planes without ever
+re-preparing (the paper's "precision tuned at run-time" as a request
+parameter).  Per-precision accuracy and planes-skipped are printed and
+optionally written as JSON (the CI artifact).
 
 Run:  PYTHONPATH=src python examples/mnist_dslot.py [--per-class 30]
-          [--use-pallas] [--block-k 64] [--n-planes 8]
+          [--use-pallas] [--block-k 64] [--n-planes 8] [--smoke]
+          [--json planes.json]
 """
 
 import argparse
+import json
 
 import numpy as np
 import jax.numpy as jnp
 
 from repro.configs.dslot_mnist import CONFIG
 from repro.core import dslot_conv2d_stats, sip_conv2d, table1_model
-from repro.core.mnist_cnn import forward, forward_dslot, train_cnn
+from repro.core.mnist_cnn import (calibrate_cnn, forward, forward_dslot,
+                                  prepare_cnn, train_cnn)
 from repro.data.mnist import synth_mnist
+from repro.kernels import ops
 
 
 def main():
@@ -32,25 +41,33 @@ def main():
                     help="K chunk size streamed through VMEM (None = auto)")
     ap.add_argument("--n-planes", type=int, default=None,
                     help="runtime precision knob (digit planes <= n_bits)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny end-to-end run for CI (fewer samples/epochs)")
+    ap.add_argument("--json", type=str, default=None,
+                    help="write the per-precision planes-skipped sweep here")
     args = ap.parse_args()
+    if args.smoke:
+        args.per_class = min(args.per_class, 12)
+    epochs = 3 if args.smoke else 20
 
     imgs, labels = synth_mnist(args.per_class + 8, seed=0)
     n_eval = 8 * 10
     params, acc = train_cnn(CONFIG, imgs[:-n_eval], labels[:-n_eval],
-                            epochs=20, lr=2e-2)
+                            epochs=epochs, lr=2e-2)
     print(f"trained bias-free CNN (synthetic MNIST): accuracy {acc:.1%}")
 
     ex, ey = imgs[-n_eval:], labels[-n_eval:]
-    print("\nclass  neg-rate  cycles-saved   (paper Fig. 8 / Fig. 9)")
-    rates = []
-    for d in range(10):
-        res = dslot_conv2d_stats(jnp.asarray(ex[ey == d]),
-                                 jnp.asarray(params.conv))
-        r = float(res.report.negative_rate)
-        s = float(jnp.mean(res.report.savings_frac))
-        rates.append(r)
-        print(f"  {d}     {r:6.1%}     {s:6.1%}")
-    print(f"mean negative rate {np.mean(rates):.1%} (paper: ~12.5%)")
+    if not args.smoke:
+        print("\nclass  neg-rate  cycles-saved   (paper Fig. 8 / Fig. 9)")
+        rates = []
+        for d in range(10):
+            res = dslot_conv2d_stats(jnp.asarray(ex[ey == d]),
+                                     jnp.asarray(params.conv))
+            r = float(res.report.negative_rate)
+            s = float(jnp.mean(res.report.savings_frac))
+            rates.append(r)
+            print(f"  {d}     {r:6.1%}     {s:6.1%}")
+        print(f"mean negative rate {np.mean(rates):.1%} (paper: ~12.5%)")
 
     # bit-exactness vs the Stripes SIP baseline
     res = dslot_conv2d_stats(jnp.asarray(ex[:16]), jnp.asarray(params.conv))
@@ -63,26 +80,49 @@ def main():
           f"GOPS/W vs SIP {m['stripes'].gops_per_watt:.1f} GOPS/W "
           f"(+{m['dslot'].gops_per_watt/m['stripes'].gops_per_watt-1:.0%})")
 
-    # full network through the unified layer API (digit-plane kernel)
+    # ---- prepare once / execute many: the weight-stationary serving path
     backend = "pallas(interpret)" if args.use_pallas else "jnp"
-    print(f"\nlayer-API forward ({backend}, block_k={args.block_k}, "
-          f"n_planes={args.n_planes or CONFIG.n_bits}):")
     xe = jnp.asarray(ex)
-    res = forward_dslot(params, xe, CONFIG, use_pallas=args.use_pallas,
-                        block_k=args.block_k, n_planes=args.n_planes,
-                        block_m=32)
     ref_logits = forward(params, xe, CONFIG)
-    agree = float(jnp.mean(jnp.argmax(res.logits, -1)
-                           == jnp.argmax(ref_logits, -1)))
-    dslot_acc = float(jnp.mean(jnp.argmax(res.logits, -1)
-                               == jnp.asarray(ey)))
-    for name, st in res.layer_stats.items():
-        used = np.asarray(st.planes_used)
-        print(f"  {name:8s} planes_used mean {used.mean():.2f}/{st.n_planes}"
-              f"  skipped {float(st.skipped_frac):6.1%}"
-              f"  tiles {used.shape[0]}x{used.shape[1]}")
-    print(f"  argmax agreement with float forward: {agree:.1%}; "
-          f"digit-serial accuracy {dslot_acc:.1%}")
+    n0 = ops.prepare_call_count()
+    prep = prepare_cnn(params, CONFIG, use_pallas=args.use_pallas,
+                       block_k=args.block_k, block_m=32)
+    prep = calibrate_cnn(prep, xe[:16], CONFIG)
+    n_prepares = ops.prepare_call_count() - n0
+    print(f"\nprepared {n_prepares} layers once ({backend}, "
+          f"block_k={args.block_k}); runtime precision sweep:")
+
+    sweep = []
+    planes_list = ([args.n_planes] if args.n_planes
+                   else list(range(CONFIG.n_bits, 1, -2)))
+    for n_planes in planes_list:
+        res = forward_dslot(prep, xe, CONFIG, n_planes=n_planes)
+        agree = float(jnp.mean(jnp.argmax(res.logits, -1)
+                               == jnp.argmax(ref_logits, -1)))
+        dslot_acc = float(jnp.mean(jnp.argmax(res.logits, -1)
+                                   == jnp.asarray(ey)))
+        row = {"n_planes": n_planes, "argmax_agreement": agree,
+               "accuracy": dslot_acc, "layers": {}}
+        for name, st in res.layer_stats.items():
+            used = np.asarray(st.planes_used)
+            row["layers"][name] = {
+                "planes_used_mean": float(used.mean()),
+                "skipped_frac": float(st.skipped_frac),
+            }
+            print(f"  D={n_planes}  {name:8s} planes_used "
+                  f"{used.mean():5.2f}  skipped "
+                  f"{float(st.skipped_frac):6.1%}", end="")
+        print(f"   acc {dslot_acc:5.1%}  agree {agree:5.1%}")
+        sweep.append(row)
+    assert ops.prepare_call_count() - n0 == n_prepares, \
+        "precision sweep must not re-prepare weights"
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"smoke": args.smoke, "backend": backend,
+                       "train_accuracy": acc, "prepares": n_prepares,
+                       "precision_sweep": sweep}, f, indent=2)
+        print(f"wrote per-precision planes-skipped sweep to {args.json}")
 
 
 if __name__ == "__main__":

@@ -38,14 +38,24 @@ def main():
     dcfg = dataclasses.replace(cfg, dslot=DslotConfig(
         enabled=True, n_planes=8, block_m=16, block_n=16))
     dmodel = build_model(dcfg)
-    toks2 = generate(dmodel, params, batch, 8)
+    dparams = dmodel.prepare_dslot(params)      # weight-stationary lowering,
+    toks2 = generate(dmodel, dparams, batch, 8)  # done once for all requests
     same = bool(jnp.mean((toks == toks2).astype(jnp.float32)) > 0.9)
     print("dslot-mode generation agrees with dense:", same)
-    # skipped-pass statistics from one eager forward (stats recorded inside
-    # the scanned decode loop would be traced values, not observables)
+    # per-request runtime precision + planes-executed accounting
+    toks3, dstats = generate(dmodel, dparams, batch, 8,
+                             n_planes=jnp.asarray([8, 8, 4, 2], jnp.int32),
+                             return_stats=True)
+    if dstats:
+        used = np.asarray(dstats["planes_used_mean"])
+        skip = np.asarray(dstats["skipped_frac"])
+        for i in range(used.shape[0]):
+            print(f"  request {i}: planes/row {used[i]:.2f}, "
+                  f"skipped {skip[i]:.1%}")
+    # eager forward statistics through the (scan-safe) stats side channel
     with stats.collect() as sink:
-        dmodel.forward(params, batch)
-    vals = [float(v) for v in jax.device_get(
+        dmodel.forward(dparams, batch)
+    vals = [float(jnp.mean(v)) for v in jax.device_get(
         sink.get("mlp_dslot_skipped_frac", []))]
     if vals:
         print(f"digit-serial MLP calls: {len(vals)}, mean skipped MXU "

@@ -23,6 +23,8 @@ class DslotConfig:
     block_n: int = 128
     block_k: int | None = None  # K chunk streamed through VMEM (None = auto)
     use_pallas: bool = False    # Pallas kernel (interpret off-TPU) vs jnp
+    act_scale: float | None = None  # calibrated fixed activation-quant step
+                                # stored at prepare time (None = per-call max)
 
 
 @dataclass(frozen=True)

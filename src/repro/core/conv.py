@@ -42,15 +42,31 @@ class DSLOTConvResult(NamedTuple):
     w_scale: jax.Array
 
 
-def im2col(x: jax.Array, k: int, stride: int = 1) -> jax.Array:
+def im2col(x: jax.Array, k: int, stride: int = 1,
+           padding: str = "valid") -> jax.Array:
     """Multi-channel im2col: (B, H, W, C) -> (B, Ho, Wo, k*k*C).
 
-    Valid padding.  Column ordering is (ki, kj, c) — matmul against weights
-    reshaped from (k, k, C, M) to (k*k*C, M) reproduces a conventional
-    convolution.  This is the lowering used by ``layers.DslotConv2d`` to route
-    conv layers through the digit-plane matmul kernel.
+    ``padding``: "valid" (no pad) or "same" (zero-pad so that
+    Ho = ceil(H / stride), matching ``jax.lax.conv_general_dilated`` with
+    SAME padding — the standard CNN-stack convention).  Column ordering is
+    (ki, kj, c) — matmul against weights reshaped from (k, k, C, M) to
+    (k*k*C, M) reproduces a conventional convolution.  This is the lowering
+    used by ``layers.DslotConv2d`` to route conv layers through the
+    digit-plane matmul kernel.
     """
+    if padding not in ("valid", "same"):
+        raise ValueError(f"padding must be 'valid' or 'same', got {padding!r}")
     B, H, W, C = x.shape
+    if padding == "same":
+        # XLA SAME: total pad = (ceil(H/s) - 1) * s + k - H, split low/high
+        # with the extra pixel on the high side.
+        Ho = -(-H // stride)
+        Wo = -(-W // stride)
+        ph = max((Ho - 1) * stride + k - H, 0)
+        pw = max((Wo - 1) * stride + k - W, 0)
+        x = jnp.pad(x, ((0, 0), (ph // 2, ph - ph // 2),
+                        (pw // 2, pw - pw // 2), (0, 0)))
+        H, W = x.shape[1], x.shape[2]
     Ho = (H - k) // stride + 1
     Wo = (W - k) // stride + 1
     i = (stride * jnp.arange(Ho)[:, None, None, None]

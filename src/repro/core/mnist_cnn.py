@@ -2,10 +2,11 @@
 
 conv 5x5 (no bias, per §III-A) -> ReLU -> 2x2 maxpool -> dense -> softmax.
 Trained in float (``forward``/``train_cnn``); inference runs through the
-DSLOT digit-plane engine via the unified layer API (``forward_dslot``:
-``layers.DslotConv2d`` for conv+ReLU, ``layers.DslotDense`` for the head),
-reporting per-layer ``planes_used`` — the TPU-tile analogue of the paper's
-Fig. 8/9 statistics.  The cycle-accurate per-window simulation of the FPGA
+DSLOT digit-plane engine via the unified layer API with a prepare/execute
+split: ``prepare_cnn`` lowers the trained weights once (+ optional
+``calibrate_cnn`` for fixed activation scales), ``forward_dslot`` executes
+at a per-call runtime precision, reporting per-layer ``planes_used`` — the
+TPU-tile analogue of the paper's Fig. 8/9 statistics.  The cycle-accurate per-window simulation of the FPGA
 datapath lives in ``core.conv.dslot_conv2d_stats``.
 """
 
@@ -23,6 +24,17 @@ from repro.configs.dslot_mnist import MnistCNNConfig
 class CNNParams(NamedTuple):
     conv: jax.Array    # (M, k, k)
     dense: jax.Array   # (M*12*12, 10)
+
+
+class PreparedCNN(NamedTuple):
+    """Prepared (weight-stationary) DSLOT state of the MNIST CNN: layer
+    configs + params with attached ``DslotWeights``.  Build once with
+    ``prepare_cnn``; optionally ``calibrate_cnn``; then every
+    ``forward_dslot`` call is pure execution at a runtime precision."""
+    conv_layer: object                   # layers.DslotConv2d
+    head_layer: object                   # layers.DslotDense
+    conv_params: dict
+    head_params: dict
 
 
 class DslotForwardResult(NamedTuple):
@@ -53,11 +65,10 @@ def forward(params: CNNParams, images: jax.Array, cfg: MnistCNNConfig
     return x.reshape(x.shape[0], -1) @ params.dense
 
 
-def forward_dslot(params: CNNParams, images: jax.Array, cfg: MnistCNNConfig,
-                  *, use_pallas: bool = False, n_planes: int | None = None,
-                  block_k: int | None = None, block_m: int = 128,
-                  block_n: int = 8) -> DslotForwardResult:
-    """Inference through the digit-plane engine via the unified layer API.
+def prepare_cnn(params: CNNParams, cfg: MnistCNNConfig, *,
+                use_pallas: bool = False, block_k: int | None = None,
+                block_m: int = 128, block_n: int = 8) -> PreparedCNN:
+    """One-time DSLOT lowering of the trained CNN (weight-stationary).
 
     Every matmul-shaped layer routes through ``DslotConv2d``/``DslotDense``;
     the fused conv+ReLU gets per-tile early termination, the logits head
@@ -71,26 +82,66 @@ def forward_dslot(params: CNNParams, images: jax.Array, cfg: MnistCNNConfig,
     side = (cfg.image_size - k + 1) // cfg.pool
     conv = DslotConv2d(
         in_channels=1, out_channels=m, kernel_size=k, name="conv1",
-        n_bits=cfg.n_bits, n_planes=n_planes, relu=True,
+        n_bits=cfg.n_bits, relu=True,
         block_m=block_m, block_n=min(block_n, m), block_k=block_k,
         use_pallas=use_pallas)
     head = DslotDense(
         d_in=m * side * side, d_out=cfg.n_classes, name="dense1",
-        n_bits=cfg.n_bits, n_planes=n_planes, relu=False, signed=False,
+        n_bits=cfg.n_bits, relu=False, signed=False,
         block_m=block_m, block_n=min(block_n, cfg.n_classes),
         block_k=block_k, use_pallas=use_pallas)
-
     # conv weights (M, k, k) -> layer layout (k, k, 1, M)
     wc = jnp.transpose(params.conv, (1, 2, 0))[:, :, None, :]
-    x, conv_stats = conv.apply({"w": wc}, images[..., None])   # (B,Ho,Wo,M)
-    B, Ho, Wo, _ = x.shape
+    return PreparedCNN(conv_layer=conv, head_layer=head,
+                       conv_params=conv.prepare({"w": wc}),
+                       head_params=head.prepare({"w": params.dense}))
+
+
+def _pool_flatten(x: jax.Array, cfg: MnistCNNConfig) -> jax.Array:
+    """Fused-maxpool + layout shuffle between the two DSLOT layers."""
+    B, Ho, Wo, m = x.shape
     Hp, Wp = Ho // cfg.pool, Wo // cfg.pool
     x = x[:, :Hp * cfg.pool, :Wp * cfg.pool, :]
     x = x.reshape(B, Hp, cfg.pool, Wp, cfg.pool, m).max(axis=(2, 4))
     # float forward flattens (M, H, W); the dslot path is NHWC — match the
     # trained dense layout by moving channels first before flattening.
-    flat = jnp.transpose(x, (0, 3, 1, 2)).reshape(B, -1)
-    logits, head_stats = head.apply({"w": params.dense}, flat)
+    return jnp.transpose(x, (0, 3, 1, 2)).reshape(B, -1)
+
+
+def calibrate_cnn(prep: PreparedCNN, images: jax.Array,
+                  cfg: MnistCNNConfig) -> PreparedCNN:
+    """Fix both layers' activation-quantization scales from a sample batch,
+    removing the data-dependent ``jnp.max`` from the execute hot path."""
+    conv_params = prep.conv_layer.calibrate(prep.conv_params,
+                                            images[..., None])
+    x, _ = prep.conv_layer.apply(conv_params, images[..., None])
+    head_params = prep.head_layer.calibrate(prep.head_params,
+                                            _pool_flatten(x, cfg))
+    return prep._replace(conv_params=conv_params, head_params=head_params)
+
+
+def forward_dslot(params: CNNParams | PreparedCNN, images: jax.Array,
+                  cfg: MnistCNNConfig,
+                  *, use_pallas: bool = False, n_planes=None,
+                  block_k: int | None = None, block_m: int = 128,
+                  block_n: int = 8) -> DslotForwardResult:
+    """Inference through the digit-plane engine via the unified layer API.
+
+    Pass a ``PreparedCNN`` (from ``prepare_cnn``) for the amortized
+    weight-stationary path; raw ``CNNParams`` are prepared on the fly (the
+    one-shot convenience path — use_pallas/block_* apply only then).
+    ``n_planes`` is a RUNTIME precision: int, i32 scalar, or per-image (B,)
+    vector; changing it re-executes but never re-prepares.
+    """
+    if not isinstance(params, PreparedCNN):
+        params = prepare_cnn(params, cfg, use_pallas=use_pallas,
+                             block_k=block_k, block_m=block_m,
+                             block_n=block_n)
+    x, conv_stats = params.conv_layer.apply(
+        params.conv_params, images[..., None], n_planes=n_planes)  # (B,Ho,Wo,M)
+    flat = _pool_flatten(x, cfg)
+    logits, head_stats = params.head_layer.apply(
+        params.head_params, flat, n_planes=n_planes)
     return DslotForwardResult(
         logits=logits,
         layer_stats={"conv1": conv_stats, "dense1": head_stats})

@@ -10,10 +10,13 @@ accounting; ``ref.py`` — pure-jnp oracle the kernel is tested against
 
 from .dslot_matmul import (DslotMatmulOut, dslot_matmul_pallas,
                            dslot_matmul_pallas_batched, select_block_k)
-from .ops import DslotStats, dslot_matmul, quantize_activations
+from .ops import (DslotStats, DslotWeights, calibrate_scale, dslot_execute,
+                  dslot_matmul, dslot_prepare, prepare_call_count,
+                  quantize_activations)
 from .ref import dslot_matmul_ref, make_planes
 
-__all__ = ["DslotMatmulOut", "DslotStats", "dslot_matmul",
-           "dslot_matmul_pallas", "dslot_matmul_pallas_batched",
-           "select_block_k", "quantize_activations",
-           "dslot_matmul_ref", "make_planes"]
+__all__ = ["DslotMatmulOut", "DslotStats", "DslotWeights", "dslot_matmul",
+           "dslot_prepare", "dslot_execute", "calibrate_scale",
+           "prepare_call_count", "dslot_matmul_pallas",
+           "dslot_matmul_pallas_batched", "select_block_k",
+           "quantize_activations", "dslot_matmul_ref", "make_planes"]

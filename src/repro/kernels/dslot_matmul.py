@@ -87,7 +87,7 @@ def select_block_k(K: int, block_m: int, block_n: int, w_itemsize: int,
     return max(_LANE, (bk // _LANE) * _LANE)
 
 
-def _kernel(planes_ref, w_ref, sfx_ref, tot_ref, out_ref, used_ref,
+def _kernel(npl_ref, planes_ref, w_ref, sfx_ref, tot_ref, out_ref, used_ref,
             acc_ref, term_ref, *, n_bits: int, n_planes: int, n_kchunks: int,
             relu: bool):
     d = pl.program_id(2)
@@ -99,7 +99,11 @@ def _kernel(planes_ref, w_ref, sfx_ref, tot_ref, out_ref, used_ref,
         term_ref[0] = 0
         used_ref[...] = jnp.zeros_like(used_ref)
 
-    terminated = term_ref[0] > 0
+    # Runtime precision: planes at d >= npl are skipped entirely (their MXU
+    # pass is predicated off), so precision is a per-call argument — changing
+    # it never retraces or re-lowers the kernel.
+    npl = npl_ref[0, 0]
+    terminated = jnp.logical_or(term_ref[0] > 0, d >= npl)
 
     @pl.when(jnp.logical_not(terminated))
     def _accumulate():
@@ -116,9 +120,12 @@ def _kernel(planes_ref, w_ref, sfx_ref, tot_ref, out_ref, used_ref,
 
         if relu:
             # Chunk-aware remaining-contribution bound (module docstring):
-            # unseen chunks of this plane + all chunks of unseen planes.
+            # unseen chunks of this plane + all chunks of unseen planes up to
+            # the runtime precision npl (geometric tail 2^(n_bits - npl)).
+            tail = jnp.exp2(jnp.asarray(n_bits, jnp.float32)
+                            - npl.astype(jnp.float32))
             rem = scale * sfx_ref[0] \
-                + (scale - 2.0 ** (n_bits - n_planes)) * tot_ref[0]  # (bn,)
+                + (scale - tail) * tot_ref[0]              # (bn,)
             provably_neg = jnp.all(acc_ref[...] + rem[None, :] < 0.0)
             term_ref[0] = jnp.where(provably_neg, 1, term_ref[0])
 
@@ -146,6 +153,9 @@ def _pad_to(x: jax.Array, m: int, axis: int) -> jax.Array:
 def dslot_matmul_pallas(planes: jax.Array, w: jax.Array, *, n_bits: int = 8,
                         relu: bool = True, block_m: int = 128,
                         block_n: int = 128, block_k: int | None = None,
+                        n_planes_rt: jax.Array | None = None,
+                        suffix_colsum: jax.Array | None = None,
+                        total_colsum: jax.Array | None = None,
                         interpret: bool = True) -> DslotMatmulOut:
     """Run the digit-plane matmul kernel.
 
@@ -154,6 +164,13 @@ def dslot_matmul_pallas(planes: jax.Array, w: jax.Array, *, n_bits: int = 8,
     block_k: K chunk size streamed through VMEM (None = auto-select the
              largest chunk that fits the budget; K is zero-padded to a
              multiple — zero rows contribute nothing to sums or bounds).
+    n_planes_rt: optional RUNTIME precision (i32 scalar, <= D): planes at
+             d >= n_planes_rt are predicated off — no retrace across
+             precisions.  None runs all D planes.
+    suffix_colsum / total_colsum: the |W| column-sum termination tables
+             ((Kt, N) / (1, N) over the bk-padded K), precomputed once by
+             ``ops.dslot_prepare`` for weight-stationary serving.  None
+             recomputes them here (the one-shot path).
     M % block_m == 0 and N % block_n == 0 (callers pad — see ``ops.py``).
     """
     D, M, K = planes.shape
@@ -173,12 +190,19 @@ def dslot_matmul_pallas(planes: jax.Array, w: jax.Array, *, n_bits: int = 8,
     Kp = w.shape[0]
     Kt = Kp // bk
 
-    # |W| column-sums for the termination bound: per-chunk suffix (what the
-    # current plane has not seen yet) and the all-of-K total.
-    absw = jnp.abs(w.astype(jnp.float32))
-    chunk_colsum = absw.reshape(Kt, bk, N).sum(axis=1)          # (Kt, N)
-    total_colsum = chunk_colsum.sum(axis=0, keepdims=True)      # (1, N)
-    suffix_colsum = total_colsum - jnp.cumsum(chunk_colsum, axis=0)
+    if suffix_colsum is None or total_colsum is None:
+        # |W| column-sums for the termination bound: per-chunk suffix (what
+        # the current plane has not seen yet) and the all-of-K total.
+        absw = jnp.abs(w.astype(jnp.float32))
+        chunk_colsum = absw.reshape(Kt, bk, N).sum(axis=1)      # (Kt, N)
+        total_colsum = chunk_colsum.sum(axis=0, keepdims=True)  # (1, N)
+        suffix_colsum = total_colsum - jnp.cumsum(chunk_colsum, axis=0)
+    assert suffix_colsum.shape == (Kt, N), (suffix_colsum.shape, Kt, N)
+    assert total_colsum.shape == (1, N), (total_colsum.shape, N)
+
+    if n_planes_rt is None:
+        n_planes_rt = jnp.asarray(D, jnp.int32)
+    npl = jnp.asarray(n_planes_rt, jnp.int32).reshape(1, 1)
 
     grid = (M // block_m, N // block_n, D, Kt)
     kernel = functools.partial(_kernel, n_bits=n_bits, n_planes=D,
@@ -187,6 +211,8 @@ def dslot_matmul_pallas(planes: jax.Array, w: jax.Array, *, n_bits: int = 8,
         kernel,
         grid=grid,
         in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, d, c: (0, 0),
+                         memory_space=pltpu.SMEM),
             pl.BlockSpec((1, block_m, bk), lambda i, j, d, c: (d, i, c)),
             pl.BlockSpec((bk, block_n), lambda i, j, d, c: (c, j)),
             pl.BlockSpec((1, block_n), lambda i, j, d, c: (c, j)),
@@ -205,7 +231,7 @@ def dslot_matmul_pallas(planes: jax.Array, w: jax.Array, *, n_bits: int = 8,
             pltpu.SMEM((1,), jnp.int32),                   # termination flag
         ],
         interpret=interpret,
-    )(planes, w, suffix_colsum, total_colsum)
+    )(npl, planes, w, suffix_colsum, total_colsum)
     return DslotMatmulOut(out=out, planes_used=used)
 
 

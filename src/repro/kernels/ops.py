@@ -1,27 +1,45 @@
 """Framework-facing ops for the digit-plane DSLOT engine.
 
-``dslot_matmul`` is the public entry point used by model layers and the
-serving engine.  It handles quantization, MSDF plane decomposition, block
-padding, backend selection and dequantization:
+The engine is split into a **prepare/execute** pair — the software analogue of
+the paper's weight-stationary dataflow:
 
-* ``backend="pallas"`` — the Pallas kernel (interpret mode on CPU, compiled on
-  TPU).  Real per-tile early termination: skipped MXU passes.
-* ``backend="jnp"``    — pure-jnp evaluation with *identical semantics and
-  identical termination statistics* (the bound math is evaluated vectorized,
-  but all planes are computed) — fast on CPU, used for large-shape stats.
-* ``backend="auto"``   — pallas on TPU, jnp elsewhere.
+* ``dslot_prepare(w, ...) -> DslotWeights`` — everything that depends only on
+  the weights, computed ONCE per layer per model lifetime: column-sort
+  permutation (+ inverse), block geometry (``block_k`` VMEM auto-selection),
+  N/K padding, and the |W| column-sum termination tables the kernel's
+  chunk-aware bound reads.  Weights are stationary, so all of this is
+  amortized over every subsequent request.
+* ``dslot_execute(prepared, x, n_planes=...)`` — the per-request hot path:
+  quantize activations (against a calibrated FIXED scale when one is stored
+  in the prepared state — no data-dependent ``jnp.max`` in the hot path),
+  encode MSDF digit planes, run the kernel, dequantize.  ``n_planes`` is a
+  RUNTIME argument (scalar or per-row vector): planes beyond it are
+  predicated off in the Pallas kernel / masked in the jnp replay, so changing
+  precision never retraces — this is the paper's "precision tuned at
+  run-time" as a first-class request parameter.
+* ``calibrate_scale(x_sample, ...)`` — one-shot activation-range calibration;
+  store the result via ``DslotWeights.with_scale``.
+
+``dslot_matmul`` remains as the fused one-shot entry point (prepare+execute
+in a single jit) used by benchmarks and ad-hoc callers; layers and the
+serving engine go through the split API.
+
+Backends: ``"pallas"`` (interpret on CPU, compiled on TPU; real skipped MXU
+passes), ``"jnp"`` (vectorized replay with identical semantics and identical
+termination statistics), ``"auto"`` (pallas on TPU, jnp elsewhere).
 
 Beyond-paper optimization (``sort_columns=True``): weight-stationary column
 reordering.  Tile termination requires *spatially clustered* dead outputs;
 sorting output columns by their weight column-sum (a static, offline
-permutation — weights are stationary, exactly the paper's dataflow assumption)
-clusters ReLU-dead neurons into contiguous tiles, which measurably raises the
-skipped-pass fraction (see EXPERIMENTS.md §Perf).  The inverse permutation is
-applied to the output, so results are unchanged.
+permutation — exactly the paper's stationary-weight assumption) clusters
+ReLU-dead neurons into contiguous tiles, which measurably raises the
+skipped-pass fraction.  The inverse permutation is applied to the output, so
+results are unchanged.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import NamedTuple
 
@@ -29,48 +47,170 @@ import jax
 import jax.numpy as jnp
 
 from .dslot_matmul import _pad_to, dslot_matmul_pallas, select_block_k
-from .ref import dslot_matmul_ref, make_planes
+from .ref import make_planes
 
-__all__ = ["DslotStats", "dslot_matmul", "quantize_activations"]
+__all__ = ["DslotStats", "DslotWeights", "dslot_matmul", "dslot_prepare",
+           "dslot_execute", "calibrate_scale", "prepare_call_count",
+           "quantize_activations"]
+
+_PREPARE_CALLS = 0
+
+
+def prepare_call_count() -> int:
+    """Number of ``dslot_prepare`` invocations (trace-time for jitted
+    callers) since process start — tests assert prepare-once behaviour."""
+    return _PREPARE_CALLS
 
 
 class DslotStats(NamedTuple):
     planes_used: jax.Array      # (Mt, Nt) int32 — MXU passes per output tile
-    n_planes: int               # D
+    n_planes: int               # plane budget the call was traced with
     skipped_frac: jax.Array     # scalar — fraction of plane-passes skipped
+    row_planes_used: jax.Array | None = None  # (M,) f32 — effective planes
+                                # per output row (serving: per-slot account)
 
 
-def quantize_activations(x: jax.Array, n_bits: int = 8, signed: bool = False
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class DslotWeights:
+    """Prepared (weight-stationary) state of one DSLOT layer.
+
+    Array children are jit/vmap/scan-compatible; the geometry/config fields
+    are pytree aux data, so passing a ``DslotWeights`` through ``jax.jit``
+    makes them static automatically.
+    """
+    w: jax.Array                  # (Kp, Np) padded (+sorted) weights
+    suffix_colsum: jax.Array      # (Kt, Np) f32 — unseen-chunk bound table
+    total_colsum: jax.Array       # (1, Np) f32 — all-of-K bound table
+    inv_perm: jax.Array | None    # (N,) i32 undo of column sort, or None
+    x_scale: jax.Array | None     # () f32 calibrated activation step, or
+                                  # None -> dynamic per-call max (fallback)
+    # -- static geometry / config (pytree aux data) --
+    n_bits: int = 8
+    relu: bool = True
+    signed: bool = False
+    block_m: int = 128
+    block_n: int = 128
+    block_k: int = 0              # resolved chunk size (never None here)
+    backend: str = "jnp"          # resolved: "pallas" | "jnp"
+    d_in: int = 0                 # K before padding
+    d_out: int = 0                # N before padding
+
+    def tree_flatten(self):
+        children = (self.w, self.suffix_colsum, self.total_colsum,
+                    self.inv_perm, self.x_scale)
+        aux = (self.n_bits, self.relu, self.signed, self.block_m,
+               self.block_n, self.block_k, self.backend, self.d_in,
+               self.d_out)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    def with_scale(self, x_scale) -> "DslotWeights":
+        """Attach a calibrated activation scale (see ``calibrate_scale``)."""
+        return dataclasses.replace(
+            self, x_scale=jnp.asarray(x_scale, jnp.float32))
+
+
+def quantize_activations(x: jax.Array, n_bits: int = 8, signed: bool = False,
+                         scale: jax.Array | None = None
                          ) -> tuple[jax.Array, jax.Array]:
-    """Symmetric activation quantization -> (q int32, step float32)."""
+    """Symmetric activation quantization -> (q int32, step float32).
+
+    ``scale=None`` derives the step from this batch's max (data-dependent —
+    fine for one-shot calls, a hot-path sync for serving); a calibrated
+    fixed ``scale`` skips the reduction and clips outliers instead.
+    """
     qmax = float(2 ** n_bits - 1 if not signed else 2 ** (n_bits - 1) - 1)
-    amax = jnp.maximum(jnp.max(jnp.abs(x)) if signed else jnp.max(x), 1e-12)
-    step = amax / qmax
+    if scale is None:
+        amax = jnp.maximum(jnp.max(jnp.abs(x)) if signed else jnp.max(x),
+                           1e-12)
+        step = amax / qmax
+    else:
+        step = jnp.asarray(scale, jnp.float32)
     lo = -qmax if signed else 0.0
     q = jnp.clip(jnp.round(x / step), lo, qmax).astype(jnp.int32)
     return q, step
 
 
+def calibrate_scale(x_sample: jax.Array, n_bits: int = 8,
+                    signed: bool = False) -> jax.Array:
+    """Fixed activation quantization step from a calibration batch."""
+    qmax = float(2 ** n_bits - 1 if not signed else 2 ** (n_bits - 1) - 1)
+    amax = jnp.max(jnp.abs(x_sample)) if signed else jnp.max(x_sample)
+    return (jnp.maximum(amax, 1e-12) / qmax).astype(jnp.float32)
+
+
+def dslot_prepare(w: jax.Array, *, n_bits: int = 8, relu: bool = True,
+                  signed: bool = False, sort_columns: bool = False,
+                  block_m: int = 128, block_n: int = 128,
+                  block_k: int | None = None, backend: str = "auto",
+                  x_scale: jax.Array | None = None) -> DslotWeights:
+    """One-time weight lowering: sort, pad, pick ``block_k``, build the
+    termination tables.  Call once per layer; reuse across every request.
+
+    ``w``: (K, N) float32/bfloat16.  For a stacked weight (L, K, N) use
+    ``jax.vmap(lambda wl: dslot_prepare(wl, ...))`` — all children map.
+    """
+    global _PREPARE_CALLS
+    _PREPARE_CALLS += 1
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    K, N = w.shape
+
+    inv_perm = None
+    if sort_columns:
+        perm = jnp.argsort(jnp.sum(w, axis=0))          # dead cols first
+        w = w[:, perm]
+        inv_perm = jnp.argsort(perm)
+
+    bk = block_k or select_block_k(K, block_m, block_n, w.dtype.itemsize)
+    w_p = _pad_to(w, block_n, axis=1)
+    w_p = _pad_to(w_p, bk, axis=0)
+    Kp, Np = w_p.shape
+    Kt = Kp // bk
+
+    absw = jnp.abs(w_p.astype(jnp.float32))
+    chunk_colsum = absw.reshape(Kt, bk, Np).sum(axis=1)          # (Kt, Np)
+    total_colsum = chunk_colsum.sum(axis=0, keepdims=True)       # (1, Np)
+    suffix_colsum = total_colsum - jnp.cumsum(chunk_colsum, axis=0)
+
+    return DslotWeights(
+        w=w_p, suffix_colsum=suffix_colsum, total_colsum=total_colsum,
+        inv_perm=inv_perm, x_scale=x_scale, n_bits=n_bits, relu=relu,
+        signed=signed, block_m=block_m, block_n=block_n, block_k=bk,
+        backend=backend, d_in=K, d_out=N)
+
+
+# ------------------------------------------------------------- execution
+
 def _jnp_path(planes: jax.Array, w: jax.Array, n_bits: int, relu: bool,
-              block_m: int, block_n: int, block_k: int | None):
+              block_m: int, block_n: int, bk: int,
+              suffix: jax.Array, total: jax.Array, npl: jax.Array):
     """Reference evaluation + termination accounting.
 
     Computes every plane (no skipping — this is CPU) but derives the exact
     per-tile ``planes_used`` the Pallas kernel would report, by replaying the
     chunk-aware bound check in the kernel's (plane outer, K-chunk inner)
-    iteration order.  A ``lax.scan`` over the D*Kt steps keeps peak memory at
-    O(M*N) regardless of how small ``block_k`` is (only the per-step per-tile
-    dead flags, (D*Kt, Mt, Nt) booleans, are stacked).
+    iteration order.  ``npl`` is the runtime precision (i32 scalar): planes
+    at d >= npl are masked to zero and ``planes_used`` is clamped to it —
+    the same semantics as the kernel's predicated passes.  A ``lax.scan``
+    over the D*Kt steps keeps peak memory at O(M*N) regardless of how small
+    ``bk`` is (only the per-step per-tile dead flags are stacked).
+
+    planes (D, M, Kp) int8 pre-padded; w (Kp, N); suffix (Kt, N) and
+    total (N,) are the prepared |W| column-sum bound tables.
     """
     D, M, K = planes.shape
     N = w.shape[1]
-    bk = block_k or select_block_k(K, block_m, block_n, 4)
-    if K % bk:
-        planes = _pad_to(planes, bk, axis=2)
-        w = _pad_to(w, bk, axis=0)
-        K = w.shape[0]
     Kt = K // bk
     Mt, Nt = M // block_m, N // block_n
+    # runtime precision mask: digits beyond npl contribute nothing
+    npl_f = npl.astype(jnp.float32)
+    pmask = (jnp.arange(D) < npl)[:, None, None]
+    planes = planes * pmask.astype(planes.dtype)
     wf = w.astype(jnp.float32)
     w_chunks = wf.reshape(Kt, bk, N)
     # int8 plane chunks in step order (d outer, c inner): (D*Kt, M, bk)
@@ -81,12 +221,10 @@ def _jnp_path(planes: jax.Array, w: jax.Array, n_bits: int, relu: bool,
     step_scale = jnp.repeat(scales, Kt)                         # (D*Kt,)
 
     # Remaining-contribution bound after step (d, c):
-    # scale_d * suffix_colsum[c] + (scale_d - 2^(n-D)) * total.
-    chunk_colsum = jnp.sum(jnp.abs(w_chunks), axis=1)           # (Kt, N)
-    total = jnp.sum(chunk_colsum, axis=0)                       # (N,)
-    suffix = total[None, :] - jnp.cumsum(chunk_colsum, axis=0)  # (Kt, N)
+    # scale_d * suffix_colsum[c] + (scale_d - 2^(n_bits - npl)) * total.
+    tail = jnp.exp2(jnp.asarray(n_bits, jnp.float32) - npl_f)
     step_rem = (scales[:, None, None] * suffix[None, :, :]
-                + ((scales - 2.0 ** (n_bits - D))[:, None, None]
+                + ((scales - tail)[:, None, None]
                    * total[None, None, :])).reshape(D * Kt, N)
 
     def body(acc, step):
@@ -105,12 +243,107 @@ def _jnp_path(planes: jax.Array, w: jax.Array, n_bits: int, relu: bool,
         (p_chunks, c_idx, step_scale, step_rem))
     out = jnp.maximum(acc, 0.0) if relu else acc
     if relu:
+        # only bound checks at steps the kernel actually enters (d < npl)
+        # count; later (masked) steps can fire the stale bound spuriously,
+        # but min() with npl makes them indistinguishable from no-fire.
         ever = jnp.any(dead_after, axis=0)
         first = jnp.argmax(dead_after, axis=0)                  # 0-based step
         used = jnp.where(ever, first // Kt + 1, D).astype(jnp.int32)
     else:
         used = jnp.full((Mt, Nt), D, jnp.int32)
-    return out, used
+    return out, jnp.minimum(used, npl.astype(jnp.int32))
+
+
+def _execute_core(prepared: DslotWeights, x: jax.Array, npl: jax.Array,
+                  static_planes: int | None = None
+                  ) -> tuple[jax.Array, DslotStats]:
+    """Shared execute path.  ``npl`` is i32, scalar or per-row (M,).
+
+    ``static_planes`` (fused one-shot path only) additionally slices the
+    plane tensor to a STATIC depth so the kernel grid shrinks with the
+    precision — the split path keeps the grid at ``n_bits`` and predicates
+    instead, trading a few empty grid steps for zero retraces.
+    """
+    cfg = prepared
+    M, K = x.shape
+    assert K == cfg.d_in, (x.shape, cfg.d_in)
+
+    q, step = quantize_activations(x, n_bits=cfg.n_bits, signed=cfg.signed,
+                                   scale=cfg.x_scale)
+    planes = make_planes(q, cfg.n_bits, n_planes=static_planes)  # (D, M, K)
+    D = planes.shape[0]
+
+    if npl.ndim == 1:
+        # per-row precision: mask each row's digits beyond its own budget,
+        # run the kernel at the max budget (masked digits are zero planes).
+        row_budget = jnp.clip(npl, 1, D)
+        rmask = jnp.arange(D)[:, None] < row_budget[None, :]     # (D, M)
+        planes = planes * rmask[:, :, None].astype(planes.dtype)
+        npl_scalar = jnp.max(row_budget)
+        budget_f = row_budget.astype(jnp.float32)
+    else:
+        row_budget = None
+        npl_scalar = jnp.clip(npl, 1, D)
+        budget_f = npl_scalar.astype(jnp.float32)
+
+    planes_p = _pad_to(planes, cfg.block_m, axis=1)
+    if planes_p.shape[2] < cfg.w.shape[0]:      # match prepared K padding
+        pads = [(0, 0), (0, 0), (0, cfg.w.shape[0] - planes_p.shape[2])]
+        planes_p = jnp.pad(planes_p, pads)
+
+    if cfg.backend == "pallas":
+        out_p, used = dslot_matmul_pallas(
+            planes_p, cfg.w, n_bits=cfg.n_bits, relu=cfg.relu,
+            block_m=cfg.block_m, block_n=cfg.block_n, block_k=cfg.block_k,
+            n_planes_rt=npl_scalar,
+            suffix_colsum=cfg.suffix_colsum, total_colsum=cfg.total_colsum,
+            interpret=jax.default_backend() != "tpu")
+        used = jnp.minimum(used, npl_scalar.astype(jnp.int32))
+    else:
+        out_p, used = _jnp_path(planes_p, cfg.w, cfg.n_bits, cfg.relu,
+                                cfg.block_m, cfg.block_n, cfg.block_k,
+                                cfg.suffix_colsum, cfg.total_colsum[0],
+                                npl_scalar)
+
+    out = out_p[:M, :cfg.d_out] * step
+    if cfg.inv_perm is not None:
+        out = out[:, cfg.inv_perm]
+
+    # per-row effective planes: tile usage spread over its rows, clipped to
+    # each row's own budget — the per-request energy account for serving.
+    rows_used = jnp.repeat(used.astype(jnp.float32).mean(axis=1),
+                           cfg.block_m, total_repeat_length=used.shape[0]
+                           * cfg.block_m)[:M]
+    if row_budget is not None:
+        rows_used = jnp.minimum(rows_used, budget_f)
+        skipped = 1.0 - jnp.mean(rows_used) / jnp.maximum(
+            jnp.mean(budget_f), 1.0)
+    else:
+        skipped = 1.0 - jnp.mean(used.astype(jnp.float32)) / budget_f
+    return out, DslotStats(planes_used=used, n_planes=D,
+                           skipped_frac=skipped, row_planes_used=rows_used)
+
+
+@jax.jit
+def _dslot_execute_jit(prepared: DslotWeights, x: jax.Array, npl: jax.Array
+                       ) -> tuple[jax.Array, DslotStats]:
+    return _execute_core(prepared, x, npl)
+
+
+def dslot_execute(prepared: DslotWeights, x: jax.Array, *,
+                  n_planes=None) -> tuple[jax.Array, DslotStats]:
+    """Per-request execution against prepared weights: ``[relu](x @ w)``.
+
+    ``x``: (M, d_in) float activations.
+    ``n_planes``: runtime precision — None (full ``n_bits``), a python int /
+    i32 scalar, or a per-row (M,) i32 vector (serving: one budget per slot).
+    Runtime values share one trace; only the scalar/vector distinction (and
+    new shapes) retraces.
+    """
+    if n_planes is None:
+        n_planes = prepared.n_bits
+    npl = jnp.asarray(n_planes, jnp.int32)
+    return _dslot_execute_jit(prepared, x, npl)
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -123,50 +356,17 @@ def dslot_matmul(x: jax.Array, w: jax.Array, *, n_bits: int = 8,
                  backend: str = "auto", sort_columns: bool = False,
                  signed: bool = False
                  ) -> tuple[jax.Array, DslotStats]:
-    """Digit-serial (MSDF digit-plane) matmul: ``[relu](x @ w)``.
+    """Fused one-shot digit-serial matmul: prepare + execute in one jit.
 
-    ``x`` (M, K) float — activations, quantized here to ``n_bits``.
-    ``w`` (K, N) float — weights (kept full precision: the serial-parallel OLM
-    takes the weight operand in parallel, so only the streamed activation is
-    digit-decomposed; this matches the paper's serial x / parallel Y split).
-    ``n_planes`` — runtime precision knob (D <= n_bits), the paper's
-    "precision tuned at run time".
-    ``block_k`` — K chunk streamed through VMEM (None = auto-select the
-    largest chunk fitting the VMEM budget); both backends replay the same
-    chunk-aware termination bound, so ``planes_used`` agrees.
+    Kept for benchmarks and ad-hoc calls; layers and serving use the split
+    ``dslot_prepare``/``dslot_execute`` so weight lowering is amortized.
+    ``n_planes`` here is STATIC (the plane tensor is sliced, the kernel grid
+    shrinks); use ``dslot_execute`` for runtime precision.
     """
-    if backend == "auto":
-        backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
-    # make_planes can only produce n_bits planes; clamp so planes_used /
-    # skipped_frac never report savings against planes that don't exist.
     D = min(n_planes or n_bits, n_bits)
-    M, K = x.shape
-    N = w.shape[1]
-
-    q, step = quantize_activations(x, n_bits=n_bits, signed=signed)
-    planes = make_planes(q, n_bits, n_planes=D)                 # (D, M, K)
-
-    perm = None
-    if sort_columns:
-        perm = jnp.argsort(jnp.sum(w, axis=0))                  # dead cols first
-        w = w[:, perm]
-
-    planes_p = _pad_to(planes, block_m, axis=1)
-    w_p = _pad_to(w.astype(jnp.float32), block_n, axis=1)
-
-    if backend == "pallas":
-        out_p, used = dslot_matmul_pallas(
-            planes_p, w_p, n_bits=n_bits, relu=relu,
-            block_m=block_m, block_n=block_n, block_k=block_k,
-            interpret=jax.default_backend() != "tpu")
-    else:
-        out_p, used = _jnp_path(planes_p, w_p, n_bits, relu,
-                                block_m, block_n, block_k)
-
-    out = out_p[:M, :N] * step
-    if perm is not None:
-        inv = jnp.argsort(perm)
-        out = out[:, inv]
-
-    skipped = 1.0 - jnp.mean(used.astype(jnp.float32)) / D
-    return out, DslotStats(planes_used=used, n_planes=D, skipped_frac=skipped)
+    prepared = dslot_prepare(
+        w, n_bits=n_bits, relu=relu, signed=signed,
+        sort_columns=sort_columns, block_m=block_m, block_n=block_n,
+        block_k=block_k, backend=backend)
+    return _execute_core(prepared, x, jnp.asarray(D, jnp.int32),
+                         static_planes=D)

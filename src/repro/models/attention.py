@@ -28,7 +28,9 @@ _NEG_INF = -1e30
 class KVCache(NamedTuple):
     k: jax.Array          # (B, C, Hkv, D)
     v: jax.Array          # (B, C, Hkv, D)
-    positions: jax.Array  # (C,) int32, -1 = empty
+    positions: jax.Array  # (B, C) int32 per-sequence ring positions, -1 =
+                          # empty.  Per-sequence (not shared) so a slot pool
+                          # can hold requests at different decode depths.
 
 
 def init_attention(cfg, key, cross: bool = False) -> Params:
@@ -58,7 +60,7 @@ def init_kv_cache(cfg, batch: int, seq_len: int, dtype) -> KVCache:
     return KVCache(
         k=jnp.zeros((batch, C, cfg.n_kv_heads, hd), dtype),
         v=jnp.zeros((batch, C, cfg.n_kv_heads, hd), dtype),
-        positions=jnp.full((C,), -1, jnp.int32),
+        positions=jnp.full((batch, C), -1, jnp.int32),
     )
 
 
@@ -89,8 +91,11 @@ def flash_attention(q, k, v, q_pos, k_pos, *, causal: bool, window: int,
     """Chunked-KV online-softmax attention.
 
     q: (B, Sq, Hq, D); k/v: (B, Sk, Hkv, D); positions int32 arrays
-    (q_pos: (Sq,), k_pos: (Sk,); k_pos may contain -1 = invalid slot).
-    GQA folds Hq into (Hkv, G).  Returns (B, Sq, Hq, D) in q.dtype.
+    (q_pos: (Sq,) or per-sequence (B, Sq); k_pos: (Sk,) or (B, Sk); k_pos
+    may contain -1 = invalid slot).  2-D positions are only meaningful on
+    the decode fast path (Sq == 1) — a slot pool whose sequences sit at
+    different depths.  GQA folds Hq into (Hkv, G).  Returns (B, Sq, Hq, D)
+    in q.dtype.
     """
     B, Sq, Hq, D = q.shape
     Hkv = k.shape[2]
@@ -104,17 +109,23 @@ def flash_attention(q, k, v, q_pos, k_pos, *, causal: bool, window: int,
         # KV cache shardable along its sequence axis (context parallelism):
         # the softmax reductions over Sk become tiny cross-device
         # all-reduces instead of a scan over a sharded axis.
-        mask = (k_pos >= 0)[None, :]
+        qp = q_pos if q_pos.ndim == 2 else q_pos[None]       # (b?, Sq)
+        kp = k_pos if k_pos.ndim == 2 else k_pos[None]       # (b?, Sk)
+        mask = (kp >= 0)[:, None, :]
         if causal:
-            mask = mask & (k_pos[None, :] <= q_pos[:, None])
+            mask = mask & (kp[:, None, :] <= qp[:, :, None])
         if window:
-            mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+            mask = mask & (kp[:, None, :] > qp[:, :, None] - window)
+        if mask.shape[0] == 1:
+            mask = mask[0]                                   # shared (Sq, Sk)
         m0 = jnp.full((B, Sq, Hkv, G), _NEG_INF, jnp.float32)
         l0 = jnp.zeros((B, Sq, Hkv, G), jnp.float32)
         a0 = jnp.zeros((B, Sq, Hkv, G, D), jnp.float32)
         m, l, acc = _attend_block(qg, k, v, mask, m0, l0, a0)
         out = acc / jnp.maximum(l[..., None], 1e-30)
         return out.reshape(B, Sq, Hq, D).astype(q.dtype)
+    assert q_pos.ndim == 1 and k_pos.ndim == 1, \
+        "per-sequence positions are decode-only (Sq == 1)"
 
     ck = min(chunk, Sk)
     n_chunks = -(-Sk // ck)
@@ -270,12 +281,17 @@ def attention_forward(p: Params, x: jax.Array, cfg, *, positions: jax.Array,
 
     new_cache = None
     if cache is not None and not cross:
-        # decode: write new kv into ring slots, attend against whole cache
+        # decode: write new kv into per-sequence ring slots, attend against
+        # the whole cache.  positions may be (S,) shared or (B, S) per-slot
+        # (serving pools where sequences sit at different depths).
         C = cache.k.shape[1]
-        slots = positions % C
-        kc = cache.k.at[:, slots].set(k)
-        vc = cache.v.at[:, slots].set(v)
-        pc = cache.positions.at[slots].set(positions)
+        pos_b = positions if positions.ndim == 2 \
+            else jnp.broadcast_to(positions[None], (B, S))
+        slots = pos_b % C                                   # (B, S)
+        bidx = jnp.arange(B)[:, None]
+        kc = cache.k.at[bidx, slots].set(k)
+        vc = cache.v.at[bidx, slots].set(v)
+        pc = cache.positions.at[bidx, slots].set(pos_b)
         new_cache = KVCache(k=kc, v=vc, positions=pc)
         window = cfg.window if cfg.attn_type == "swa" else 0
         # decode: the cache is sequence-sharded (context parallelism); keep
@@ -289,7 +305,7 @@ def attention_forward(p: Params, x: jax.Array, cfg, *, positions: jax.Array,
             ka, va = kc, vc
         ka = constrain(ka, "b", "tp", None, None)
         va = constrain(va, "b", "tp", None, None)
-        out = flash_attention(q, ka, va, positions, pc, causal=causal,
+        out = flash_attention(q, ka, va, pos_b, pc, causal=causal,
                               window=window, chunk=cfg.attn_chunk)
     else:
         window = cfg.window if (cfg.attn_type == "swa" and not cross) else 0
@@ -315,10 +331,11 @@ def attention_forward(p: Params, x: jax.Array, cfg, *, positions: jax.Array,
             kept_pos = kv_pos[keep].astype(jnp.int32)
             slots = kept_pos % C
             zk = jnp.zeros((B, C) + k.shape[2:], k.dtype)
+            pos0 = jnp.full((C,), -1, jnp.int32).at[slots].set(kept_pos)
             new_cache = KVCache(
                 k=zk.at[:, slots].set(k[:, keep]),
                 v=zk.at[:, slots].set(v[:, keep]),
-                positions=jnp.full((C,), -1, jnp.int32).at[slots].set(kept_pos))
+                positions=jnp.broadcast_to(pos0[None], (B, C)))
 
     out = constrain(out, "b", None, "tp", None)
     y = apply_dense(p["wo"], out.reshape(B, S, cfg.n_heads * hd))

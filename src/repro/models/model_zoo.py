@@ -63,6 +63,14 @@ class Model:
     def param_count(self, params) -> int:
         return sum(x.size for x in jax.tree.leaves(params))
 
+    def prepare_dslot(self, params) -> Params:
+        """One-time DSLOT weight lowering for serving (no-op unless the
+        config's digit-serial MLP path applies).  Returns params with
+        prepared ``DslotWeights`` attached to every MLP up-projection, so
+        per-request execution never re-encodes weight tables."""
+        from .mlp import prepare_mlp_dslot
+        return prepare_mlp_dslot(params, self.cfg)
+
     # ------------------------------------------------------------- helpers
 
     def _embed_inputs(self, params, batch) -> jax.Array:
@@ -112,9 +120,10 @@ class Model:
                 ) -> tuple[jax.Array, dict]:
         logits, _, caches = self.forward(params, batch, mode="prefill",
                                          cache_len=max_len)
+        B = batch["tokens"].shape[0]
         return logits[:, -1], {"caches": caches,
-                               "pos": jnp.asarray(
-                                   self._full_len(batch), jnp.int32)}
+                               "pos": jnp.full((B,), self._full_len(batch),
+                                               jnp.int32)}
 
     def _full_len(self, batch) -> int:
         S = batch["tokens"].shape[1]
@@ -124,12 +133,18 @@ class Model:
 
     def decode_step(self, params, state: dict, tokens: jax.Array
                     ) -> tuple[jax.Array, dict]:
-        """One token for every sequence.  tokens: (B, 1) int32."""
+        """One token for every sequence.  tokens: (B, 1) int32.
+
+        ``state["pos"]`` is a per-sequence (B,) vector — a serving pool's
+        slots may sit at different decode depths (staggered admissions); a
+        legacy scalar still works and means "all sequences at this depth".
+        """
         cfg = self.cfg
         x = embed_tokens(params["embed"], tokens, cfg)
-        pos = state["pos"][None].astype(jnp.int32)
+        pos = state["pos"].astype(jnp.int32)
+        pos2d = pos[:, None] if pos.ndim == 1 else pos[None]   # (B,1)|(1,1)
         x, caches, _ = self.decoder.apply(
-            params["decoder"], x, positions=pos, caches=state["caches"],
+            params["decoder"], x, positions=pos2d, caches=state["caches"],
             mode="decode")
         x = apply_norm(params["final_norm"], x, cfg)
         logits = lm_logits(params["head"], params["embed"], x, cfg)
@@ -139,7 +154,7 @@ class Model:
                           enc_len: int = 0) -> dict:
         dtype = jnp.dtype(self.cfg.dtype)
         caches = self.decoder.init_cache(batch_size, seq_len, enc_len, dtype)
-        return {"caches": caches, "pos": jnp.zeros((), jnp.int32)}
+        return {"caches": caches, "pos": jnp.zeros((batch_size,), jnp.int32)}
 
 
 def build_model(cfg) -> Model:

@@ -22,6 +22,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from . import stats as model_stats
 from .attention import (KVCache, attention_forward, init_attention,
                         init_kv_cache)
 from .layers import Params, apply_norm, init_norm
@@ -70,9 +71,12 @@ def init_layer_cache(cfg, kind: str, batch: int, seq_len: int,
     self_cache = init_kv_cache(cfg, batch, seq_len, dtype)
     if kind == "attn_cross":
         hd = cfg.head_dim_
-        cross = KVCache(k=jnp.zeros((batch, enc_len, cfg.n_kv_heads, hd), dtype),
-                        v=jnp.zeros((batch, enc_len, cfg.n_kv_heads, hd), dtype),
-                        positions=jnp.arange(enc_len, dtype=jnp.int32))
+        cross = KVCache(
+            k=jnp.zeros((batch, enc_len, cfg.n_kv_heads, hd), dtype),
+            v=jnp.zeros((batch, enc_len, cfg.n_kv_heads, hd), dtype),
+            positions=jnp.broadcast_to(
+                jnp.arange(enc_len, dtype=jnp.int32)[None],
+                (batch, enc_len)))
         return (self_cache, cross)
     return self_cache
 
@@ -203,15 +207,21 @@ class Stack:
                 params_g, caches_g = layer_inputs
                 aux_g = jnp.zeros((), jnp.float32)
                 new_cs = []
-                for pos, kind in enumerate(self.pattern):
-                    c = None if caches_g is None else caches_g[pos]
-                    x, nc, aux = apply_layer(
-                        params_g[pos], x, cfg, kind, positions=positions,
-                        cache=c, enc_out=enc_out, mode=mode,
-                        causal=self.causal, cache_len=cache_len)
-                    new_cs.append(nc)
-                    aux_g = aux_g + aux
-                return x, (tuple(new_cs), aux_g)
+                # Layer statistics recorded inside a scanned body would be
+                # scan-local tracers; capture them here and thread them out
+                # as scan outputs, re-recording the stacked values after the
+                # scan — makes the stats side channel scan-safe.
+                with model_stats.collect() as sink:
+                    for pos, kind in enumerate(self.pattern):
+                        c = None if caches_g is None else caches_g[pos]
+                        x, nc, aux = apply_layer(
+                            params_g[pos], x, cfg, kind, positions=positions,
+                            cache=c, enc_out=enc_out, mode=mode,
+                            causal=self.causal, cache_len=cache_len)
+                        new_cs.append(nc)
+                        aux_g = aux_g + aux
+                recs = {k: tuple(v) for k, v in sink.items()}
+                return x, (tuple(new_cs), aux_g, recs)
 
             body = group_body
             if cfg.remat and mode == "train":
@@ -233,13 +243,16 @@ class Stack:
                 # scan only over params
                 def scan_body_np(x, params_g):
                     return body(x, (params_g, None))
-                x, (ncs, auxs) = jax.lax.scan(scan_body_np, x,
-                                              tuple(p["groups"]))
+                x, (ncs, auxs, recs) = jax.lax.scan(scan_body_np, x,
+                                                    tuple(p["groups"]))
                 new_caches["groups"] = list(ncs) if mode == "prefill" else []
             else:
-                x, (ncs, auxs) = jax.lax.scan(scan_body, x, xs)
+                x, (ncs, auxs, recs) = jax.lax.scan(scan_body, x, xs)
                 new_caches["groups"] = list(ncs)
             aux_total = aux_total + jnp.sum(auxs)
+            for k, vals in recs.items():
+                for v in vals:       # leading axis = n_groups (scan steps)
+                    model_stats.record(k, v)
 
         for i, kind in enumerate(self.rest_kinds):
             c = None if caches is None else caches["rest"][i]

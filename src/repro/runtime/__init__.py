@@ -1,0 +1,19 @@
+"""Runtime precision-policy subsystem for the DSLOT engine.
+
+The paper's "precision tuned at run-time" becomes a first-class serving
+concept here: a :class:`PrecisionPolicy` decides how many digit planes each
+request (or each layer) executes, and the engine feeds back the observed
+``planes_used`` / ``skipped_frac`` so adaptive policies can close the loop.
+
+``precision_scope`` / ``current_precision`` thread a runtime precision value
+(int, per-layer dict, or a traced per-row jax array) into DSLOT layers that
+are buried inside jitted model code without changing every call signature —
+the same pattern as ``repro.models.stats``.
+"""
+
+from .context import current_precision, precision_scope
+from .policy import (AdaptiveBudget, Fixed, PerLayerSchedule, PolicyFeedback,
+                     PrecisionPolicy)
+
+__all__ = ["AdaptiveBudget", "Fixed", "PerLayerSchedule", "PolicyFeedback",
+           "PrecisionPolicy", "current_precision", "precision_scope"]

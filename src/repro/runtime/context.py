@@ -1,0 +1,44 @@
+"""Precision context: thread a runtime precision into nested DSLOT layers.
+
+Model code (MLP blocks, CNN layers) is called through jitted entry points
+whose signatures don't carry a precision argument.  Instead, the caller opens
+``precision_scope(value)`` around the traced call and layers ask
+``current_precision(name, default)`` at trace time — the value (a python int,
+a ``{layer_name: planes}`` dict, or a traced jax array such as a per-slot
+budget vector) flows into the trace like any other closed-over input.
+
+Inside ``jax.jit`` this works exactly like ``repro.models.stats``: the scope
+must be entered *inside* the traced function (or around a fresh trace) so the
+layers see it while tracing.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Iterator
+
+_ACTIVE: list[Any] = []
+
+
+@contextlib.contextmanager
+def precision_scope(value: Any) -> Iterator[None]:
+    """Make ``value`` the active runtime precision for DSLOT layers.
+
+    ``value``: int | jax i32 array (scalar or per-row) | dict mapping layer
+    names to either.  ``None`` entries fall through to the layer default.
+    """
+    _ACTIVE.append(value)
+    try:
+        yield
+    finally:
+        _ACTIVE.pop()
+
+
+def current_precision(name: str, default: Any = None) -> Any:
+    """Precision for layer ``name`` from the innermost active scope."""
+    if not _ACTIVE:
+        return default
+    value = _ACTIVE[-1]
+    if isinstance(value, dict):
+        value = value.get(name, value.get("*", None))
+    return default if value is None else value

@@ -1,12 +1,26 @@
 """Serving engine: batched prefill + decode with slot-based continuous
 batching, DSLOT digit-serial execution mode, and per-request accounting.
 
-``generate`` is the simple batch API (prefill once, decode N tokens).
+``generate`` is the simple batch API (prefill once, decode N tokens); in
+DSLOT mode it takes a runtime per-request precision and can return
+planes-executed statistics per request.
+
 ``ServeEngine`` is the production shape: a fixed pool of B slots; requests
 join free slots, decode steps advance every live slot together (one jitted
 step for the whole pool), finished slots free up immediately.  Per-slot
-position counters and done-flags make the batch composition fully dynamic
-without recompilation.
+position vectors (threaded through the model's per-sequence KV-cache ring)
+make the batch composition fully dynamic without recompilation — admitting
+a request into a non-empty pool never disturbs other slots' decode
+positions.
+
+DSLOT serving mode (``cfg.dslot.enabled`` + ReLU MLPs): the engine prepares
+the model's weight-stationary plane tables ONCE at construction
+(``Model.prepare_dslot``), every request carries its own digit-plane budget
+(explicit ``Request.n_planes`` or assigned by a ``repro.runtime`` precision
+policy), the pooled decode step executes each slot's rows at that slot's
+precision (a per-row runtime argument — no retrace across precisions), and
+the per-request planes-executed account is fed back to the policy when the
+request finishes (the ``AdaptiveBudget`` loop).
 """
 
 from __future__ import annotations
@@ -18,7 +32,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models import stats as stats_channel
+from repro.models.mlp import mlp_uses_dslot
 from repro.models.model_zoo import Model
+from repro.runtime import PolicyFeedback, PrecisionPolicy, precision_scope
+
+_ROWKEY = "mlp_up_dslot.row_planes_used"
 
 
 def greedy_sample(logits: jax.Array, key=None) -> jax.Array:
@@ -29,30 +48,82 @@ def temperature_sample(logits: jax.Array, key, temp: float = 0.8) -> jax.Array:
     return jax.random.categorical(key, logits / temp, axis=-1).astype(jnp.int32)
 
 
+def _collapse_rows(sink: dict, batch: int) -> jax.Array | None:
+    """Average the per-row planes-executed records of every DSLOT MLP call
+    into one (B,) vector.  Records may be (B,) (plain layers) or carry
+    leading stack axes from scan-over-layers; collapse those by mean."""
+    vals = []
+    for v in sink.get(_ROWKEY, []):
+        v = jnp.asarray(v, jnp.float32)
+        while v.ndim > 1:
+            v = v.mean(axis=0)
+        if v.shape == (batch,):
+            vals.append(v)
+    if not vals:
+        return None
+    return jnp.mean(jnp.stack(vals), axis=0)
+
+
 def generate(model: Model, params, batch: dict, max_new_tokens: int,
              *, max_len: int | None = None, sample=greedy_sample,
-             key=None) -> jax.Array:
-    """Prefill + greedy/temperature decode.  Returns (B, max_new_tokens)."""
-    S = batch["tokens"].shape[1]
+             key=None, n_planes=None, return_stats: bool = False):
+    """Prefill + greedy/temperature decode.  Returns (B, max_new_tokens),
+    or ``(tokens, stats)`` with ``return_stats=True``.
+
+    ``n_planes``: runtime DSLOT precision — int or per-request (B,) i32
+    vector (ignored unless the model's digit-serial MLP path is enabled).
+    ``stats``: {"planes_used_mean": (B,) effective digit planes per request,
+    "skipped_frac": (B,)} — the per-request energy account, averaged over
+    decode steps (empty when the DSLOT path is off).
+    """
+    B, S = batch["tokens"].shape
     if model.cfg.frontend and "frontend" in batch:
         S += batch["frontend"].shape[1]
     max_len = max_len or (S + max_new_tokens)
-    logits, state = model.prefill(params, batch, max_len=max_len)
-    tok = sample(logits) if key is None else sample(logits, key)
+    if n_planes is not None:
+        n_planes = jnp.asarray(n_planes, jnp.int32)
+        if n_planes.ndim == 0:
+            n_planes = jnp.full((B,), n_planes, jnp.int32)
 
-    def step(carry, _):
-        tok, state, key = carry
-        lg, state = model.decode_step(params, state, tok[:, None])
-        if key is not None:
-            key, sub = jax.random.split(key)
-            nxt = sample(lg, sub)
+    with precision_scope(n_planes):
+        logits, state = model.prefill(params, batch, max_len=max_len)
+        tok = sample(logits) if key is None else sample(logits, key)
+
+        def step(carry, _):
+            tok, state, key = carry
+            if return_stats:       # stats collection is trace-time gated:
+                with stats_channel.collect() as sink:   # no dead work in
+                    lg, state = model.decode_step(       # the plain path
+                        params, state, tok[:, None])
+                rows = _collapse_rows(sink, B)
+                st = {} if rows is None else {"rows": rows}
+            else:
+                lg, state = model.decode_step(params, state, tok[:, None])
+                st = {}
+            if key is not None:
+                key, sub = jax.random.split(key)
+                nxt = sample(lg, sub)
+            else:
+                nxt = sample(lg)
+            return (nxt, state, key), (tok, st)
+
+        (_, _, _), (toks, sts) = jax.lax.scan(
+            step, (tok, state, key), None, length=max_new_tokens)
+    toks = jnp.moveaxis(toks, 0, 1)                    # (B, max_new)
+    if not return_stats:
+        return toks
+    stats: dict = {}
+    if "rows" in sts:
+        used = jnp.mean(sts["rows"], axis=0)           # (B,)
+        if n_planes is not None:
+            budget = n_planes.astype(jnp.float32)
         else:
-            nxt = sample(lg)
-        return (nxt, state, key), tok
-
-    (_, _, _), toks = jax.lax.scan(
-        step, (tok, state, key), None, length=max_new_tokens)
-    return jnp.moveaxis(toks, 0, 1)                    # (B, max_new)
+            # no explicit budget: layers ran at their static default
+            budget = float(model.cfg.dslot.n_planes
+                           or model.cfg.dslot.n_bits)
+        stats = {"planes_used_mean": used,
+                 "skipped_frac": 1.0 - used / budget}
+    return toks, stats
 
 
 @dataclass
@@ -60,57 +131,85 @@ class Request:
     uid: int
     prompt: np.ndarray                 # (S,) int32
     max_new: int
+    n_planes: int | None = None        # per-request DSLOT precision (None =
+                                       # policy-assigned or full n_bits)
     out: list = field(default_factory=list)
     done: bool = False
+    dslot_stats: dict | None = None    # set on finish in DSLOT mode
 
 
 class ServeEngine:
     """Slot-pool continuous batching on a single jitted decode step."""
 
     def __init__(self, model: Model, params, *, n_slots: int,
-                 max_len: int, sample: Callable = greedy_sample):
+                 max_len: int, sample: Callable = greedy_sample,
+                 precision_policy: PrecisionPolicy | None = None):
         self.model = model
-        self.params = params
+        self.dslot = mlp_uses_dslot(model.cfg)
+        # one-time weight-stationary lowering: every decode step executes
+        # against cached digit-plane tables (no per-call re-encode)
+        self.params = model.prepare_dslot(params) if self.dslot else params
         self.n_slots = n_slots
         self.max_len = max_len
         self.sample = sample
+        self.policy = precision_policy
+        self.n_bits = model.cfg.dslot.n_bits
         self.state = model.init_decode_state(n_slots, max_len)
         self.slot_req: list[Request | None] = [None] * n_slots
-        self.slot_pos = np.zeros(n_slots, np.int64)
-        self.slot_budget = np.zeros(n_slots, np.int64)
         self.next_tok = np.zeros(n_slots, np.int32)
-        self._decode = jax.jit(
-            lambda p, st, t: model.decode_step(p, st, t))
+        self._acc_planes = np.zeros(n_slots, np.float64)
+        self._acc_steps = np.zeros(n_slots, np.int64)
+
+        def _decode(p, st, t, npl):
+            with stats_channel.collect() as sink, precision_scope(npl):
+                lg, st2 = model.decode_step(p, st, t)
+            rows = _collapse_rows(sink, self.n_slots)
+            return lg, st2, {} if rows is None else {"rows": rows}
+
+        self._decode = jax.jit(_decode)
 
     # ------------------------------------------------------------ requests
 
     def try_add(self, req: Request) -> bool:
         """Admit a request into a free slot (prefill runs immediately).
 
-        NOTE: per-slot prefill into a shared pooled cache requires per-slot
-        position offsets; for clarity each admitted request here restarts the
-        pool's shared position counter only when the pool is empty —
-        production multi-position pools would keep per-slot pos vectors.  The
-        engine still demonstrates slot reuse + dynamic batch composition.
+        The prefilled batch-1 state is merged into the pool at the slot's
+        row only — per-slot position vectors and per-sequence cache rings
+        mean other slots' decode state is untouched by the admission.
+
+        Policy-assigned precision: a scalar policy (``Fixed``,
+        ``AdaptiveBudget``) grants this request's plane budget directly; a
+        per-layer policy (``PerLayerSchedule``) is flattened to the budget
+        of the engine's DSLOT consumer (the MLP up-projection, falling back
+        to the schedule's ``"*"`` default).
         """
         free = [i for i, r in enumerate(self.slot_req) if r is None]
         if not free:
             return False
         i = free[0]
-        # single-slot prefill through the batch-1 path
+        if self.dslot and req.n_planes is None and self.policy is not None:
+            nxt = self.policy.next_precision()
+            if isinstance(nxt, dict):
+                nxt = nxt.get("mlp_up_dslot", nxt.get("*", self.n_bits))
+            req.n_planes = int(nxt)
+        # single-slot prefill through the batch-1 path, at the request's
+        # own precision
         batch = {"tokens": jnp.asarray(req.prompt[None])}
-        logits, st = self.model.prefill(self.model_params_for(i), batch,
-                                        max_len=self.max_len)
-        # merge slot i's caches into the pool
+        with precision_scope(None if req.n_planes is None
+                             else req.n_planes):
+            logits, st = self.model.prefill(self.params, batch,
+                                            max_len=self.max_len)
         self.state = _merge_slot(self.state, st, i)
         self.slot_req[i] = req
-        self.slot_pos[i] = len(req.prompt)
-        self.slot_budget[i] = req.max_new
+        self._acc_planes[i] = 0.0
+        self._acc_steps[i] = 0
         self.next_tok[i] = int(jax.device_get(jnp.argmax(logits[0])))
         return True
 
-    def model_params_for(self, slot: int):
-        return self.params
+    def _budget_vector(self) -> jax.Array:
+        npl = [self.n_bits if r is None or r.n_planes is None
+               else r.n_planes for r in self.slot_req]
+        return jnp.asarray(npl, jnp.int32)
 
     # ------------------------------------------------------------ stepping
 
@@ -119,30 +218,61 @@ class ServeEngine:
         if all(r is None for r in self.slot_req):
             return []
         toks = jnp.asarray(self.next_tok[:, None])
-        logits, self.state = self._decode(self.params, self.state, toks)
+        logits, self.state, aux = self._decode(
+            self.params, self.state, toks, self._budget_vector())
         nxt = np.asarray(jax.device_get(self.sample(logits)))
+        rows = np.asarray(jax.device_get(aux["rows"])) \
+            if "rows" in aux else None
         finished = []
         for i, req in enumerate(self.slot_req):
             if req is None:
                 continue
             req.out.append(int(self.next_tok[i]))
-            self.slot_budget[i] -= 1
             self.next_tok[i] = nxt[i]
-            if self.slot_budget[i] <= 0:
+            if rows is not None:
+                self._acc_planes[i] += float(rows[i])
+                self._acc_steps[i] += 1
+            if len(req.out) >= req.max_new:
                 req.done = True
+                self._finish_stats(i, req)
                 finished.append(req)
                 self.slot_req[i] = None
         return finished
 
+    def _finish_stats(self, i: int, req: Request) -> None:
+        if not self.dslot or self._acc_steps[i] == 0:
+            return
+        granted = req.n_planes if req.n_planes is not None else self.n_bits
+        used = self._acc_planes[i] / self._acc_steps[i]
+        fb = PolicyFeedback(n_planes=int(granted),
+                            planes_used_mean=float(used),
+                            skipped_frac=1.0 - float(used) / float(granted))
+        req.dslot_stats = {"n_planes": fb.n_planes,
+                           "planes_used_mean": fb.planes_used_mean,
+                           "skipped_frac": fb.skipped_frac}
+        if self.policy is not None:
+            self.policy.observe(fb)
+
 
 def _merge_slot(pool_state: dict, one_state: dict, slot: int) -> dict:
-    """Copy a batch-1 decode state into slot ``slot`` of the pooled state."""
+    """Copy a batch-1 prefill state into row ``slot`` of the pooled state.
+
+    Works leaf-by-leaf: the batch axis of each leaf is wherever its shape
+    differs from the pooled leaf (axis 0 for plain layers and the position
+    vector, axis 1 under a leading scan-stack axis).  Only that row of the
+    pool is written, so live slots keep decoding undisturbed.
+    """
     def merge(pool, one):
-        if pool.ndim >= 1 and one.ndim == pool.ndim and \
-                one.shape[0] == 1 and pool.shape[0] != one.shape[0] and \
-                pool.shape[1:] == one.shape[1:]:
-            return pool.at[slot:slot + 1].set(one)
+        if pool.shape == one.shape:
+            if pool.shape and pool.shape[0] == 1:
+                return one                       # 1-slot pool: full replace
+            return pool                          # unbatched leaf: shared
+        diff = [a for a, (ps, os) in enumerate(zip(pool.shape, one.shape))
+                if ps != os]
+        if len(diff) == 1 and one.shape[diff[0]] == 1:
+            ax = diff[0]
+            idx = (slice(None),) * ax + (slice(slot, slot + 1),)
+            return pool.at[idx].set(one)
         return pool
 
-    merged = jax.tree.map(merge, pool_state["caches"], one_state["caches"])
-    return {"caches": merged, "pos": one_state["pos"]}
+    return jax.tree.map(merge, pool_state, one_state)

@@ -1,9 +1,12 @@
 """Fused conv+ReLU+maxpool (paper Figs. 4-7): DSLOT == SIP == float conv."""
 
 import numpy as np
+import jax
 import jax.numpy as jnp
+import pytest
 
 from repro.core import dslot_conv2d_stats, extract_windows, sip_conv2d
+from repro.core.conv import im2col
 
 
 def test_extract_windows():
@@ -49,6 +52,44 @@ def test_fused_relu_maxpool():
     pooled = relu[:, : H // 2 * 2, : W // 2 * 2].reshape(
         B, H // 2, 2, W // 2, 2, M).max(axis=(2, 4))
     np.testing.assert_allclose(np.asarray(res.y_pooled), pooled, atol=1e-6)
+
+
+@pytest.mark.parametrize("shape,k,stride",
+                         [((2, 9, 9, 3), 3, 1), ((2, 9, 9, 3), 3, 2),
+                          ((1, 8, 10, 2), 5, 2), ((1, 7, 7, 1), 4, 3),
+                          ((2, 6, 6, 3), 2, 2)])
+def test_im2col_same_padding_matches_lax_conv(shape, k, stride):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=shape), jnp.float32)
+    C, M = shape[-1], 4
+    w = jnp.asarray(rng.normal(size=(k, k, C, M)), jnp.float32)
+    cols = im2col(x, k, stride, padding="same")
+    y = cols @ w.reshape(-1, M)
+    ref = jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    assert y.shape == ref.shape
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=1e-4)
+
+
+def test_im2col_bad_padding_raises():
+    with pytest.raises(ValueError, match="padding"):
+        im2col(jnp.zeros((1, 8, 8, 1)), 3, padding="reflect")
+
+
+def test_dslot_conv2d_same_padding_matches_lax():
+    from repro.layers import DslotConv2d
+
+    layer = DslotConv2d(3, 4, 3, stride=2, padding="same", name="cs",
+                        block_m=16, block_n=4)
+    params = layer.init(jax.random.PRNGKey(0))
+    x = jax.random.uniform(jax.random.PRNGKey(1), (2, 9, 9, 3))
+    y, st = layer.apply(params, x)
+    ref = jnp.maximum(jax.lax.conv_general_dilated(
+        x, params["w"], (2, 2), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")), 0)
+    assert y.shape == ref.shape == (2, 5, 5, 4)
+    assert float(jnp.abs(y - ref).max()) < 0.02 * float(ref.max())
 
 
 def test_termination_stats_are_consistent():

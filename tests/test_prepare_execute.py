@@ -1,0 +1,177 @@
+"""Prepare/execute split: bit-exactness vs the fused path, prepare-once
+amortization, runtime precision semantics, and calibration."""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops
+from repro.kernels.ops import (calibrate_scale, dslot_execute, dslot_matmul,
+                               dslot_prepare)
+
+from _hyp import given, settings, st  # hypothesis or skip-shim
+
+
+def _workload(seed=0, M=48, K=40, N=56, dead=True):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(np.maximum(rng.normal(0.2, 0.5, (M, K)), 0), jnp.float32)
+    w = rng.normal(0, 0.05, (K, N)).astype(np.float32)
+    if dead:
+        w[:, :N // 2] -= 0.10            # clustered ReLU-dead columns
+    return x, jnp.asarray(w)
+
+
+# ------------------------------------------------------- fused == split
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("sort_columns", [False, True])
+def test_split_bitexact_vs_fused_dense(backend, sort_columns):
+    x, w = _workload()
+    kw = dict(n_bits=8, relu=True, sort_columns=sort_columns,
+              block_m=16, block_n=16, block_k=16, backend=backend)
+    prep = dslot_prepare(w, **kw)
+    for D in (8, 5, 2):
+        of, sf = dslot_matmul(x, w, n_planes=D, **kw)
+        oe, se = dslot_execute(prep, x, n_planes=D)
+        np.testing.assert_array_equal(np.asarray(of), np.asarray(oe)), D
+        np.testing.assert_array_equal(np.asarray(sf.planes_used),
+                                      np.asarray(se.planes_used))
+
+
+def test_split_bitexact_vs_fused_conv_shapes():
+    """Conv lowering through the layer API: prepared layer == fused matmul
+    on the same im2col workload."""
+    from repro.core.conv import im2col
+    from repro.layers import DslotConv2d
+
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.uniform(0, 1, (2, 12, 12, 3)), jnp.float32)
+    layer = DslotConv2d(3, 4, 3, stride=2, name="c",
+                        block_m=16, block_n=4, block_k=16)
+    params = layer.init(jax.random.PRNGKey(0))
+    y, st_ = layer.apply(params, x)
+    cols = im2col(x, 3, 2)
+    B, Ho, Wo, kkc = cols.shape
+    of, sf = dslot_matmul(cols.reshape(-1, kkc),
+                          params["w"].astype(jnp.float32).reshape(kkc, 4),
+                          n_bits=8, relu=True, block_m=16, block_n=4,
+                          block_k=16, backend="jnp")
+    np.testing.assert_array_equal(
+        np.asarray(y.reshape(-1, 4)), np.asarray(of))
+    np.testing.assert_array_equal(np.asarray(st_.planes_used),
+                                  np.asarray(sf.planes_used))
+
+
+def test_backends_agree_runtime_precision():
+    x, w = _workload(seed=5)
+    pj = dslot_prepare(w, sort_columns=True, block_m=16, block_n=16,
+                       block_k=16, backend="jnp")
+    pp = dslot_prepare(w, sort_columns=True, block_m=16, block_n=16,
+                       block_k=16, backend="pallas")
+    for D in (8, 6, 3):
+        oj, sj = dslot_execute(pj, x, n_planes=D)
+        op, sp = dslot_execute(pp, x, n_planes=D)
+        np.testing.assert_allclose(np.asarray(oj), np.asarray(op), atol=1e-4)
+        np.testing.assert_array_equal(np.asarray(sj.planes_used),
+                                      np.asarray(sp.planes_used))
+
+
+# ------------------------------------------------------- prepare-once
+
+def test_prepare_called_once_per_layer_lifetime():
+    """The acceptance criterion: one prepare per layer, then any number of
+    executions at any precision without re-preparing."""
+    from repro.layers import DslotDense
+
+    layer = DslotDense(32, 32, name="once", block_m=16, block_n=16)
+    n0 = ops.prepare_call_count()
+    params = layer.init(jax.random.PRNGKey(0))
+    assert ops.prepare_call_count() - n0 == 1
+    x = jnp.maximum(jax.random.normal(jax.random.PRNGKey(1), (16, 32)), 0)
+    outs = []
+    for D in (8, 6, 4, 2, 8, 3):
+        y, _ = layer.apply(params, x, n_planes=D)
+        outs.append(np.asarray(y))
+    assert ops.prepare_call_count() - n0 == 1, \
+        "runtime precision must not re-prepare"
+    # and precision actually changes results
+    assert np.abs(outs[0] - outs[3]).max() > 0
+
+
+def test_prepare_once_whole_cnn():
+    from repro.configs.dslot_mnist import CONFIG
+    from repro.core.mnist_cnn import forward_dslot, init_cnn, prepare_cnn
+
+    params = init_cnn(CONFIG, jax.random.PRNGKey(0))
+    imgs = jax.random.uniform(jax.random.PRNGKey(1), (4, 28, 28))
+    n0 = ops.prepare_call_count()
+    prep = prepare_cnn(params, CONFIG, block_m=32, block_k=64)
+    assert ops.prepare_call_count() - n0 == 2          # conv + head
+    r8 = forward_dslot(prep, imgs, CONFIG, n_planes=8)
+    r2 = forward_dslot(prep, imgs, CONFIG, n_planes=2)
+    assert ops.prepare_call_count() - n0 == 2
+    assert float(jnp.abs(r8.logits - r2.logits).max()) > 0
+
+
+# ------------------------------------------------------- runtime precision
+
+def test_runtime_vector_precision_matches_scalar_rows():
+    x, w = _workload(seed=7, M=32)
+    prep = dslot_prepare(w, block_m=16, block_n=16, block_k=16,
+                         backend="jnp")
+    budget = jnp.asarray(np.random.default_rng(1).integers(2, 9, 32),
+                         jnp.int32)
+    ov, sv = dslot_execute(prep, x, n_planes=budget)
+    assert sv.row_planes_used.shape == (32,)
+    for r in (0, 9, 31):
+        orow, _ = dslot_execute(prep, x, n_planes=int(budget[r]))
+        np.testing.assert_array_equal(np.asarray(ov[r]), np.asarray(orow[r]))
+
+
+def test_calibrated_scale_removes_data_dependence():
+    x, w = _workload(seed=9)
+    prep = dslot_prepare(w, block_m=16, block_n=16, block_k=16,
+                         backend="jnp")
+    cal = prep.with_scale(calibrate_scale(x, n_bits=8))
+    o_dyn, _ = dslot_execute(prep, x)
+    o_fix, _ = dslot_execute(cal, x)
+    # calibrating on the same batch reproduces the dynamic scale exactly
+    np.testing.assert_allclose(np.asarray(o_dyn), np.asarray(o_fix),
+                               atol=1e-6)
+    # a fixed scale is stable under input scaling; outliers clip instead of
+    # stretching the grid
+    o_big, _ = dslot_execute(cal, x.at[0, 0].set(100.0))
+    assert np.isfinite(np.asarray(o_big)).all()
+
+
+# ------------------------------------------------------- truncation property
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), n_planes=st.integers(1, 8))
+def test_truncation_only_truncates(seed, n_planes):
+    """Decreasing ``n_planes`` at execute time is a bounded truncation of
+    the full-precision output: the error never exceeds the SD-digit tail
+    bound, ReLU outputs stay nonnegative, and any output the full-precision
+    run produces above the tail bound keeps its sign (nonzero stays
+    nonzero under ReLU)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(np.maximum(rng.normal(0.3, 0.4, (16, 24)), 0),
+                    jnp.float32)
+    w = jnp.asarray(rng.normal(0, 0.1, (24, 16)), jnp.float32)
+    prep = dslot_prepare(w, block_m=16, block_n=16, block_k=24,
+                         backend="jnp")
+    full, stf = dslot_execute(prep, x, n_planes=8)
+    trunc, stt = dslot_execute(prep, x, n_planes=n_planes)
+    full, trunc = np.asarray(full), np.asarray(trunc)
+    assert (trunc >= 0).all() and (full >= 0).all()
+    # SD tail: |q - q_D| < 2^(8 - D); error per output < tail * colsum * step
+    q, step = ops.quantize_activations(x, 8)
+    tail = 2.0 ** (8 - n_planes)
+    bound = tail * np.abs(np.asarray(w)).sum(axis=0) * float(step) + 1e-5
+    assert (np.abs(full - trunc) <= bound[None, :]).all()
+    # sign preservation for confidently-positive outputs
+    confident = full > bound[None, :]
+    assert (trunc[confident] > 0).all()

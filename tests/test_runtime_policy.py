@@ -1,0 +1,78 @@
+"""Runtime precision-policy subsystem: policies, context threading, and the
+adaptive feedback loop."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.runtime import (AdaptiveBudget, Fixed, PerLayerSchedule,
+                           PolicyFeedback, current_precision,
+                           precision_scope)
+
+
+def test_precision_scope_nesting_and_default():
+    assert current_precision("x", 8) == 8
+    with precision_scope(4):
+        assert current_precision("x", 8) == 4
+        with precision_scope(2):
+            assert current_precision("x", 8) == 2
+        assert current_precision("x", 8) == 4
+    assert current_precision("x", 8) == 8
+
+
+def test_precision_scope_dict_and_wildcard():
+    with precision_scope({"conv1": 6, "*": 3}):
+        assert current_precision("conv1", 8) == 6
+        assert current_precision("dense1", 8) == 3
+    with precision_scope({"conv1": 6}):
+        assert current_precision("dense1", 8) == 8   # falls through
+    with precision_scope(None):
+        assert current_precision("anything", 7) == 7
+
+
+def test_fixed_and_per_layer_schedule():
+    assert Fixed(5).next_precision() == 5
+    sched = PerLayerSchedule({"conv1": 8, "dense1": 4}, default=6)
+    got = sched.next_precision()
+    assert got["conv1"] == 8 and got["dense1"] == 4 and got["*"] == 6
+    sched.observe(PolicyFeedback(8, 8.0, 0.0))       # no-op
+
+
+def test_adaptive_budget_closes_the_loop():
+    pol = AdaptiveBudget(plane_budget=4.0, min_planes=2, max_planes=8,
+                         ema=1.0)   # ema=1: react fully to each observation
+    # dense workload: every granted plane is executed -> throttle to budget
+    pol.observe(PolicyFeedback(n_planes=8, planes_used_mean=8.0,
+                               skipped_frac=0.0))
+    assert pol.next_precision() == 4
+    # sparse workload: early termination skips half -> earn more precision
+    pol.observe(PolicyFeedback(n_planes=4, planes_used_mean=2.0,
+                               skipped_frac=0.5))
+    assert pol.next_precision() == 8
+    # bounds respected
+    pol.observe(PolicyFeedback(n_planes=8, planes_used_mean=8.0,
+                               skipped_frac=0.0))
+    pol.plane_budget = 0.5
+    assert pol.next_precision() == 2
+
+
+def test_layers_read_precision_scope():
+    from repro.layers import DslotDense
+
+    layer = DslotDense(32, 32, name="scoped", block_m=16, block_n=16)
+    params = layer.init(jax.random.PRNGKey(0))
+    x = jnp.maximum(jax.random.normal(jax.random.PRNGKey(1), (16, 32)), 0)
+    y8, _ = layer.apply(params, x)
+    with precision_scope(2):
+        y2, st2 = layer.apply(params, x)
+    with precision_scope({"scoped": 2}):
+        y2d, _ = layer.apply(params, x)
+    with precision_scope({"other": 2}):
+        y_other, _ = layer.apply(params, x)
+    assert float(jnp.abs(y8 - y2).max()) > 0
+    np.testing.assert_array_equal(np.asarray(y2), np.asarray(y2d))
+    np.testing.assert_array_equal(np.asarray(y8), np.asarray(y_other))
+    # explicit argument beats the scope
+    with precision_scope(2):
+        y8e, _ = layer.apply(params, x, n_planes=8)
+    np.testing.assert_array_equal(np.asarray(y8), np.asarray(y8e))

@@ -122,3 +122,141 @@ def test_serve_engine_slots():
     # finished slots are reusable
     r3 = Request(uid=3, prompt=np.asarray([7, 8, 9], np.int32), max_new=1)
     assert eng.try_add(r3)
+
+
+def test_serve_engine_staggered_admissions_match_solo():
+    """Regression for the pool-shared position counter: a request admitted
+    into a NON-empty pool must not disturb other slots' decode positions —
+    every request's tokens must exactly match a solo ``generate`` run."""
+    cfg = ARCHS["olmo-1b"].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(3))
+    eng = ServeEngine(model, params, n_slots=3, max_len=32)
+    prompts = [np.asarray([1, 2, 3], np.int32),
+               np.asarray([7, 8, 9, 10], np.int32),
+               np.asarray([5, 5], np.int32)]
+    reqs = [Request(uid=i, prompt=p, max_new=5)
+            for i, p in enumerate(prompts)]
+    assert eng.try_add(reqs[0])
+    eng.step()                                # pool mid-decode...
+    assert eng.try_add(reqs[1])               # ...staggered admission
+    eng.step()
+    eng.step()
+    assert eng.try_add(reqs[2])               # deeper stagger
+    done = []
+    for _ in range(12):
+        done += eng.step()
+    assert {r.uid for r in done} == {0, 1, 2}
+    for req, prompt in zip(reqs, prompts):
+        solo = generate(model, params, {"tokens": jnp.asarray(prompt[None])},
+                        5)
+        assert req.out == list(np.asarray(solo[0])), req.uid
+
+
+def _dslot_model(key=4):
+    import dataclasses
+    from repro.configs.base import DslotConfig
+
+    cfg = dataclasses.replace(
+        ARCHS["olmo-1b"].reduced(), act="relu", glu=False,
+        dslot=DslotConfig(enabled=True, block_m=16, block_n=32, block_k=16))
+    model = build_model(cfg)
+    return model, model.init(jax.random.PRNGKey(key))
+
+
+def test_serve_engine_dslot_per_request_precision():
+    """DSLOT serving mode: per-request digit-plane budgets execute in one
+    pooled step, and every finished request carries its planes-executed
+    account."""
+    model, params = _dslot_model()
+    eng = ServeEngine(model, params, n_slots=2, max_len=32)
+    assert eng.dslot
+    ra = Request(uid=1, prompt=np.asarray([1, 2, 3], np.int32), max_new=3,
+                 n_planes=8)
+    rb = Request(uid=2, prompt=np.asarray([4, 5, 6], np.int32), max_new=3,
+                 n_planes=3)
+    assert eng.try_add(ra) and eng.try_add(rb)
+    done = []
+    for _ in range(4):
+        done += eng.step()
+    assert {r.uid for r in done} == {1, 2}
+    for r in (ra, rb):
+        assert r.dslot_stats is not None
+        assert r.dslot_stats["n_planes"] == r.n_planes
+        assert 0 < r.dslot_stats["planes_used_mean"] <= r.n_planes
+        assert 0.0 <= r.dslot_stats["skipped_frac"] < 1.0
+    # low-precision request executed strictly fewer planes
+    assert rb.dslot_stats["planes_used_mean"] < \
+        ra.dslot_stats["planes_used_mean"] + 1e-6 and \
+        rb.dslot_stats["planes_used_mean"] <= 3.0
+
+
+def test_serve_engine_dslot_policy_assignment_and_feedback():
+    from repro.runtime import AdaptiveBudget
+
+    model, params = _dslot_model(key=5)
+    pol = AdaptiveBudget(plane_budget=4.0, min_planes=2, max_planes=8,
+                         ema=1.0)
+    eng = ServeEngine(model, params, n_slots=1, max_len=32,
+                      precision_policy=pol)
+    r = Request(uid=1, prompt=np.asarray([1, 2], np.int32), max_new=2)
+    assert eng.try_add(r)
+    assert r.n_planes == pol.max_planes or r.n_planes >= pol.min_planes
+    while not r.done:
+        eng.step()
+    assert pol.last_feedback is not None          # loop closed
+    assert pol.last_feedback.n_planes == r.n_planes
+
+
+def test_serve_engine_accepts_per_layer_schedule_policy():
+    """PerLayerSchedule.next_precision() returns a dict — the engine must
+    flatten it to the MLP budget, not crash on int(dict)."""
+    from repro.runtime import PerLayerSchedule
+
+    model, params = _dslot_model(key=7)
+    pol = PerLayerSchedule({"mlp_up_dslot": 3}, default=6)
+    eng = ServeEngine(model, params, n_slots=1, max_len=32,
+                      precision_policy=pol)
+    r = Request(uid=1, prompt=np.asarray([1, 2], np.int32), max_new=2)
+    assert eng.try_add(r)
+    assert r.n_planes == 3
+    while not r.done:
+        eng.step()
+    assert r.dslot_stats["planes_used_mean"] <= 3.0
+
+
+def test_generate_default_precision_stats_budget():
+    """With no explicit n_planes, skipped_frac must be measured against the
+    precision the layers actually ran at (cfg.dslot.n_planes), not n_bits."""
+    import dataclasses
+    from repro.configs.base import DslotConfig
+
+    cfg = dataclasses.replace(
+        ARCHS["olmo-1b"].reduced(), act="relu", glu=False,
+        dslot=DslotConfig(enabled=True, n_planes=4, block_m=16, block_n=32,
+                          block_k=16))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(8))
+    batch = {"tokens": jnp.asarray([[1, 2, 3]], jnp.int32)}
+    toks, stats = generate(model, params, batch, 2, return_stats=True)
+    used = float(stats["planes_used_mean"][0])
+    skipped = float(stats["skipped_frac"][0])
+    assert used <= 4.0 + 1e-6
+    # no early termination at this scale -> used == 4 and skipped ~ 0, not
+    # the 0.5 that dividing by n_bits=8 would report
+    assert abs(skipped - (1.0 - used / 4.0)) < 1e-6
+
+
+def test_generate_dslot_stats_per_request():
+    model, params = _dslot_model(key=6)
+    batch = {"tokens": jnp.asarray([[1, 2, 3], [4, 5, 6]], jnp.int32)}
+    toks, stats = generate(model, params, batch, 3,
+                           n_planes=jnp.asarray([8, 2], jnp.int32),
+                           return_stats=True)
+    assert toks.shape == (2, 3)
+    used = np.asarray(stats["planes_used_mean"])
+    assert used.shape == (2,)
+    assert used[1] <= 2.0 + 1e-6 < used[0]
+    # plain generate (no stats) unchanged
+    toks2 = generate(model, params, batch, 3)
+    assert toks2.shape == (2, 3)
