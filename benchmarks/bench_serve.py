@@ -1,0 +1,165 @@
+"""Serving-layer benchmark: time-to-first-token and decode-stall under
+staggered admissions, with and without the chunked-prefill pipeline.
+
+What it measures (all wall-clock, host-synchronized — ``ServeEngine.step``
+device-gets the sampled tokens, so ``perf_counter`` around it is honest):
+
+* ``prefill_full_ms`` — one full-prompt prefill forward.  This is exactly
+  what the pre-pipeline blocking ``try_add`` cost every live slot per
+  admission.
+* ``decode_step_ms`` — steady-state pooled decode step, no admission work.
+* ``step_admission_ms`` — a decode step with one chunk of admission work
+  riding along (median over a long prompt's prefill steps).
+* ``decode_stall_ms = step_admission_ms - decode_step_ms`` — what an
+  admission now costs the live slots per step.  The acceptance bar is
+  ``decode_stall_ms < prefill_full_ms`` strictly: chunked admission must
+  beat parking the pool for a whole prompt.
+* per-request TTFT (steps and ms) under a staggered admission schedule.
+
+Emits ``BENCH_serve.json``.  CPU numbers from the tiny reduced config are a
+scheduling proxy, not TPU performance; the *ratios* (stall vs full prefill)
+are the contract.
+
+Standalone CLI (used by the CI smoke job):
+    python benchmarks/bench_serve.py [--smoke] [--json BENCH_serve.json]
+        [--prompt-len N] [--chunk N] [--slots N]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ARCHS
+from repro.models.model_zoo import build_model
+from repro.serve import Request, ServeConfig, ServeEngine
+
+
+def _mk_prompt(rng, n, vocab):
+    return rng.integers(0, vocab, size=n).astype(np.int32)
+
+
+def _timed_step(eng):
+    t0 = time.perf_counter()
+    done = eng.step()
+    return (time.perf_counter() - t0) * 1e3, done
+
+
+def run(prompt_len: int, chunk: int, n_slots: int, max_new: int,
+        smoke: bool) -> dict:
+    cfg = ARCHS["olmo-1b"].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    max_len = prompt_len + max_new + 8
+
+    # ---- baseline: one full-prompt prefill forward (the blocking cost)
+    full = {"tokens": jnp.asarray(_mk_prompt(rng, prompt_len,
+                                             cfg.vocab_size)[None])}
+    model.prefill(params, full, max_len=max_len)[0].block_until_ready()
+    reps = 2 if smoke else 5
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        model.prefill(params, full, max_len=max_len)[0].block_until_ready()
+    prefill_full_ms = (time.perf_counter() - t0) / reps * 1e3
+
+    # ---- engine with live decoding slots
+    eng = ServeEngine(model, params, n_slots=n_slots, max_len=max_len,
+                      serve_config=ServeConfig(prefill_chunk=chunk))
+    live = [Request(uid=100 + i,
+                    prompt=_mk_prompt(rng, chunk, cfg.vocab_size),
+                    max_new=max_len - chunk - 1)
+            for i in range(n_slots - 1)]
+    for r in live:
+        eng.try_add(r)
+    # warmup: admissions trace the chunk/extend/decode shapes once
+    warm = Request(uid=0, prompt=_mk_prompt(rng, prompt_len, cfg.vocab_size),
+                   max_new=1)
+    eng.try_add(warm)
+    while not warm.done:
+        eng.step()
+
+    # steady-state decode, no admission in flight
+    plain = [_timed_step(eng)[0] for _ in range(3 if smoke else 10)]
+    decode_step_ms = statistics.median(plain)
+
+    # ---- staggered chunked admissions: step times while prefill in flight
+    admit_times, ttft = [], []
+    n_admissions = 2 if smoke else 4
+    for a in range(n_admissions):
+        req = Request(uid=a + 1,
+                      prompt=_mk_prompt(rng, prompt_len, cfg.vocab_size),
+                      max_new=max_new)
+        t_enq = time.perf_counter()
+        if not eng.try_add(req):
+            raise RuntimeError(f"admission queue rejected uid {req.uid}")
+        while req.phase in ("pending", "prefilling"):
+            ms, _ = _timed_step(eng)
+            # only steps that actually carried admission work count toward
+            # the stall metric — a step spent waiting for a free slot
+            # (phase still "pending" afterwards) ran zero chunks and would
+            # deflate the median toward the plain decode time
+            if req.phase != "pending":
+                admit_times.append(ms)
+        ttft_ms = (time.perf_counter() - t_enq) * 1e3
+        ttft.append({"uid": req.uid, "prompt_len": prompt_len,
+                     "ttft_steps": req.ttft_steps, "ttft_ms": ttft_ms})
+        for _ in range(2):                       # let the pool breathe
+            eng.step()
+
+    step_admission_ms = statistics.median(admit_times)
+    decode_stall_ms = max(0.0, step_admission_ms - decode_step_ms)
+    return {
+        "config": {"arch": "olmo-1b.reduced", "n_slots": n_slots,
+                   "max_len": max_len, "prompt_len": prompt_len,
+                   "prefill_chunk": chunk, "max_new": max_new,
+                   "smoke": smoke},
+        "prefill_full_ms": round(prefill_full_ms, 3),
+        "decode_step_ms": round(decode_step_ms, 3),
+        "step_admission_ms": round(step_admission_ms, 3),
+        "decode_stall_ms": round(decode_stall_ms, 3),
+        "stall_below_full_prefill": decode_stall_ms < prefill_full_ms,
+        "ttft": ttft,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes / few reps for CI")
+    ap.add_argument("--json", default="BENCH_serve.json")
+    ap.add_argument("--prompt-len", type=int, default=None)
+    ap.add_argument("--chunk", type=int, default=None)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=8)
+    args = ap.parse_args()
+    prompt_len = args.prompt_len if args.prompt_len is not None \
+        else (48 if args.smoke else 192)
+    chunk = args.chunk if args.chunk is not None \
+        else (8 if args.smoke else 16)
+
+    out = run(prompt_len, chunk, args.slots, args.max_new, args.smoke)
+    with open(args.json, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"full-prompt prefill     {out['prefill_full_ms']:9.2f} ms")
+    print(f"decode step (no admit)  {out['decode_step_ms']:9.2f} ms")
+    print(f"decode step (+1 chunk)  {out['step_admission_ms']:9.2f} ms")
+    print(f"decode stall/admission  {out['decode_stall_ms']:9.2f} ms  "
+          f"({'OK' if out['stall_below_full_prefill'] else 'FAIL'}: "
+          f"< full prefill)")
+    for t in out["ttft"]:
+        print(f"  ttft uid={t['uid']}: {t['ttft_steps']} steps, "
+              f"{t['ttft_ms']:.1f} ms")
+    print(f"wrote {args.json}")
+    if not out["stall_below_full_prefill"]:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

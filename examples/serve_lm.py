@@ -18,7 +18,7 @@ from repro.configs.base import DslotConfig
 from repro.configs.registry import get_arch
 from repro.models import stats
 from repro.models.model_zoo import build_model
-from repro.serve.engine import Request, ServeEngine, generate
+from repro.serve import Request, ServeConfig, ServeEngine, generate
 
 
 def main():
@@ -61,21 +61,30 @@ def main():
         print(f"digit-serial MLP calls: {len(vals)}, mean skipped MXU "
               f"passes {np.mean(vals):.1%}")
 
-    # ---- slot-pool continuous batching (decoder-only pool)
+    # ---- slot-pool continuous batching with chunked-prefill admission
+    # try_add only enqueues; the step loop interleaves at most one
+    # prefill_chunk of admission work per pooled decode step, so a long
+    # prompt trickles in without stalling live slots for a full forward.
     lcfg = get_arch("olmo-1b").reduced()
     lmodel = build_model(lcfg)
     lparams = lmodel.init(jax.random.PRNGKey(2))
-    eng = ServeEngine(lmodel, lparams, n_slots=2, max_len=48)
-    reqs = [Request(uid=i, prompt=np.full((6,), i + 3, np.int32),
+    eng = ServeEngine(lmodel, lparams, n_slots=2, max_len=48,
+                      serve_config=ServeConfig(prefill_chunk=4))
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(0, lcfg.vocab_size,
+                                        size=3 + 4 * i).astype(np.int32),
                     max_new=3 + i) for i in range(4)]
-    pending = list(reqs)
+    for r in reqs:
+        eng.try_add(r)                   # non-blocking: queued, FIFO
     finished = []
     while len(finished) < len(reqs):
-        while pending and eng.try_add(pending[0]):
-            pending.pop(0)
         finished += eng.step()
+        print(f"  step {eng.steps:2d}: slots={eng.slot_phases()} "
+              f"queued={eng.queue_depth}")
     print("continuous batching: served", len(finished), "requests;",
-          {r.uid: len(r.out) for r in finished})
+          {r.uid: (len(r.out), f"ttft={r.ttft_steps} steps")
+           for r in finished})
 
 
 if __name__ == "__main__":

@@ -22,7 +22,15 @@ the paper's weight-stationary dataflow:
 
 ``dslot_matmul`` remains as the fused one-shot entry point (prepare+execute
 in a single jit) used by benchmarks and ad-hoc callers; layers and the
-serving engine go through the split API.
+serving engine go through the split API.  ``docs/kernel.md`` maps the kernel
+to the paper; ``docs/architecture.md`` shows where this split sits in the
+serving stack.
+
+NOTE for chunked/serving use: without a calibrated ``x_scale`` the execute
+path quantizes against the per-call activation max, which depends on the
+token window each call sees — pin a scale (``calibrate_scale`` +
+``DslotWeights.with_scale`` or ``DslotConfig.act_scale``) when results must
+be invariant to how a sequence is split into calls (e.g. chunked prefill).
 
 Backends: ``"pallas"`` (interpret on CPU, compiled on TPU; real skipped MXU
 passes), ``"jnp"`` (vectorized replay with identical semantics and identical

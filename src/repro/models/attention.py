@@ -283,7 +283,9 @@ def attention_forward(p: Params, x: jax.Array, cfg, *, positions: jax.Array,
     if cache is not None and not cross:
         # decode: write new kv into per-sequence ring slots, attend against
         # the whole cache.  positions may be (S,) shared or (B, S) per-slot
-        # (serving pools where sequences sit at different depths).
+        # (serving pools where sequences sit at different depths).  S > 1
+        # with a cache is the chunked-prefill extension path: a prompt chunk
+        # appended to an existing ring at an arbitrary position offset.
         C = cache.k.shape[1]
         pos_b = positions if positions.ndim == 2 \
             else jnp.broadcast_to(positions[None], (B, S))
@@ -305,8 +307,29 @@ def attention_forward(p: Params, x: jax.Array, cfg, *, positions: jax.Array,
             ka, va = kc, vc
         ka = constrain(ka, "b", "tp", None, None)
         va = constrain(va, "b", "tp", None, None)
-        out = flash_attention(q, ka, va, pos_b, pc, causal=causal,
-                              window=window, chunk=cfg.attn_chunk)
+        if S > 1:
+            # Multi-token cache extension is batch-1 only: the generic flash
+            # path needs shared 1-D positions, so squeeze the per-sequence
+            # axis (B == 1 makes the shared/per-sequence distinction moot).
+            if B != 1:
+                raise NotImplementedError(
+                    "multi-token cache extension (chunked prefill) is "
+                    "batch-1 only; pooled decode steps pass S == 1")
+            if window:
+                # A chunk landing at offset o recycles ring slots (capacity
+                # = window) that still hold in-window keys needed by the
+                # chunk's own earliest queries — extension would be silently
+                # wrong, so refuse instead (callers fall back to one-shot
+                # prefill; see serve/prefill.py).
+                raise NotImplementedError(
+                    "multi-token cache extension is unsupported for "
+                    "sliding-window attention: the window-sized ring would "
+                    "evict in-window keys the chunk still needs")
+            out = flash_attention(q, ka, va, pos_b[0], pc[0], causal=causal,
+                                  window=window, chunk=cfg.attn_chunk)
+        else:
+            out = flash_attention(q, ka, va, pos_b, pc, causal=causal,
+                                  window=window, chunk=cfg.attn_chunk)
     else:
         window = cfg.window if (cfg.attn_type == "swa" and not cross) else 0
         ka, va = _spread(k, v)

@@ -150,6 +150,34 @@ class Model:
         logits = lm_logits(params["head"], params["embed"], x, cfg)
         return logits[:, 0], {"caches": caches, "pos": state["pos"] + 1}
 
+    def extend(self, params, state: dict, tokens: jax.Array
+               ) -> tuple[jax.Array, dict]:
+        """Append a multi-token prompt chunk to an existing decode state.
+
+        The chunked-prefill primitive: runs the decode path with S > 1
+        tokens at positions ``state["pos"] .. state["pos"] + S - 1``, writing
+        KV into each sequence's cache ring at those offsets (recurrent
+        mixers advance from their carried state).  Returns the last
+        position's logits and the extended state — so a prompt can be fed
+        through the cache one fixed-size chunk at a time, and the final
+        chunk's logits seed decoding exactly like a one-shot ``prefill``.
+
+        tokens: (B, 1..S) int32.  Attention stacks support B == 1 only (a
+        prompt chunk needs per-sequence positions with multi-token queries);
+        serving admits one request at a time, so that is the natural shape.
+        """
+        cfg = self.cfg
+        x = embed_tokens(params["embed"], tokens, cfg)
+        B, S = tokens.shape
+        pos0 = state["pos"].astype(jnp.int32)
+        pos = pos0[:, None] + jnp.arange(S, dtype=jnp.int32)[None]   # (B, S)
+        x, caches, _ = self.decoder.apply(
+            params["decoder"], x, positions=pos, caches=state["caches"],
+            mode="decode")
+        x = apply_norm(params["final_norm"], x, cfg)
+        logits = lm_logits(params["head"], params["embed"], x[:, -1:], cfg)
+        return logits[:, 0], {"caches": caches, "pos": pos0 + S}
+
     def init_decode_state(self, batch_size: int, seq_len: int,
                           enc_len: int = 0) -> dict:
         dtype = jnp.dtype(self.cfg.dtype)

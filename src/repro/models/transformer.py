@@ -11,7 +11,11 @@ regardless of depth — a 95-layer model compiles as one scanned block.  The
 pattern remainder (e.g. recurrentgemma's 26 = 3*8 + 2) runs unscanned.
 
 Caches are pytrees mirroring the parameter stacking, so decode steps scan
-with the same structure.
+with the same structure.  ``mode="decode"`` accepts multi-token inputs too:
+attention writes the chunk's KV at its positions into the per-sequence rings
+(batch-1 only — see ``attention_forward``), recurrent mixers advance from
+their carried state — this is the ``Model.extend`` path that chunked prefill
+(``docs/serving.md``) is built on.
 """
 
 from __future__ import annotations

@@ -1,8 +1,11 @@
 """Precision policies: who decides how many digit planes a request runs.
 
-A policy is consulted by the serving engine when a request is admitted
-(``next_precision``) and fed the observed execution statistics when steps
-complete (``observe``).  Three implementations:
+A policy is consulted by the serving engine at ENQUEUE time
+(``ServeEngine.try_add`` calls ``next_precision`` once the request has
+joined the admission queue — a queue-full rejection consumes no grant, so a
+retry gets a fresh one; the granted budget then applies to the request's
+prefill chunks and every pooled decode step) and fed the observed execution
+statistics when the request finishes (``observe``).  Three implementations:
 
 * :class:`Fixed` — every request at one precision (the paper's static knob).
 * :class:`PerLayerSchedule` — a per-layer plane budget (early CNN layers are
@@ -16,7 +19,8 @@ complete (``observe``).  Three implementations:
 
 Policies are plain python state machines — they run OUTSIDE jit, between
 engine steps, and only ever hand integers (or dicts of integers) to the
-traced side through ``precision_scope``.
+traced side through ``precision_scope``.  See ``docs/serving.md`` for where
+they sit in the admission pipeline.
 """
 
 from __future__ import annotations

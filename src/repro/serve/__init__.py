@@ -1,1 +1,14 @@
-"""serve subpackage of the DSLOT-NN reproduction."""
+"""Serving layer: slot-pool engine + chunked-prefill admission pipeline.
+
+See ``docs/serving.md`` for the slot lifecycle and the admission/decode
+overlap design.
+"""
+
+from repro.serve.config import ServeConfig
+from repro.serve.engine import Request, ServeEngine, generate
+from repro.serve.prefill import (CANCELLED, DECODING, DONE, PENDING,
+                                 PREFILLING, PrefillPipeline, PrefillTask)
+
+__all__ = ["ServeConfig", "Request", "ServeEngine", "generate",
+           "PrefillPipeline", "PrefillTask", "PENDING", "PREFILLING",
+           "DECODING", "DONE", "CANCELLED"]

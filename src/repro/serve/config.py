@@ -1,0 +1,36 @@
+"""Serving-layer configuration (engine-level knobs, not model config).
+
+``ServeConfig`` controls the admission pipeline: how much prefill work the
+engine is allowed to interleave with each pooled decode step, and how deep
+the pending-request queue may grow.  Model-level execution knobs (DSLOT
+precision, block geometry) stay in ``repro.configs.base.DslotConfig``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    """Knobs for the chunked-prefill admission pipeline.
+
+    prefill_chunk: prompt tokens processed per unit of admission work.  The
+        engine runs at most ``chunks_per_step`` chunks of prefill per decode
+        step, so this bounds the decode-stall an admission can inflict on
+        live slots (one chunk forward instead of one full-prompt forward).
+        ``0`` disables chunking: each admission prefills its whole prompt in
+        one forward (the pre-pipeline blocking behaviour, still via the
+        queue).
+    chunks_per_step: admission-work budget per engine step.  1 (default)
+        gives the paper-style overlap — one chunk of serial admission work
+        rides along with every decode step; raise it to drain the queue
+        faster at the cost of longer per-step stalls.  Values below 1 are
+        clamped to 1 (admission cannot be paused through this knob).
+    max_queue: bound on requests waiting in the admission queue (pending +
+        in-flight prefill).  ``try_add`` returns False when full.  ``None``
+        means unbounded.
+    """
+    prefill_chunk: int = 32
+    chunks_per_step: int = 1
+    max_queue: int | None = None

@@ -1,26 +1,40 @@
-"""Serving engine: batched prefill + decode with slot-based continuous
-batching, DSLOT digit-serial execution mode, and per-request accounting.
+"""Serving engine: slot-pool continuous batching with a chunked-prefill
+admission pipeline, DSLOT digit-serial execution mode, and per-request
+accounting.
 
 ``generate`` is the simple batch API (prefill once, decode N tokens); in
 DSLOT mode it takes a runtime per-request precision and can return
 planes-executed statistics per request.
 
-``ServeEngine`` is the production shape: a fixed pool of B slots; requests
-join free slots, decode steps advance every live slot together (one jitted
-step for the whole pool), finished slots free up immediately.  Per-slot
-position vectors (threaded through the model's per-sequence KV-cache ring)
-make the batch composition fully dynamic without recompilation — admitting
-a request into a non-empty pool never disturbs other slots' decode
-positions.
+``ServeEngine`` is the production shape: a fixed pool of B slots; decode
+steps advance every live slot together (one jitted step for the whole
+pool), finished slots free up immediately.  Admission is NON-BLOCKING:
+``try_add`` only validates and enqueues; the engine's step loop interleaves
+at most one fixed-size chunk of prefill work per decode step
+(``ServeConfig.prefill_chunk`` / ``chunks_per_step``, executed by
+``repro.serve.prefill.PrefillPipeline``), so admitting a long prompt never
+stalls the pool for a full-prompt forward.  A request moves through
+PENDING -> PREFILLING -> DECODING -> DONE (``Request.phase``), and its slot
+joins the pooled decode the very step its last prompt chunk lands.
+
+Per-slot position vectors (threaded through the model's per-sequence
+KV-cache ring) make the batch composition fully dynamic without
+recompilation — merging a finished prefill into a non-empty pool never
+disturbs other slots' decode positions, and chunked admission stays
+token-exact versus a solo ``generate`` of the same prompt (in DSLOT mode
+this additionally requires a calibrated ``DslotConfig.act_scale``: the
+per-call-max quantization fallback is not invariant to how a prompt is
+split into chunks — see ``kernels/ops.py`` and ``docs/serving.md``).
 
 DSLOT serving mode (``cfg.dslot.enabled`` + ReLU MLPs): the engine prepares
 the model's weight-stationary plane tables ONCE at construction
 (``Model.prepare_dslot``), every request carries its own digit-plane budget
 (explicit ``Request.n_planes`` or assigned by a ``repro.runtime`` precision
-policy), the pooled decode step executes each slot's rows at that slot's
-precision (a per-row runtime argument — no retrace across precisions), and
-the per-request planes-executed account is fed back to the policy when the
-request finishes (the ``AdaptiveBudget`` loop).
+policy at enqueue time), prefill chunks and the pooled decode step execute
+each request's rows at that request's precision (a runtime argument — no
+retrace across precisions), and the per-request planes-executed account is
+fed back to the policy when the request finishes (the ``AdaptiveBudget``
+loop).
 """
 
 from __future__ import annotations
@@ -36,6 +50,9 @@ from repro.models import stats as stats_channel
 from repro.models.mlp import mlp_uses_dslot
 from repro.models.model_zoo import Model
 from repro.runtime import PolicyFeedback, PrecisionPolicy, precision_scope
+from repro.serve.config import ServeConfig
+from repro.serve.prefill import (CANCELLED, DECODING, DONE, PREFILLING,
+                                 PrefillPipeline)
 
 _ROWKEY = "mlp_up_dslot.row_planes_used"
 
@@ -136,14 +153,26 @@ class Request:
     out: list = field(default_factory=list)
     done: bool = False
     dslot_stats: dict | None = None    # set on finish in DSLOT mode
+    phase: str = "new"                 # pending|prefilling|decoding|done|...
+    enqueue_step: int | None = None    # engine step count at try_add
+    first_token_step: int | None = None  # step that emitted out[0]
+
+    @property
+    def ttft_steps(self) -> int | None:
+        """Engine steps from enqueue to first emitted token."""
+        if self.enqueue_step is None or self.first_token_step is None:
+            return None
+        return self.first_token_step - self.enqueue_step
 
 
 class ServeEngine:
-    """Slot-pool continuous batching on a single jitted decode step."""
+    """Slot-pool continuous batching on a single jitted decode step, with
+    chunked-prefill admission interleaved into the step loop."""
 
     def __init__(self, model: Model, params, *, n_slots: int,
                  max_len: int, sample: Callable = greedy_sample,
-                 precision_policy: PrecisionPolicy | None = None):
+                 precision_policy: PrecisionPolicy | None = None,
+                 serve_config: ServeConfig | None = None):
         self.model = model
         self.dslot = mlp_uses_dslot(model.cfg)
         # one-time weight-stationary lowering: every decode step executes
@@ -154,11 +183,18 @@ class ServeEngine:
         self.sample = sample
         self.policy = precision_policy
         self.n_bits = model.cfg.dslot.n_bits
+        self.serve_config = serve_config or ServeConfig()
         self.state = model.init_decode_state(n_slots, max_len)
         self.slot_req: list[Request | None] = [None] * n_slots
         self.next_tok = np.zeros(n_slots, np.int32)
         self._acc_planes = np.zeros(n_slots, np.float64)
         self._acc_steps = np.zeros(n_slots, np.int64)
+        self._steps = 0
+        self.pipeline = PrefillPipeline(
+            model=model, params=self.params, max_len=max_len,
+            chunk=self.serve_config.prefill_chunk,
+            chunks_per_step=self.serve_config.chunks_per_step,
+            max_queue=self.serve_config.max_queue)
 
         def _decode(p, st, t, npl):
             with stats_channel.collect() as sink, precision_scope(npl):
@@ -171,40 +207,95 @@ class ServeEngine:
     # ------------------------------------------------------------ requests
 
     def try_add(self, req: Request) -> bool:
-        """Admit a request into a free slot (prefill runs immediately).
+        """Enqueue a request for admission — NON-blocking.
 
-        The prefilled batch-1 state is merged into the pool at the slot's
-        row only — per-slot position vectors and per-sequence cache rings
-        mean other slots' decode state is untouched by the admission.
+        No model work happens here: the request joins the FIFO admission
+        queue and the step loop prefills it one ``prefill_chunk`` at a time,
+        interleaved with pooled decode steps.  Returns False only when the
+        admission queue is full (``ServeConfig.max_queue``) — retry later.
 
-        Policy-assigned precision: a scalar policy (``Fixed``,
-        ``AdaptiveBudget``) grants this request's plane budget directly; a
-        per-layer policy (``PerLayerSchedule``) is flattened to the budget
-        of the engine's DSLOT consumer (the MLP up-projection, falling back
-        to the schedule's ``"*"`` default).
+        Requests that can NEVER run are rejected immediately with
+        ``ValueError``: an empty prompt, a non-positive generation budget,
+        or ``len(prompt) + max_new > max_len`` (the KV ring would wrap and
+        silently corrupt the sequence mid-decode).
+
+        Policy-assigned precision (DSLOT mode) is granted here, at enqueue:
+        a scalar policy (``Fixed``, ``AdaptiveBudget``) grants this
+        request's plane budget directly; a per-layer policy
+        (``PerLayerSchedule``) is flattened to the budget of the engine's
+        DSLOT consumer (the MLP up-projection, falling back to the
+        schedule's ``"*"`` default).
         """
-        free = [i for i, r in enumerate(self.slot_req) if r is None]
-        if not free:
-            return False
-        i = free[0]
+        P = int(len(req.prompt))
+        if P < 1:
+            raise ValueError(f"request {req.uid}: empty prompt")
+        if req.max_new < 1:
+            raise ValueError(
+                f"request {req.uid}: max_new must be >= 1, got {req.max_new}")
+        if P + req.max_new > self.max_len:
+            raise ValueError(
+                f"request {req.uid}: prompt ({P}) + max_new ({req.max_new}) "
+                f"= {P + req.max_new} exceeds max_len ({self.max_len}); the "
+                f"KV ring would wrap and corrupt the sequence")
+        if not self.pipeline.enqueue(req):
+            return False        # queue full: the policy is NOT consulted, so
+                                # a later retry gets a fresh grant
         if self.dslot and req.n_planes is None and self.policy is not None:
             nxt = self.policy.next_precision()
             if isinstance(nxt, dict):
                 nxt = nxt.get("mlp_up_dslot", nxt.get("*", self.n_bits))
             req.n_planes = int(nxt)
-        # single-slot prefill through the batch-1 path, at the request's
-        # own precision
-        batch = {"tokens": jnp.asarray(req.prompt[None])}
-        with precision_scope(None if req.n_planes is None
-                             else req.n_planes):
-            logits, st = self.model.prefill(self.params, batch,
-                                            max_len=self.max_len)
-        self.state = _merge_slot(self.state, st, i)
-        self.slot_req[i] = req
-        self._acc_planes[i] = 0.0
-        self._acc_steps[i] = 0
-        self.next_tok[i] = int(jax.device_get(jnp.argmax(logits[0])))
+        req.enqueue_step = self._steps
         return True
+
+    def cancel(self, uid: int) -> bool:
+        """Abandon a request wherever it is in its lifecycle.
+
+        Pending: removed from the queue.  Mid-prefill: the private chunk
+        state is dropped and the reserved slot released — the pool was
+        never written, so nothing needs cleaning.  Decoding: the slot is
+        freed; its stale rows are invisible to other slots (per-sequence
+        rings) and are replaced wholesale by the next admission's merge.
+
+        Cancellation is terminal: ``req.done`` is set (with
+        ``phase == "cancelled"`` distinguishing it from a natural finish),
+        so ``while not req.done`` driving loops exit.  A cancelled request
+        is never returned from ``step()``.
+        """
+        if self.pipeline.cancel(uid):
+            return True
+        for i, req in enumerate(self.slot_req):
+            if req is not None and req.uid == uid:
+                req.phase = CANCELLED
+                req.done = True
+                self.slot_req[i] = None
+                return True
+        return False
+
+    @property
+    def queue_depth(self) -> int:
+        """Admitted-but-not-yet-decodable requests (pending + prefilling)."""
+        return len(self.pipeline)
+
+    @property
+    def steps(self) -> int:
+        """Engine steps taken so far (the clock ``ttft_steps`` is in)."""
+        return self._steps
+
+    def slot_phases(self) -> list[str]:
+        """Phase of each pool slot: 'free' | PREFILLING | DECODING."""
+        act = self.pipeline.active
+        return [PREFILLING if act is not None and act.slot == i
+                else (DECODING if r is not None else "free")
+                for i, r in enumerate(self.slot_req)]
+
+    def _free_slot(self, exclude: set = frozenset()) -> int | None:
+        act = self.pipeline.active
+        for i, r in enumerate(self.slot_req):
+            if r is None and (act is None or act.slot != i) \
+                    and i not in exclude:
+                return i
+        return None
 
     def _budget_vector(self) -> jax.Array:
         npl = [self.n_bits if r is None or r.n_planes is None
@@ -213,8 +304,27 @@ class ServeEngine:
 
     # ------------------------------------------------------------ stepping
 
+    def _admission_tick(self) -> None:
+        """One step's worth of admission work: at most ``chunks_per_step``
+        prompt chunks; completed prefills are merged into their slots' rows
+        (the PR 2 per-slot position vectors keep live slots undisturbed)
+        and decode from THIS step on."""
+        for task in self.pipeline.tick(self._free_slot):
+            i = task.slot
+            self.state = _merge_slot(self.state, task.state, i)
+            self.slot_req[i] = task.req
+            task.req.phase = DECODING
+            self._acc_planes[i] = 0.0
+            self._acc_steps[i] = 0
+            # first token through the engine's sample fn (greedy by default),
+            # matching what ``generate`` does with its prefill logits
+            self.next_tok[i] = int(jax.device_get(self.sample(task.logits)[0]))
+
     def step(self) -> list[Request]:
-        """Advance all live slots by one token; returns finished requests."""
+        """One engine step: admission chunk(s), then advance all live slots
+        by one token.  Returns finished requests."""
+        self._steps += 1
+        self._admission_tick()
         if all(r is None for r in self.slot_req):
             return []
         toks = jnp.asarray(self.next_tok[:, None])
@@ -228,12 +338,15 @@ class ServeEngine:
             if req is None:
                 continue
             req.out.append(int(self.next_tok[i]))
+            if req.first_token_step is None:
+                req.first_token_step = self._steps
             self.next_tok[i] = nxt[i]
             if rows is not None:
                 self._acc_planes[i] += float(rows[i])
                 self._acc_steps[i] += 1
             if len(req.out) >= req.max_new:
                 req.done = True
+                req.phase = DONE
                 self._finish_stats(i, req)
                 finished.append(req)
                 self.slot_req[i] = None

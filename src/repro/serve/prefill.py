@@ -1,0 +1,183 @@
+"""Chunked-prefill admission pipeline: digit-pipelined overlap for serving.
+
+The paper's core idea — start subsequent operations as soon as the first
+digits arrive instead of waiting for the full result — applied at the
+serving layer: instead of blocking the whole decode pool for one full-prompt
+forward per admission (the old ``try_add``), admission work is cut into
+fixed-size prompt chunks and the engine interleaves at most
+``chunks_per_step`` chunks with every pooled decode step.  Live slots keep
+decoding at their usual cadence; a pending prompt trickles into its KV cache
+a chunk at a time and the slot becomes decodable the very step its last
+chunk lands.
+
+Lifecycle of a request::
+
+    try_add --> PENDING ----> PREFILLING ----------> DECODING --> DONE
+               (queued,       (slot reserved;        (in the pooled
+                FIFO)          chunks accumulate      decode step)
+                               into a private
+                               batch-1 state)
+
+Chunk mechanics: the first chunk runs ``model.prefill`` (builds a fresh
+batch-1 ring sized for ``max_len``), later chunks run ``model.extend``
+(multi-token decode-mode append at the current offset, writing KV at
+positions ``off .. off+c-1`` through the per-sequence position vectors).
+The accumulating state is **private** to the task — the pool is written
+exactly once, by ``_merge_slot`` on completion, which replaces the reserved
+slot's rows wholesale.  That makes the pipeline trivially safe against
+everything that happens to the pool in between (pooled decode steps write
+garbage KV into reserved rows exactly as they always did into free rows;
+the final merge wipes it) and makes cancelling a mid-prefill request free:
+drop the task, nothing to clean up.
+
+Sliding-window attention is the one stack that cannot extend a ring
+chunk-by-chunk (a chunk landing at offset ``o`` recycles ring slots that
+still hold in-window keys needed by the chunk's own earliest queries), so
+SWA configs fall back to whole-prompt chunks — admission is still
+queue-paced, one admission per step, but each is a single forward.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING, Any, Callable
+
+import jax.numpy as jnp
+
+from repro.runtime import precision_scope
+
+if TYPE_CHECKING:                                    # pragma: no cover
+    from repro.serve.engine import Request
+
+__all__ = ["PENDING", "PREFILLING", "DECODING", "DONE", "CANCELLED",
+           "PrefillTask", "PrefillPipeline"]
+
+# Request lifecycle phases (``Request.phase``).
+PENDING = "pending"          # queued, no slot yet
+PREFILLING = "prefilling"    # slot reserved, prompt chunks in flight
+DECODING = "decoding"        # merged into the pool, advancing every step
+DONE = "done"                # finished, slot released
+CANCELLED = "cancelled"      # abandoned at any earlier phase
+
+
+@dataclass
+class PrefillTask:
+    """One in-flight admission: a request, its reserved slot, and the
+    private batch-1 decode state its prompt chunks accumulate into."""
+    req: "Request"
+    slot: int
+    offset: int = 0                  # prompt tokens already processed
+    state: dict | None = None        # batch-1 model decode state
+    logits: Any = None               # last chunk's final-position logits
+    chunks_done: int = 0
+
+    @property
+    def remaining(self) -> int:
+        return len(self.req.prompt) - self.offset
+
+
+@dataclass
+class PrefillPipeline:
+    """FIFO admission queue + the chunk executor (one task in flight).
+
+    The engine calls :meth:`tick` once per step with a free-slot provider;
+    the pipeline claims the queue head into a slot when one is available and
+    advances the in-flight task by at most ``chunks_per_step`` chunks,
+    returning completed tasks for the engine to merge into the pool.
+    """
+    model: Any
+    params: Any
+    max_len: int
+    chunk: int = 32
+    chunks_per_step: int = 1
+    max_queue: int | None = None
+    queue: deque = field(default_factory=deque)
+    active: PrefillTask | None = None
+
+    def __post_init__(self):
+        if self.model.cfg.attn_type == "swa" and self.chunk:
+            # SWA rings recycle slots within chunk+window spans (see module
+            # docstring): chunked extension would drop needed keys.
+            self.chunk = 0
+
+    # ------------------------------------------------------------- queue
+
+    def __len__(self) -> int:
+        """Admissions not yet decodable: queued + in-flight."""
+        return len(self.queue) + (1 if self.active is not None else 0)
+
+    def enqueue(self, req: "Request") -> bool:
+        if self.max_queue is not None and len(self) >= self.max_queue:
+            return False
+        req.phase = PENDING
+        self.queue.append(req)
+        return True
+
+    def cancel(self, uid: int) -> bool:
+        """Drop a pending or in-flight admission.  Mid-prefill cancellation
+        is free: the pool was never written, so only the private task state
+        is discarded (its reserved slot is simply released).  A cancelled
+        request is terminal: ``done`` is set so completion loops exit."""
+        for req in self.queue:
+            if req.uid == uid:
+                self.queue.remove(req)
+                req.phase = CANCELLED
+                req.done = True
+                return True
+        if self.active is not None and self.active.req.uid == uid:
+            self.active.req.phase = CANCELLED
+            self.active.req.done = True
+            self.active = None
+            return True
+        return False
+
+    # ------------------------------------------------------------- stepping
+
+    def tick(self, free_slot: Callable[[set], int | None]
+             ) -> list[PrefillTask]:
+        """Run up to ``chunks_per_step`` chunks of admission work.
+
+        ``free_slot(exclude)`` returns a claimable slot index not in
+        ``exclude``, or None (pool full).  Returns the tasks whose LAST
+        chunk landed this tick — the engine merges them and their slots
+        decode this same step.  Slots of tasks completed WITHIN this tick
+        are excluded from claiming (the engine merges them only after the
+        tick returns), so ``chunks_per_step > 1`` can never double-book a
+        slot.
+        """
+        completed: list[PrefillTask] = []
+        landed: set[int] = set()
+        for _ in range(max(1, self.chunks_per_step)):
+            if self.active is None and self.queue:
+                slot = free_slot(landed)
+                if slot is None:
+                    break
+                req = self.queue.popleft()
+                req.phase = PREFILLING
+                self.active = PrefillTask(req=req, slot=slot)
+            if self.active is None:
+                break
+            if self._advance(self.active):
+                completed.append(self.active)
+                landed.add(self.active.slot)
+                self.active = None
+        return completed
+
+    def _advance(self, task: PrefillTask) -> bool:
+        """Process one prompt chunk; True when the prompt is fully in."""
+        req = task.req
+        P = len(req.prompt)
+        c = self.chunk if self.chunk > 0 else P
+        end = min(task.offset + c, P)
+        tokens = jnp.asarray(req.prompt[None, task.offset:end])
+        with precision_scope(req.n_planes):
+            if task.offset == 0:
+                task.logits, task.state = self.model.prefill(
+                    self.params, {"tokens": tokens}, max_len=self.max_len)
+            else:
+                task.logits, task.state = self.model.extend(
+                    self.params, task.state, tokens)
+        task.offset = end
+        task.chunks_done += 1
+        return end >= P

@@ -1,0 +1,38 @@
+"""Docs stay honest: links resolve, code fences at least parse.
+
+The CI ``docs`` job additionally EXECUTES the import-bearing fences
+(``tools/check_docs.py`` without ``--no-exec``); here we keep the fast
+invariants in tier-1 so a broken docs change fails locally too.
+"""
+
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "tools"))
+
+import check_docs  # noqa: E402
+
+
+def test_docs_exist():
+    for name in ("architecture.md", "serving.md", "kernel.md"):
+        assert (ROOT / "docs" / name).is_file(), name
+
+
+def test_internal_links_resolve():
+    assert check_docs.check_links() == []
+
+
+def test_fences_parse():
+    assert check_docs.check_fences(run=False) == []
+
+
+def test_docs_have_runnable_fences():
+    """Each doc must carry at least one fence the CI job will execute —
+    otherwise the 'docs code runs' guarantee is vacuous."""
+    for name in ("architecture.md", "serving.md", "kernel.md"):
+        fences = check_docs.extract_fences(ROOT / "docs" / name)
+        runnable = [1 for _, info, code in fences
+                    if check_docs._is_python(info)
+                    and check_docs._should_exec(info, code)]
+        assert runnable, f"{name} has no executable python fence"

@@ -1,0 +1,321 @@
+"""Chunked-prefill admission pipeline: lifecycle, edge cases, exactness.
+
+The bar for everything here is the PR 2 regression contract: whatever the
+admission pipeline does, every request's emitted tokens must exactly match
+a solo ``generate`` run of the same prompt.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.registry import ARCHS
+from repro.models.model_zoo import build_model
+from repro.serve import (DECODING, PENDING, PREFILLING, Request, ServeConfig,
+                         ServeEngine, generate)
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = ARCHS["olmo-1b"].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(3))
+    return cfg, model, params
+
+
+def _prompt(n, seed=0):
+    return np.random.RandomState(seed).randint(0, 256, size=n).astype(np.int32)
+
+
+def _solo(model, params, prompt, n):
+    return list(np.asarray(
+        generate(model, params, {"tokens": jnp.asarray(prompt[None])}, n)[0]))
+
+
+# ------------------------------------------------------------- edge cases
+
+def test_prompt_shorter_than_one_chunk(lm):
+    """A prompt that fits one chunk admits in a single tick and matches the
+    one-shot prefill path exactly (it IS the one-shot path)."""
+    _, model, params = lm
+    eng = ServeEngine(model, params, n_slots=1, max_len=32,
+                      serve_config=ServeConfig(prefill_chunk=16))
+    p = _prompt(3)
+    r = Request(uid=1, prompt=p, max_new=4)
+    assert eng.try_add(r)
+    assert r.phase == PENDING
+    while not r.done:
+        eng.step()
+    assert r.out == _solo(model, params, p, 4)
+    assert r.ttft_steps == 1                       # admitted + decoded step 1
+
+
+def test_prompt_not_multiple_of_chunk(lm):
+    """13 tokens at chunk 5 -> chunks of 5/5/3; the ragged tail must land at
+    the right offsets and stay token-exact."""
+    _, model, params = lm
+    eng = ServeEngine(model, params, n_slots=1, max_len=64,
+                      serve_config=ServeConfig(prefill_chunk=5))
+    p = _prompt(13, seed=1)
+    r = Request(uid=1, prompt=p, max_new=5)
+    assert eng.try_add(r)
+    eng.step()
+    assert r.phase == PREFILLING and r.out == []   # chunk 1 of 3 in flight
+    eng.step()
+    assert r.phase == PREFILLING and r.out == []
+    eng.step()                                     # last chunk lands ...
+    assert r.phase == DECODING and len(r.out) == 1  # ... decodable SAME step
+    while not r.done:
+        eng.step()
+    assert r.out == _solo(model, params, p, 5)
+    assert r.ttft_steps == 3                       # ceil(13 / 5) chunks
+
+
+def test_chunk_exact_multiple_boundary(lm):
+    """Prompt length an exact multiple of the chunk (no ragged tail)."""
+    _, model, params = lm
+    eng = ServeEngine(model, params, n_slots=1, max_len=64,
+                      serve_config=ServeConfig(prefill_chunk=4))
+    p = _prompt(8, seed=2)
+    r = Request(uid=1, prompt=p, max_new=4)
+    assert eng.try_add(r)
+    while not r.done:
+        eng.step()
+    assert r.out == _solo(model, params, p, 4)
+    assert r.ttft_steps == 2
+
+
+def test_slot_freed_mid_prefill(lm):
+    """Cancelling an in-flight prefill frees its reserved slot without ever
+    having touched the pool; the next admission into that slot is exact."""
+    _, model, params = lm
+    eng = ServeEngine(model, params, n_slots=1, max_len=64,
+                      serve_config=ServeConfig(prefill_chunk=4))
+    victim = Request(uid=1, prompt=_prompt(12, seed=3), max_new=3)
+    assert eng.try_add(victim)
+    eng.step()                                     # chunk 1 of 3 in flight
+    assert eng.slot_phases() == [PREFILLING]
+    assert eng.cancel(1)
+    assert victim.phase == "cancelled" and eng.slot_phases() == ["free"]
+    p = _prompt(9, seed=4)
+    r = Request(uid=2, prompt=p, max_new=4)
+    assert eng.try_add(r)
+    while not r.done:
+        eng.step()
+    assert r.out == _solo(model, params, p, 4)
+
+
+def test_mid_prefill_cancel_does_not_disturb_live_slot(lm):
+    """A decode-live slot must be unaffected by a neighbouring prefill that
+    is started and then abandoned mid-flight."""
+    _, model, params = lm
+    eng = ServeEngine(model, params, n_slots=2, max_len=64,
+                      serve_config=ServeConfig(prefill_chunk=4))
+    p = _prompt(6, seed=5)
+    live = Request(uid=1, prompt=p, max_new=8)
+    assert eng.try_add(live)
+    eng.step(); eng.step()                         # live and decoding
+    assert eng.try_add(Request(uid=2, prompt=_prompt(12, seed=6), max_new=3))
+    eng.step()                                     # uid 2 mid-prefill
+    assert eng.slot_phases()[1] == PREFILLING
+    assert eng.cancel(2)
+    while not live.done:
+        eng.step()
+    assert live.out == _solo(model, params, p, 8)
+
+
+def test_full_pool_burst_drains_fifo(lm):
+    """More requests than slots, enqueued at once: the queue must drain in
+    FIFO order as slots free, every request exact."""
+    _, model, params = lm
+    eng = ServeEngine(model, params, n_slots=2, max_len=64,
+                      serve_config=ServeConfig(prefill_chunk=8))
+    prompts = [_prompt(4 + i, seed=10 + i) for i in range(6)]
+    reqs = [Request(uid=i, prompt=p, max_new=3) for i, p in enumerate(prompts)]
+    for r in reqs:
+        assert eng.try_add(r)
+    assert eng.queue_depth == 6
+    order = []
+    for _ in range(40):
+        for r in eng.step():
+            order.append(r.uid)
+        if len(order) == 6:
+            break
+    assert order == [0, 1, 2, 3, 4, 5]             # FIFO admission = FIFO done
+    assert eng.queue_depth == 0
+    for r, p in zip(reqs, prompts):
+        assert r.out == _solo(model, params, p, 3), r.uid
+
+
+def test_staggered_chunked_admissions_match_solo(lm):
+    """The PR 2 staggered-admission bar, now with multi-chunk prompts: a
+    long prompt trickling in chunk-by-chunk must not disturb slots that are
+    decoding, and must itself come out token-exact."""
+    _, model, params = lm
+    eng = ServeEngine(model, params, n_slots=3, max_len=64,
+                      serve_config=ServeConfig(prefill_chunk=4))
+    prompts = [_prompt(3, seed=20), _prompt(11, seed=21), _prompt(6, seed=22)]
+    reqs = [Request(uid=i, prompt=p, max_new=5)
+            for i, p in enumerate(prompts)]
+    assert eng.try_add(reqs[0])
+    eng.step()                                     # slot 0 decoding
+    assert eng.try_add(reqs[1])                    # 3-chunk prompt
+    eng.step(); eng.step()
+    assert eng.try_add(reqs[2])                    # stagger deeper
+    done = []
+    for _ in range(15):
+        done += eng.step()
+    assert {r.uid for r in done} == {0, 1, 2}
+    for r, p in zip(reqs, prompts):
+        assert r.out == _solo(model, params, p, 5), r.uid
+
+
+def test_admission_budget_is_one_chunk_per_step(lm):
+    """With two queued requests, admission work is serialized: one chunk per
+    step, FIFO — the second prompt does not start until the first lands."""
+    _, model, params = lm
+    eng = ServeEngine(model, params, n_slots=2, max_len=64,
+                      serve_config=ServeConfig(prefill_chunk=4))
+    a = Request(uid=1, prompt=_prompt(8, seed=30), max_new=2)
+    b = Request(uid=2, prompt=_prompt(4, seed=31), max_new=2)
+    assert eng.try_add(a) and eng.try_add(b)
+    eng.step()                                     # a: chunk 1/2
+    assert a.phase == PREFILLING and b.phase == PENDING
+    eng.step()                                     # a: chunk 2/2 -> decoding
+    assert a.phase == DECODING and b.phase == PENDING
+    eng.step()                                     # b admits
+    assert b.phase == DECODING
+    while not (a.done and b.done):
+        eng.step()
+    assert a.out == _solo(model, params, a.prompt, 2)
+    assert b.out == _solo(model, params, b.prompt, 2)
+
+
+def test_chunks_per_step_two_does_not_double_book_a_slot(lm):
+    """Regression: with chunks_per_step >= 2, a task completing mid-tick
+    must not have its slot handed to the next queued request before the
+    engine merges it (the second merge would orphan the first request)."""
+    _, model, params = lm
+    eng = ServeEngine(model, params, n_slots=1, max_len=64,
+                      serve_config=ServeConfig(prefill_chunk=4,
+                                               chunks_per_step=2))
+    a = Request(uid=1, prompt=_prompt(4, seed=60), max_new=2)
+    b = Request(uid=2, prompt=_prompt(4, seed=61), max_new=2)
+    assert eng.try_add(a) and eng.try_add(b)
+    done = []
+    for _ in range(10):
+        done += eng.step()
+        if a.done and b.done:
+            break
+    assert a.done and b.done
+    assert {r.uid for r in done} == {1, 2}
+    assert a.out == _solo(model, params, a.prompt, 2)
+    assert b.out == _solo(model, params, b.prompt, 2)
+
+
+def test_cancel_decoding_request_is_terminal(lm):
+    """cancel() of a DECODING request must set done (phase 'cancelled') so
+    ``while not req.done`` driving loops exit."""
+    _, model, params = lm
+    eng = ServeEngine(model, params, n_slots=1, max_len=32,
+                      serve_config=ServeConfig(prefill_chunk=8))
+    r = Request(uid=1, prompt=_prompt(3, seed=62), max_new=8)
+    assert eng.try_add(r)
+    eng.step(); eng.step()
+    assert r.phase == DECODING
+    assert eng.cancel(1)
+    assert r.done and r.phase == "cancelled"
+    assert eng.slot_phases() == ["free"]
+
+
+def test_max_queue_bound(lm):
+    _, model, params = lm
+    eng = ServeEngine(model, params, n_slots=1, max_len=32,
+                      serve_config=ServeConfig(prefill_chunk=8, max_queue=2))
+    assert eng.try_add(Request(uid=1, prompt=_prompt(3), max_new=2))
+    assert eng.try_add(Request(uid=2, prompt=_prompt(3), max_new=2))
+    assert not eng.try_add(Request(uid=3, prompt=_prompt(3), max_new=2))
+    eng.step()                                     # uid 1 admits + decodes
+    assert eng.try_add(Request(uid=3, prompt=_prompt(3), max_new=2))
+
+
+def test_swa_falls_back_to_whole_prompt_chunks():
+    """Sliding-window rings can't be extended chunk-by-chunk (a landing
+    chunk recycles slots holding in-window keys its own queries need); SWA
+    configs must fall back to whole-prompt admission and stay exact."""
+    cfg = ARCHS["h2o-danube-3-4b"].reduced()          # window = 32 reduced
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(5))
+    eng = ServeEngine(model, params, n_slots=1, max_len=48,
+                      serve_config=ServeConfig(prefill_chunk=4))
+    assert eng.pipeline.chunk == 0                    # gate engaged
+    p = _prompt(10, seed=50)
+    r = Request(uid=1, prompt=p, max_new=4)
+    assert eng.try_add(r)
+    eng.step()
+    assert r.phase == DECODING and r.ttft_steps == 1  # one-shot admission
+    while not r.done:
+        eng.step()
+    assert r.out == _solo(model, params, p, 4)
+
+
+# ------------------------------------------------------------- validation
+
+def test_try_add_rejects_overlong_request(lm):
+    """Regression: prompt + max_new > max_len used to report success and
+    corrupt the KV ring later; it must be rejected at enqueue."""
+    _, model, params = lm
+    eng = ServeEngine(model, params, n_slots=1, max_len=32)
+    with pytest.raises(ValueError, match="exceeds max_len"):
+        eng.try_add(Request(uid=1, prompt=_prompt(30), max_new=10))
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.try_add(Request(uid=2, prompt=np.zeros(0, np.int32), max_new=4))
+    with pytest.raises(ValueError, match="max_new"):
+        eng.try_add(Request(uid=3, prompt=_prompt(4), max_new=0))
+    # a valid request still admits after the rejections
+    r = Request(uid=4, prompt=_prompt(4), max_new=2)
+    assert eng.try_add(r)
+    while not r.done:
+        eng.step()
+    assert r.out == _solo(model, params, r.prompt, 2)
+
+
+# ------------------------------------------------------------- DSLOT mode
+
+def test_chunked_admission_keeps_per_request_precision():
+    """Per-request DSLOT plane budgets must apply to prefill chunks and
+    pooled decode alike through chunked admission.
+
+    ``act_scale`` is pinned: with the per-call ``jnp.max`` fallback the
+    quantization step would depend on the token window each chunk sees, and
+    chunked prefill could not be bit-equal to a one-shot prefill.  A fixed
+    calibrated scale is the serving configuration anyway (no data-dependent
+    max in the hot path)."""
+    import dataclasses
+    from repro.configs.base import DslotConfig
+
+    cfg = dataclasses.replace(
+        ARCHS["olmo-1b"].reduced(), act="relu", glu=False,
+        dslot=DslotConfig(enabled=True, block_m=16, block_n=32, block_k=16,
+                          act_scale=0.05))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(4))
+    eng = ServeEngine(model, params, n_slots=2, max_len=64,
+                      serve_config=ServeConfig(prefill_chunk=4))
+    hi = Request(uid=1, prompt=_prompt(10, seed=40), max_new=3, n_planes=8)
+    lo = Request(uid=2, prompt=_prompt(10, seed=41), max_new=3, n_planes=2)
+    assert eng.try_add(hi) and eng.try_add(lo)
+    done = []
+    while len(done) < 2:
+        done += eng.step()
+    for r in (hi, lo):
+        assert r.dslot_stats is not None
+        assert r.dslot_stats["n_planes"] == r.n_planes
+    assert lo.dslot_stats["planes_used_mean"] <= 2.0 + 1e-6
+    # chunked admission at a runtime budget matches solo generate at the
+    # same budget
+    pp = model.prepare_dslot(params)
+    solo = generate(model, pp, {"tokens": jnp.asarray(lo.prompt[None])}, 3,
+                    n_planes=2)
+    assert lo.out == list(np.asarray(solo[0]))

@@ -1,0 +1,150 @@
+"""Docs checker: code fences in ``docs/*.md`` must RUN, links must resolve.
+
+Two checks, used by the CI ``docs`` job and (in ``--no-exec`` form) by the
+tier-1 test ``tests/test_docs.py``:
+
+1. **Fences** — every ```` ```python ```` fence in ``docs/*.md`` that
+   contains an ``import`` is executed with ``PYTHONPATH=src`` in a fresh
+   interpreter; a non-zero exit fails the check.  Fences whose info string
+   contains ``noexec`` (e.g. ```` ```python noexec ````) are only
+   syntax-checked — use that for illustrative fragments with free
+   variables.  README fences are syntax-checked only (they are quick-start
+   fragments by design).
+2. **Links** — every relative markdown link ``[...](path)`` in
+   ``README.md`` and ``docs/*.md`` must point at an existing file or
+   directory (anchors are stripped; ``http(s)://``, ``mailto:`` and
+   pure-anchor links are ignored).
+
+Usage:
+    python tools/check_docs.py [--no-exec] [--verbose]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DOCS = ROOT / "docs"
+FENCE_RE = re.compile(r"^```(\S*)[ \t]*(.*)$")
+LINK_RE = re.compile(r"\[[^\]\[]*\]\(([^)\s]+)\)")
+
+
+def extract_fences(md_path: Path) -> list[tuple[int, str, str]]:
+    """Return (first_line_no, info_string, code) per fenced block."""
+    fences = []
+    lines = md_path.read_text().splitlines()
+    i = 0
+    while i < len(lines):
+        m = FENCE_RE.match(lines[i])
+        if m and lines[i].startswith("```") and lines[i].strip() != "```":
+            info = (m.group(1) + " " + m.group(2)).strip()
+            body, start = [], i + 1
+            i += 1
+            while i < len(lines) and lines[i].strip() != "```":
+                body.append(lines[i])
+                i += 1
+            fences.append((start + 1, info, "\n".join(body)))
+        i += 1
+    return fences
+
+
+def _is_python(info: str) -> bool:
+    return info.split()[0] in ("python", "py") if info else False
+
+
+def _should_exec(info: str, code: str) -> bool:
+    return ("noexec" not in info.split()
+            and re.search(r"^(import|from)\s+\w", code, re.M) is not None)
+
+
+def check_fences(*, run: bool = True, verbose: bool = False) -> list[str]:
+    errors = []
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (str(ROOT / "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    targets = sorted(DOCS.glob("*.md")) + [ROOT / "README.md"]
+    for md in targets:
+        exec_ok = run and md.parent == DOCS     # README: syntax-check only
+        for line, info, code in extract_fences(md):
+            if not _is_python(info):
+                continue
+            rel = md.relative_to(ROOT)
+            try:
+                compile(code, f"{rel}:{line}", "exec")
+            except SyntaxError as e:
+                errors.append(f"{rel}:{line}: fence does not parse: {e}")
+                continue
+            if not (exec_ok and _should_exec(info, code)):
+                continue
+            if verbose:
+                print(f"running {rel}:{line} ...", flush=True)
+            with tempfile.NamedTemporaryFile(
+                    "w", suffix=".py", delete=False) as f:
+                f.write(code)
+                tmp = f.name
+            try:
+                r = subprocess.run([sys.executable, tmp], env=env,
+                                   capture_output=True, text=True,
+                                   timeout=900, cwd=ROOT)
+                if r.returncode != 0:
+                    tail = (r.stderr or r.stdout).strip().splitlines()[-8:]
+                    errors.append(f"{rel}:{line}: fence FAILED "
+                                  f"(exit {r.returncode}):\n  "
+                                  + "\n  ".join(tail))
+                elif verbose:
+                    print(f"  ok ({rel}:{line})")
+            finally:
+                os.unlink(tmp)
+    return errors
+
+
+def check_links(verbose: bool = False) -> list[str]:
+    errors = []
+    for md in [ROOT / "README.md"] + sorted(DOCS.glob("*.md")):
+        for m in LINK_RE.finditer(md.read_text()):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = target.split("#")[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            if ROOT not in resolved.parents and resolved != ROOT:
+                # Relative links that escape the repo are site-relative on
+                # GitHub (the CI badge's ../../actions/...) — nothing in the
+                # tree to verify them against, so they are skipped, not
+                # failed.
+                continue
+            if not resolved.exists():
+                errors.append(f"{md.relative_to(ROOT)}: broken link "
+                              f"-> {target}")
+            elif verbose:
+                print(f"link ok: {md.name} -> {target}")
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--no-exec", action="store_true",
+                    help="syntax-check fences instead of executing them")
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args()
+
+    errors = check_links(verbose=args.verbose)
+    errors += check_fences(run=not args.no_exec, verbose=args.verbose)
+    for e in errors:
+        print(f"ERROR: {e}", file=sys.stderr)
+    if not errors:
+        mode = "syntax-checked" if args.no_exec else "executed"
+        print(f"docs OK (links resolved, fences {mode})")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
