@@ -10,9 +10,18 @@ numbers are structural — interpret mode is not a performance proxy).
 ``dslot_matmul`` (which re-sorts/re-encodes the weight side every call),
 plus skipped-frac per runtime precision — written to ``BENCH_precision.json``.
 
+``--compare-encoding`` measures fused in-kernel digit encoding against the
+pre-fusion materialized (D, M, K) plane-tensor path (kept verbatim in this
+file as the baseline): wall-clock, XLA bytes-moved via
+``jax.jit(...).lower().compile().cost_analysis()``, the activation-stream
+footprint, and a bit-exactness cross-check — written to
+``BENCH_kernel.json``.  Exits nonzero (CI-fatal) if the fused path moves
+more activation bytes than the materialized one.
+
 Standalone CLI (used by the CI smoke job):
     python benchmarks/bench_kernel.py [--smoke] [--json out.json]
         [--sweep-precision [--precision-json BENCH_precision.json]]
+        [--compare-encoding [--kernel-json BENCH_kernel.json]]
 """
 
 from __future__ import annotations
@@ -96,18 +105,210 @@ def run(smoke: bool = False) -> list[str]:
         rows.append(f"kernel.layer_{name}_planes_used,"
                     f"{used.mean():.3f},skipped={float(st.skipped_frac):.4f}")
 
-    # pallas interpret-mode parity check at bench scale, tiled K
+    # pallas interpret-mode parity check at bench scale, tiled K (the kernel
+    # consumes quantized activations and encodes digits in-kernel; the
+    # oracle evaluates over an explicitly materialized plane tensor)
     from repro.kernels.ref import make_planes, dslot_matmul_ref
     from repro.kernels.dslot_matmul import dslot_matmul_pallas
     aq = jnp.asarray(rng.integers(0, 256, (64, 64)), jnp.int32)
     wp = jnp.asarray(rng.normal(0, 0.05, (64, 64)), jnp.float32)
-    planes = make_planes(aq, 8)
-    o1 = dslot_matmul_pallas(planes, wp, block_m=32, block_n=32,
+    o1 = dslot_matmul_pallas(aq, wp, block_m=32, block_n=32,
                              block_k=32).out
-    o2 = dslot_matmul_ref(planes, wp, 8)
+    o2 = dslot_matmul_ref(make_planes(aq, 8), wp, 8)
     rows.append(f"kernel.pallas_vs_ref_maxerr,"
                 f"{float(jnp.abs(o1 - o2).max()):.2e},interpret-tiled-k")
     return rows
+
+
+# --------------------------------------------------- encoding comparison
+
+def _materialized_execute(prep, x, npl):
+    """The PRE-FUSION execution path, kept verbatim as the benchmark
+    baseline: encode ALL digit planes of the quantized activations into a
+    (D, M, K) int8 tensor, restack it into per-step chunks, then stream the
+    planes through the same scaled-matmul scan with the same chunk-aware
+    termination replay.  This is what ``dslot_execute`` did before digit
+    encoding was fused into the kernels — byte-for-byte the old dataflow,
+    so the fused path can be gated on (a) moving strictly fewer bytes and
+    (b) bit-exact outputs/planes_used against it.
+    """
+    from repro.kernels.ref import make_planes
+
+    cfg = prep
+    M, K = x.shape
+    q, step = ops.quantize_activations(x, n_bits=cfg.n_bits,
+                                       signed=cfg.signed, scale=cfg.x_scale)
+    planes = make_planes(q, cfg.n_bits)                     # (D, M, K) HBM
+    D = planes.shape[0]
+    npl_c = jnp.clip(jnp.asarray(npl, jnp.int32), 1, D)
+    pmask = (jnp.arange(D) < npl_c)[:, None, None]
+    planes = planes * pmask.astype(planes.dtype)
+    planes = jnp.pad(planes, [(0, 0), (0, (-M) % cfg.block_m),
+                              (0, cfg.w.shape[0] - K)])
+    D, Mp, Kp = planes.shape
+    N = cfg.w.shape[1]
+    bk = cfg.block_k
+    Kt = Kp // bk
+    Mt, Nt = Mp // cfg.block_m, N // cfg.block_n
+    w_chunks = cfg.w.astype(jnp.float32).reshape(Kt, bk, N)
+    # the old layout: every plane of every chunk, stacked — D*M*K int8
+    p_chunks = planes.reshape(D, Mp, Kt, bk).transpose(0, 2, 1, 3) \
+        .reshape(D * Kt, Mp, bk)
+    scales = jnp.exp2(jnp.asarray(cfg.n_bits - 1, jnp.float32)
+                      - jnp.arange(D, dtype=jnp.float32))
+    tail = jnp.exp2(jnp.asarray(cfg.n_bits, jnp.float32)
+                    - npl_c.astype(jnp.float32))
+    step_rem = (scales[:, None, None] * cfg.suffix_colsum[None]
+                + ((scales - tail)[:, None, None]
+                   * cfg.total_colsum[0][None, None, :])).reshape(D * Kt, N)
+
+    def body(acc, s):
+        p, c, scale, rem = s
+        wc = jax.lax.dynamic_index_in_dim(w_chunks, c, keepdims=False)
+        acc = acc + scale * jnp.dot(p.astype(jnp.float32), wc,
+                                    preferred_element_type=jnp.float32)
+        dead = jnp.all((acc + rem[None, :]).reshape(
+            Mt, cfg.block_m, Nt, cfg.block_n) < 0.0, axis=(1, 3))
+        return acc, dead
+
+    c_idx = jnp.tile(jnp.arange(Kt), D)
+    acc, dead_after = jax.lax.scan(
+        body, jnp.zeros((Mp, N), jnp.float32),
+        (p_chunks, c_idx, jnp.repeat(scales, Kt), step_rem))
+    out = jnp.maximum(acc, 0.0)
+    ever = jnp.any(dead_after, axis=0)
+    first = jnp.argmax(dead_after, axis=0)
+    used = jnp.where(ever, first // Kt + 1, D).astype(jnp.int32)
+    used = jnp.minimum(used, npl_c)
+    return out[:M, :cfg.d_out] * step, used
+
+
+def _bytes_accessed(fn, *args) -> float:
+    cost = jax.jit(fn).lower(*args).compile().cost_analysis()
+    if not isinstance(cost, dict):                  # some versions: [dict]
+        cost = cost[0]
+    return float(cost.get("bytes accessed", float("nan")))
+
+
+def _max_int_tensor_bytes(fn, *args) -> int:
+    """Largest integer-typed tensor anywhere in ``fn``'s jaxpr, in bytes.
+
+    The structural detector for a reintroduced digit-plane materialization:
+    the old path's (D, M, K) plane tensor (or its (D*Kt, M, bk) restack) is
+    by far the largest integer intermediate either path could create, so
+    'fused max int tensor < plane-tensor bytes' proves no plane-sized
+    activation encoding exists in the traced graph — independent of
+    whatever XLA's cost model reports.
+    """
+    import re
+
+    txt = str(jax.make_jaxpr(fn)(*args))            # includes scan bodies
+    best = 0
+    for m in re.finditer(r"\b[iu](\d+)\[([\d,]+)\]", txt):
+        elems = 1
+        for d in m.group(2).split(","):
+            elems *= int(d)
+        best = max(best, elems * int(m.group(1)) // 8)
+    return best
+
+
+def run_encoding_comparison(smoke: bool = False) -> dict:
+    """Fused in-kernel digit encoding vs the materialized (D, M, K) plane
+    tensor: wall-clock, XLA bytes-moved (``cost_analysis``), the
+    activation-stream footprint each path hands to its compute, and a
+    bit-exactness cross-check.  Emits the ``BENCH_kernel.json`` payload;
+    byte regressions (fused moving MORE than materialized, or a <4x
+    activation-stream reduction) are recorded in ``report["violations"]``
+    and turned into a nonzero exit by the CLI AFTER the artifact is
+    written; diverging outputs/planes_used raise immediately.
+    """
+    from repro.kernels.dslot_matmul import q_storage_dtype
+
+    rng = np.random.default_rng(0)
+    M = K = N = 64 if smoke else 256
+    bm = bn = 32 if smoke else 64
+    bk = K // 2
+    n_bits = 8
+    x = jnp.asarray(np.maximum(rng.normal(0.3, 0.4, (M, K)), 0), jnp.float32)
+    w = rng.normal(0, 0.05, (K, N)).astype(np.float32)
+    w[:, rng.permutation(N)[:N // 2]] -= 0.10
+    prep = ops.dslot_prepare(jnp.asarray(w), n_bits=n_bits, relu=True,
+                             block_m=bm, block_n=bn, block_k=bk,
+                             backend="jnp")
+    prep = prep.with_scale(ops.calibrate_scale(x))
+    iters = 3 if smoke else 10
+
+    def fused(prep, x, npl):
+        return ops._execute_core(prep, x, npl)
+
+    fused_jit = jax.jit(fused)
+    mat_jit = jax.jit(_materialized_execute)
+    report = {"smoke": smoke, "shape": [M, K, N], "block": [bm, bn, bk],
+              "n_bits": n_bits, "sweep": [], "violations": []}
+    D = n_bits
+    q_itemsize = q_storage_dtype(n_bits, prep.signed).itemsize
+    Kp = prep.w.shape[0]
+    # bytes moved are a property of the lowered graph, not of the traced
+    # runtime precision — measure each path once, outside the sweep
+    npl0 = jnp.asarray(n_bits, jnp.int32)
+    fused_bytes = _bytes_accessed(fused, prep, x, npl0)
+    mat_bytes = _bytes_accessed(_materialized_execute, prep, x, npl0)
+    bytes_known = not (np.isnan(fused_bytes) or np.isnan(mat_bytes))
+    # structural gate on the REAL traced graphs: the fused path must not
+    # contain any plane-tensor-sized integer intermediate (and the detector
+    # is validated against the materialized path, which must contain one)
+    plane_bytes = D * ((M + bm - 1) // bm * bm) * Kp
+    fused_int_max = _max_int_tensor_bytes(fused, prep, x, npl0)
+    mat_int_max = _max_int_tensor_bytes(_materialized_execute, prep, x, npl0)
+    assert mat_int_max >= plane_bytes, \
+        (mat_int_max, plane_bytes, "detector failed to see the plane tensor")
+    report["plane_tensor_bytes"] = plane_bytes
+    report["max_int_tensor_bytes"] = {"fused": fused_int_max,
+                                      "materialized": mat_int_max}
+    if fused_int_max >= plane_bytes:
+        report["violations"].append(
+            f"fused graph contains a plane-tensor-sized integer "
+            f"intermediate ({fused_int_max} >= {plane_bytes} B): digit "
+            f"encoding is being materialized again")
+    # the activation-stream model (what each path hands its kernel/scan):
+    # analytic by construction; the structural gate above checks the graph
+    act_fused = M * Kp * q_itemsize
+    act_mat = D * M * Kp * 1
+    if act_mat / act_fused < 4.0:
+        report["violations"].append(
+            f"activation-stream reduction {act_mat / act_fused:.1f}x "
+            f"< 4x at n_bits={n_bits}")
+    for npl_i in (8, 4, 2):
+        npl = jnp.asarray(npl_i, jnp.int32)
+        of, sf = fused_jit(prep, x, npl)
+        om, um = mat_jit(prep, x, npl)
+        np.testing.assert_array_equal(np.asarray(of), np.asarray(om),
+                                      err_msg=f"n_planes={npl_i}")
+        np.testing.assert_array_equal(np.asarray(sf.planes_used),
+                                      np.asarray(um),
+                                      err_msg=f"n_planes={npl_i}")
+        fused_us = _timeit(fused_jit, prep, x, npl, iters=iters)
+        mat_us = _timeit(mat_jit, prep, x, npl, iters=iters)
+        report["sweep"].append({
+            "n_planes": npl_i,
+            "wall_us": {"fused": fused_us, "materialized": mat_us},
+            "bit_exact": True,
+        })
+    # the activation tensor each path streams through its compute: the
+    # fused kernels read the quantized block itself; the old path wrote
+    # and re-read every digit plane of it
+    report["activation_stream_bytes"] = {
+        "fused": act_fused, "materialized": act_mat,
+        "reduction": act_mat / act_fused}
+    report["bytes_accessed"] = {
+        "fused": fused_bytes, "materialized": mat_bytes,
+        "known": bytes_known,
+        "reduction": mat_bytes / fused_bytes if bytes_known else None}
+    if bytes_known and fused_bytes > mat_bytes:
+        report["violations"].append(
+            f"fused path moves MORE bytes than materialized: "
+            f"{fused_bytes} > {mat_bytes}")
+    return report
 
 
 def run_precision_sweep(smoke: bool = False) -> dict:
@@ -197,7 +398,39 @@ def main() -> None:
     ap.add_argument("--precision-json", type=str,
                     default="BENCH_precision.json",
                     help="output path for the --sweep-precision report")
+    ap.add_argument("--compare-encoding", action="store_true",
+                    help="fused in-kernel digit encoding vs the "
+                         "materialized (D, M, K) plane-tensor baseline "
+                         "(wall-clock, bytes moved, bit-exactness)")
+    ap.add_argument("--kernel-json", type=str, default="BENCH_kernel.json",
+                    help="output path for the --compare-encoding report")
     args = ap.parse_args()
+    if args.compare_encoding:
+        report = run_encoding_comparison(smoke=args.smoke)
+        print("n_planes,fused_us,materialized_us")
+        for row in report["sweep"]:
+            print(f"{row['n_planes']},{row['wall_us']['fused']:.0f},"
+                  f"{row['wall_us']['materialized']:.0f}")
+        a = report["activation_stream_bytes"]
+        print(f"activation stream: fused={a['fused']} B "
+              f"materialized={a['materialized']} B ({a['reduction']:.1f}x)")
+        i = report["max_int_tensor_bytes"]
+        print(f"largest int tensor in graph: fused={i['fused']} B "
+              f"materialized={i['materialized']} B "
+              f"(plane tensor = {report['plane_tensor_bytes']} B)")
+        b = report["bytes_accessed"]
+        print(f"bytes accessed (XLA): fused={b['fused']:.0f} "
+              f"materialized={b['materialized']:.0f}"
+              + (f" ({b['reduction']:.2f}x)" if b["known"] else
+                 " (cost_analysis unavailable: gate skipped)"))
+        # write the artifact BEFORE gating so a red CI still uploads the
+        # numbers that explain the regression
+        with open(args.kernel_json, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"wrote {args.kernel_json}")
+        if report["violations"]:
+            raise SystemExit("; ".join(report["violations"]))
+        return
     if args.sweep_precision:
         report = run_precision_sweep(smoke=args.smoke)
         print("n_planes,switch_us_fused,switch_us_execute,switch_speedup,"

@@ -12,11 +12,15 @@ the paper's weight-stationary dataflow:
 * ``dslot_execute(prepared, x, n_planes=...)`` — the per-request hot path:
   quantize activations (against a calibrated FIXED scale when one is stored
   in the prepared state — no data-dependent ``jnp.max`` in the hot path),
-  encode MSDF digit planes, run the kernel, dequantize.  ``n_planes`` is a
-  RUNTIME argument (scalar or per-row vector): planes beyond it are
-  predicated off in the Pallas kernel / masked in the jnp replay, so changing
-  precision never retraces — this is the paper's "precision tuned at
-  run-time" as a first-class request parameter.
+  run the kernel, dequantize.  MSDF digit planes are derived INSIDE the
+  kernel from the quantized block (``ref.sd_digit_plane`` arithmetic), never
+  materialized as a (D, M, K) tensor in HBM — the activation stream the
+  kernel reads is the ~n_bits/8-byte-per-element ``q`` itself, not D digit
+  planes of it.  ``n_planes`` is a RUNTIME argument (scalar or per-row
+  vector): planes beyond it are predicated off in the Pallas kernel / masked
+  in the jnp replay (per-row budgets travel as an SMEM vector into the
+  kernel), so changing precision never retraces — this is the paper's
+  "precision tuned at run-time" as a first-class request parameter.
 * ``calibrate_scale(x_sample, ...)`` — one-shot activation-range calibration;
   store the result via ``DslotWeights.with_scale``.
 
@@ -54,8 +58,9 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .dslot_matmul import _pad_to, dslot_matmul_pallas, select_block_k
-from .ref import make_planes
+from .dslot_matmul import (_pad_to, dslot_matmul_pallas, q_storage_dtype,
+                           select_block_k)
+from .ref import sd_digit_plane
 
 __all__ = ["DslotStats", "DslotWeights", "dslot_matmul", "dslot_prepare",
            "dslot_execute", "calibrate_scale", "prepare_call_count",
@@ -174,7 +179,8 @@ def dslot_prepare(w: jax.Array, *, n_bits: int = 8, relu: bool = True,
         w = w[:, perm]
         inv_perm = jnp.argsort(perm)
 
-    bk = block_k or select_block_k(K, block_m, block_n, w.dtype.itemsize)
+    bk = block_k or select_block_k(K, block_m, block_n, w.dtype.itemsize,
+                                   q_storage_dtype(n_bits, signed).itemsize)
     w_p = _pad_to(w, block_n, axis=1)
     w_p = _pad_to(w_p, bk, axis=0)
     Kp, Np = w_p.shape
@@ -194,36 +200,44 @@ def dslot_prepare(w: jax.Array, *, n_bits: int = 8, relu: bool = True,
 
 # ------------------------------------------------------------- execution
 
-def _jnp_path(planes: jax.Array, w: jax.Array, n_bits: int, relu: bool,
-              block_m: int, block_n: int, bk: int,
-              suffix: jax.Array, total: jax.Array, npl: jax.Array):
-    """Reference evaluation + termination accounting.
+def _jnp_path(q: jax.Array, w: jax.Array, n_bits: int, n_planes: int,
+              relu: bool, block_m: int, block_n: int, bk: int,
+              suffix: jax.Array, total: jax.Array, npl: jax.Array,
+              row_budget: jax.Array):
+    """Reference evaluation + termination accounting, plane-free.
 
     Computes every plane (no skipping — this is CPU) but derives the exact
     per-tile ``planes_used`` the Pallas kernel would report, by replaying the
     chunk-aware bound check in the kernel's (plane outer, K-chunk inner)
-    iteration order.  ``npl`` is the runtime precision (i32 scalar): planes
-    at d >= npl are masked to zero and ``planes_used`` is clamped to it —
-    the same semantics as the kernel's predicated passes.  A ``lax.scan``
-    over the D*Kt steps keeps peak memory at O(M*N) regardless of how small
-    ``bk`` is (only the per-step per-tile dead flags are stacked).
+    iteration order.  Digit planes are never stacked: each scan step derives
+    plane ``d`` of its K chunk from the quantized activations on the fly
+    (``ref.sd_digit_plane``, inlined on the pre-split sign/magnitude), so
+    peak activation memory is O(M*K) — not O(D*M*K) — and stays at O(M*N)
+    per step regardless of how small ``bk`` is (only the per-step per-tile
+    dead flags are stacked).
 
-    planes (D, M, Kp) int8 pre-padded; w (Kp, N); suffix (Kt, N) and
-    total (N,) are the prepared |W| column-sum bound tables.
+    ``npl`` is the runtime precision (i32 scalar): planes at d >= npl
+    contribute nothing and ``planes_used`` is clamped to it — the same
+    semantics as the kernel's predicated passes.  ``row_budget`` ((M,) i32)
+    zeroes each row's digits beyond its own budget — identical to the
+    kernel's SMEM per-row budget vector.
+
+    q (M, Kp) integer pre-padded; w (Kp, N); suffix (Kt, N) and total (N,)
+    are the prepared |W| column-sum bound tables; n_planes is the static
+    plane-axis depth D.
     """
-    D, M, K = planes.shape
+    M, K = q.shape
+    D = n_planes
     N = w.shape[1]
     Kt = K // bk
     Mt, Nt = M // block_m, N // block_n
-    # runtime precision mask: digits beyond npl contribute nothing
     npl_f = npl.astype(jnp.float32)
-    pmask = (jnp.arange(D) < npl)[:, None, None]
-    planes = planes * pmask.astype(planes.dtype)
     wf = w.astype(jnp.float32)
     w_chunks = wf.reshape(Kt, bk, N)
-    # int8 plane chunks in step order (d outer, c inner): (D*Kt, M, bk)
-    p_chunks = planes.reshape(D, M, Kt, bk).transpose(0, 2, 1, 3) \
-        .reshape(D * Kt, M, bk)
+    # K-chunk-major activation layout at its narrow storage width: the only
+    # activation tensor the scan streams is (Kt, M, bk) = M*K elements, no D
+    # factor — sign/magnitude are split per step on the resident chunk
+    q_chunks = q.reshape(M, Kt, bk).transpose(1, 0, 2)
     scales = jnp.exp2(jnp.asarray(n_bits - 1, jnp.float32)
                       - jnp.arange(D, dtype=jnp.float32))
     step_scale = jnp.repeat(scales, Kt)                         # (D*Kt,)
@@ -236,19 +250,25 @@ def _jnp_path(planes: jax.Array, w: jax.Array, n_bits: int, relu: bool,
                    * total[None, None, :])).reshape(D * Kt, N)
 
     def body(acc, step):
-        p, c, scale, rem = step
+        d, c, scale, rem = step
+        qc = jax.lax.dynamic_index_in_dim(q_chunks, c, keepdims=False)
+        # on-the-fly digit (the pinned shared arithmetic), with rows past
+        # their budget (and planes past npl <= max budget) zeroed
+        digit = sd_digit_plane(qc, n_bits, d).astype(jnp.float32) \
+            * (row_budget > d).astype(jnp.float32)[:, None]
         wc = jax.lax.dynamic_index_in_dim(w_chunks, c, keepdims=False)
-        acc = acc + scale * jnp.dot(p.astype(jnp.float32), wc,
+        acc = acc + scale * jnp.dot(digit, wc,
                                     preferred_element_type=jnp.float32)
         bound = acc + rem[None, :]
         dead = jnp.all(bound.reshape(Mt, block_m, Nt, block_n) < 0.0,
                        axis=(1, 3))                             # (Mt, Nt)
         return acc, dead
 
+    d_idx = jnp.repeat(jnp.arange(D), Kt)                       # plane per step
     c_idx = jnp.tile(jnp.arange(Kt), D)                         # w chunk per step
     acc, dead_after = jax.lax.scan(
         body, jnp.zeros((M, N), jnp.float32),
-        (p_chunks, c_idx, step_scale, step_rem))
+        (d_idx, c_idx, step_scale, step_rem))
     out = jnp.maximum(acc, 0.0) if relu else acc
     if relu:
         # only bound checks at steps the kernel actually enters (d < npl)
@@ -267,10 +287,16 @@ def _execute_core(prepared: DslotWeights, x: jax.Array, npl: jax.Array,
                   ) -> tuple[jax.Array, DslotStats]:
     """Shared execute path.  ``npl`` is i32, scalar or per-row (M,).
 
-    ``static_planes`` (fused one-shot path only) additionally slices the
-    plane tensor to a STATIC depth so the kernel grid shrinks with the
-    precision — the split path keeps the grid at ``n_bits`` and predicates
-    instead, trading a few empty grid steps for zero retraces.
+    ``static_planes`` (fused one-shot path only) additionally shrinks the
+    kernel grid's plane axis to a STATIC depth — the split path keeps the
+    grid at ``n_bits`` and predicates instead, trading a few empty grid
+    steps for zero retraces.
+
+    No digit-plane tensor is built here: the quantized activations go to the
+    backends as-is (at the narrowest integer width that holds them) and each
+    backend derives digit planes on the fly — the paper's online generation,
+    not an HBM-materialized encoding.  Per-row budgets ride along as a
+    runtime vector consumed inside the kernel (SMEM per-M-tile) / scan.
     """
     cfg = prepared
     M, K = x.shape
@@ -278,15 +304,10 @@ def _execute_core(prepared: DslotWeights, x: jax.Array, npl: jax.Array,
 
     q, step = quantize_activations(x, n_bits=cfg.n_bits, signed=cfg.signed,
                                    scale=cfg.x_scale)
-    planes = make_planes(q, cfg.n_bits, n_planes=static_planes)  # (D, M, K)
-    D = planes.shape[0]
+    D = min(static_planes or cfg.n_bits, cfg.n_bits)
 
     if npl.ndim == 1:
-        # per-row precision: mask each row's digits beyond its own budget,
-        # run the kernel at the max budget (masked digits are zero planes).
         row_budget = jnp.clip(npl, 1, D)
-        rmask = jnp.arange(D)[:, None] < row_budget[None, :]     # (D, M)
-        planes = planes * rmask[:, :, None].astype(planes.dtype)
         npl_scalar = jnp.max(row_budget)
         budget_f = row_budget.astype(jnp.float32)
     else:
@@ -294,24 +315,29 @@ def _execute_core(prepared: DslotWeights, x: jax.Array, npl: jax.Array,
         npl_scalar = jnp.clip(npl, 1, D)
         budget_f = npl_scalar.astype(jnp.float32)
 
-    planes_p = _pad_to(planes, cfg.block_m, axis=1)
-    if planes_p.shape[2] < cfg.w.shape[0]:      # match prepared K padding
-        pads = [(0, 0), (0, 0), (0, cfg.w.shape[0] - planes_p.shape[2])]
-        planes_p = jnp.pad(planes_p, pads)
+    q_p = _pad_to(q.astype(q_storage_dtype(cfg.n_bits, cfg.signed)),
+                  cfg.block_m, axis=0)
+    if q_p.shape[1] < cfg.w.shape[0]:           # match prepared K padding
+        q_p = jnp.pad(q_p, [(0, 0), (0, cfg.w.shape[0] - q_p.shape[1])])
+    Mp = q_p.shape[0]
+    # per-row budget over the padded rows (pad rows: zero budget = all-zero
+    # digits, same as the old zero plane padding); scalar budgets broadcast
+    bud_p = jnp.full((Mp,), npl_scalar, jnp.int32) if row_budget is None \
+        else jnp.pad(row_budget.astype(jnp.int32), (0, Mp - M))
 
     if cfg.backend == "pallas":
         out_p, used = dslot_matmul_pallas(
-            planes_p, cfg.w, n_bits=cfg.n_bits, relu=cfg.relu,
+            q_p, cfg.w, n_bits=cfg.n_bits, n_planes=D, relu=cfg.relu,
             block_m=cfg.block_m, block_n=cfg.block_n, block_k=cfg.block_k,
-            n_planes_rt=npl_scalar,
+            n_planes_rt=npl_scalar, row_budget=bud_p,
             suffix_colsum=cfg.suffix_colsum, total_colsum=cfg.total_colsum,
             interpret=jax.default_backend() != "tpu")
         used = jnp.minimum(used, npl_scalar.astype(jnp.int32))
     else:
-        out_p, used = _jnp_path(planes_p, cfg.w, cfg.n_bits, cfg.relu,
+        out_p, used = _jnp_path(q_p, cfg.w, cfg.n_bits, D, cfg.relu,
                                 cfg.block_m, cfg.block_n, cfg.block_k,
                                 cfg.suffix_colsum, cfg.total_colsum[0],
-                                npl_scalar)
+                                npl_scalar, bud_p)
 
     out = out_p[:M, :cfg.d_out] * step
     if cfg.inv_perm is not None:

@@ -14,7 +14,8 @@ import jax.numpy as jnp
 
 from repro.core.digits import fixed_to_sd
 
-__all__ = ["make_planes", "dslot_matmul_ref", "plane_value_ref"]
+__all__ = ["make_planes", "sd_digit_plane", "dslot_matmul_ref",
+           "plane_value_ref"]
 
 
 def make_planes(a_q: jax.Array, n_bits: int, n_planes: int | None = None
@@ -25,11 +26,34 @@ def make_planes(a_q: jax.Array, n_bits: int, n_planes: int | None = None
     ``(D, M, K)`` planes with ``a_q ~= sum_d planes[d] * 2^(n_bits-1-d)``
     (exact when D = n_bits; truncating D < n_bits is the paper's runtime
     precision knob — error < 2^(n_bits-D)).
+
+    This is the REFERENCE encoder: it materializes all D planes at once.
+    The execution paths never do — they derive one plane at a time with
+    ``sd_digit_plane`` (jnp replay) or the same arithmetic inlined in the
+    Pallas kernel, and tests pin those against this oracle.
     """
     planes = fixed_to_sd(a_q, n_bits)          # digit d weight 2^-(d+1) of q/2^n
     if n_planes is not None:
         planes = planes[:n_planes]
     return planes
+
+
+def sd_digit_plane(a_q: jax.Array, n_bits: int, d) -> jax.Array:
+    """Plane ``d`` of ``make_planes(a_q, n_bits)``, computed arithmetically
+    without materializing the ``(D, ...)`` digit tensor.
+
+    Sign-magnitude recoding (``fixed_to_sd``): digit ``d`` of ``q`` is bit
+    ``n_bits - 1 - d`` of ``|q|`` times ``sign(q)`` — a shift, a mask, and a
+    sign multiply on the value itself.  ``d`` may be a traced i32 scalar
+    (the kernels compute the plane of the CURRENT grid step / scan step from
+    the resident value chunk, which is what makes the digit stream
+    on-the-fly rather than a precomputed tensor).  Returns int8, same shape
+    as ``a_q``, digits in {-1, 0, 1}.
+    """
+    q = jnp.asarray(a_q, jnp.int32)
+    d = jnp.asarray(d, jnp.int32)
+    bit = (jnp.abs(q) >> (n_bits - 1 - d)) & 1
+    return (bit * jnp.sign(q)).astype(jnp.int8)
 
 
 def plane_value_ref(planes: jax.Array, n_bits: int) -> jax.Array:

@@ -15,7 +15,10 @@ layers, now built on the **prepare/execute split** (``kernels.ops``):
   explicit argument, a value from the active ``repro.runtime``
   precision scope (policy-supplied, possibly a per-row jax array), or the
   layer's static default, in that order.  Changing precision never
-  re-prepares weights and never retraces.
+  re-prepares weights and never retraces.  Per-row budgets are consumed
+  INSIDE the kernel (SMEM budget vector) and digit planes are derived
+  in-kernel from the quantized activations — no plane tensor, no
+  row-masking pass outside the kernel (see ``kernels/ops.py``).
 
 Per-call statistics (``planes_used``, ``skipped_frac``, per-row effective
 planes) surface both as return values and through the

@@ -7,8 +7,9 @@ matmul runs through the unified ``repro.layers.DslotDense`` API with fused
 ReLU and per-tile early termination.  ``prepare_mlp_dslot`` attaches the
 one-time weight-stationary lowering (``kernels.ops.dslot_prepare``) to every
 up-projection in a params tree — scan-stacked groups included — so serving
-executes against cached plane tables; unprepared params fall back to
-trace-time lowering.  The runtime precision comes from the active
+executes against cached termination tables and block geometry (digit planes
+themselves are derived in-kernel per call, never cached or materialized);
+unprepared params fall back to trace-time lowering.  The runtime precision comes from the active
 ``repro.runtime`` precision scope (per-request budgets in serving), and
 termination statistics are surfaced through ``repro.models.stats``.
 """

@@ -30,7 +30,17 @@ class ServeConfig:
     max_queue: bound on requests waiting in the admission queue (pending +
         in-flight prefill).  ``try_add`` returns False when full.  ``None``
         means unbounded.
+    jit_prefill: jit-compile the per-chunk admission forwards
+        (``model.prefill`` / ``model.extend``) with the request's DSLOT
+        precision threaded as a traced argument — one compile per distinct
+        chunk length (the fixed ``prefill_chunk`` plus each prompt's ragged
+        tail), then every admission at every precision reuses the cache.
+        Whole-prompt admission (``prefill_chunk == 0``, including the
+        automatic SWA fallback) always runs eagerly: prompt lengths are
+        unbounded, so jitting there would compile per distinct length.
+        Disable for eager-mode debugging of the admission path.
     """
     prefill_chunk: int = 32
     chunks_per_step: int = 1
     max_queue: int | None = None
+    jit_prefill: bool = True

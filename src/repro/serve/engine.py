@@ -194,7 +194,8 @@ class ServeEngine:
             model=model, params=self.params, max_len=max_len,
             chunk=self.serve_config.prefill_chunk,
             chunks_per_step=self.serve_config.chunks_per_step,
-            max_queue=self.serve_config.max_queue)
+            max_queue=self.serve_config.max_queue,
+            jit_chunks=self.serve_config.jit_prefill)
 
         def _decode(p, st, t, npl):
             with stats_channel.collect() as sink, precision_scope(npl):

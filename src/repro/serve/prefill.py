@@ -43,6 +43,7 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import TYPE_CHECKING, Any, Callable
 
+import jax
 import jax.numpy as jnp
 
 from repro.runtime import precision_scope
@@ -92,6 +93,7 @@ class PrefillPipeline:
     chunk: int = 32
     chunks_per_step: int = 1
     max_queue: int | None = None
+    jit_chunks: bool = True
     queue: deque = field(default_factory=deque)
     active: PrefillTask | None = None
 
@@ -100,6 +102,47 @@ class PrefillPipeline:
             # SWA rings recycle slots within chunk+window spans (see module
             # docstring): chunked extension would drop needed keys.
             self.chunk = 0
+        # Jitted chunk forwards (the engine's ``_decode`` pattern): the
+        # request's DSLOT precision enters as a TRACED i32 argument, so every
+        # admission at every precision shares one compile per chunk length —
+        # a python int closed over at trace time would recompile per
+        # precision and silently pin the first request's budget.  Compile
+        # only pays off because chunk lengths are bounded (the fixed chunk
+        # plus ragged tails < chunk); with whole-prompt admission
+        # (``chunk == 0``, incl. the SWA fallback) every distinct prompt
+        # length would be a fresh full-model compile, so that path stays
+        # eager.
+        model, max_len = self.model, self.max_len
+
+        def _prefill_chunk(params, tokens, npl):
+            with precision_scope(npl):
+                return model.prefill(params, {"tokens": tokens},
+                                     max_len=max_len)
+
+        def _extend_chunk(params, state, tokens, npl):
+            with precision_scope(npl):
+                return model.extend(params, state, tokens)
+
+        if self.jit_chunks and self.chunk > 0:
+            _prefill_chunk = jax.jit(_prefill_chunk)
+            _extend_chunk = jax.jit(_extend_chunk)
+        self._prefill_chunk = _prefill_chunk
+        self._extend_chunk = _extend_chunk
+
+    def _chunk_precision(self, req: "Request") -> jax.Array:
+        """The request's plane budget as a traced-friendly i32 scalar.
+
+        ``None`` resolves HERE (at python level) to what ``scope(None)``
+        would have meant eagerly — fall through to the layer default
+        (``cfg.dslot.n_planes``, then ``n_bits``).  Passing None into the
+        traced scope instead would be wrong twice over: it is untraceable,
+        and a traced ``n_bits`` stand-in would override a layer default
+        smaller than ``n_bits``.
+        """
+        d = self.model.cfg.dslot
+        npl = req.n_planes if req.n_planes is not None \
+            else (d.n_planes or d.n_bits)
+        return jnp.asarray(npl, jnp.int32)
 
     # ------------------------------------------------------------- queue
 
@@ -165,19 +208,24 @@ class PrefillPipeline:
         return completed
 
     def _advance(self, task: PrefillTask) -> bool:
-        """Process one prompt chunk; True when the prompt is fully in."""
+        """Process one prompt chunk; True when the prompt is fully in.
+
+        Runs the (jitted, see ``__post_init__``) chunk forwards; the
+        request's precision is a runtime argument, so back-to-back
+        admissions at different plane budgets hit the same executable.
+        """
         req = task.req
         P = len(req.prompt)
         c = self.chunk if self.chunk > 0 else P
         end = min(task.offset + c, P)
         tokens = jnp.asarray(req.prompt[None, task.offset:end])
-        with precision_scope(req.n_planes):
-            if task.offset == 0:
-                task.logits, task.state = self.model.prefill(
-                    self.params, {"tokens": tokens}, max_len=self.max_len)
-            else:
-                task.logits, task.state = self.model.extend(
-                    self.params, task.state, tokens)
+        npl = self._chunk_precision(req)
+        if task.offset == 0:
+            task.logits, task.state = self._prefill_chunk(
+                self.params, tokens, npl)
+        else:
+            task.logits, task.state = self._extend_chunk(
+                self.params, task.state, tokens, npl)
         task.offset = end
         task.chunks_done += 1
         return end >= P

@@ -1,0 +1,173 @@
+"""Fused in-kernel MSDF digit encoding: property pinning against the
+materializing reference encoder, and per-row budget-vector semantics.
+
+Two contracts from the fusion PR:
+
+* ``sd_digit_plane`` (the arithmetic the kernels inline: shift/mask/sign on
+  the quantized value) must reproduce ``ref.make_planes`` digit-for-digit
+  over the FULL representable integer range at every ``n_bits`` and every
+  truncation depth — the encoder was deleted from the hot path, so this
+  equivalence is the only thing keeping the kernels honest.
+* the per-row budget vector (SMEM in the Pallas kernel, in-scan mask in the
+  jnp replay) must be indistinguishable from the pre-fusion semantics of
+  zero-masking each row's digit planes outside the kernel — outputs AND
+  ``row_planes_used``.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops
+from repro.kernels.dslot_matmul import dslot_matmul_pallas, q_storage_dtype
+from repro.kernels.ops import dslot_execute, dslot_prepare
+from repro.kernels.ref import dslot_matmul_ref, make_planes, sd_digit_plane
+
+from _hyp import given, settings, st  # hypothesis or skip-shim
+
+
+# ------------------------------------------------ digit-extraction pinning
+
+@settings(max_examples=40, deadline=None)
+@given(n_bits=st.integers(1, 8), n_planes=st.integers(1, 8))
+def test_digit_plane_bitexact_full_range(n_bits, n_planes):
+    """Every representable value, every plane, every width: the arithmetic
+    extraction equals the materializing encoder digit-for-digit."""
+    n_planes = min(n_planes, n_bits)
+    q = jnp.arange(-(2 ** n_bits - 1), 2 ** n_bits, dtype=jnp.int32)
+    planes = make_planes(q, n_bits, n_planes=n_planes)
+    fused = jnp.stack([sd_digit_plane(q, n_bits, d)
+                       for d in range(n_planes)])
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(planes))
+
+
+@pytest.mark.parametrize("n_bits", list(range(1, 9)))
+def test_digit_plane_bitexact_full_range_deterministic(n_bits):
+    """Deterministic version of the property above (runs without
+    hypothesis): all values, all truncation depths, at each width."""
+    q = jnp.arange(-(2 ** n_bits - 1), 2 ** n_bits, dtype=jnp.int32)
+    for n_planes in range(1, n_bits + 1):
+        planes = make_planes(q, n_bits, n_planes=n_planes)
+        fused = jnp.stack([sd_digit_plane(q, n_bits, d)
+                           for d in range(n_planes)])
+        np.testing.assert_array_equal(np.asarray(fused), np.asarray(planes))
+
+
+def test_digit_plane_traced_index():
+    """``d`` may be a traced scalar (the kernels derive it from the grid /
+    scan step) — same digits as the python-int path."""
+    q = jnp.arange(-255, 256, dtype=jnp.int32)
+    for d in range(8):
+        np.testing.assert_array_equal(
+            np.asarray(sd_digit_plane(q, 8, jnp.asarray(d, jnp.int32))),
+            np.asarray(sd_digit_plane(q, 8, d)))
+
+
+@pytest.mark.parametrize("n_bits,signed,expect", [
+    (8, False, jnp.uint8), (8, True, jnp.int8),
+    (7, False, jnp.uint8), (16, False, jnp.uint16), (12, True, jnp.int16),
+])
+def test_q_storage_dtype_holds_range(n_bits, signed, expect):
+    dt = q_storage_dtype(n_bits, signed)
+    assert dt == jnp.dtype(expect)
+    qmax = 2 ** (n_bits - 1) - 1 if signed else 2 ** n_bits - 1
+    assert qmax <= jnp.iinfo(dt).max
+    if signed:
+        assert -qmax >= jnp.iinfo(dt).min
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), n_bits=st.integers(2, 8))
+def test_kernel_encoding_matches_materialized_oracle(seed, n_bits):
+    """The Pallas kernel's in-kernel extraction against the oracle that
+    consumes an explicitly materialized plane tensor, signed values
+    included."""
+    rng = np.random.default_rng(seed)
+    lim = 2 ** n_bits - 1
+    aq = jnp.asarray(rng.integers(-lim, lim + 1, (16, 16)), jnp.int32)
+    w = jnp.asarray(rng.integers(-64, 65, (16, 16)) / 128.0, jnp.float32)
+    out = dslot_matmul_pallas(aq, w, n_bits=n_bits, relu=True,
+                              block_m=16, block_n=16, block_k=16)
+    ref = dslot_matmul_ref(make_planes(aq, n_bits), w, n_bits, relu=True)
+    np.testing.assert_array_equal(np.asarray(out.out), np.asarray(ref))
+
+
+# ------------------------------------- per-row budgets == zero-masked planes
+
+def _zero_masked_reference(x, w, prep, budget):
+    """The PRE-FUSION per-row semantics, reproduced outside the kernels:
+    quantize, materialize ALL digit planes, zero each row's planes beyond
+    its budget, evaluate the plane sum (f32, MSDF order), relu,
+    dequantize."""
+    q, step = ops.quantize_activations(x, n_bits=prep.n_bits,
+                                       signed=prep.signed,
+                                       scale=prep.x_scale)
+    planes = make_planes(q, prep.n_bits)
+    D = planes.shape[0]
+    rmask = jnp.arange(D)[:, None] < jnp.clip(budget, 1, D)[None, :]
+    planes = planes * rmask[:, :, None].astype(planes.dtype)
+    return dslot_matmul_ref(planes, w, prep.n_bits, relu=True) * step
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_row_budget_vector_equals_zero_masked_planes(backend):
+    rng = np.random.default_rng(0)
+    M, K, N = 32, 32, 32
+    x = jnp.asarray(np.maximum(rng.normal(0.2, 0.5, (M, K)), 0), jnp.float32)
+    w = jnp.asarray(rng.integers(-8, 9, (K, N)) / 128.0, jnp.float32)
+    prep = dslot_prepare(w, block_m=16, block_n=16, block_k=16,
+                         backend=backend)
+    budget = jnp.asarray(rng.integers(1, 9, M), jnp.int32)
+    out, stats = dslot_execute(prep, x, n_planes=budget)
+    ref = _zero_masked_reference(x, w, prep, budget)
+    # dyadic weights + exact digit sums: termination only ever zeroes tiles
+    # that are provably zero, so the kernel equals the full plane sum
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-6, atol=1e-7)
+    assert stats.row_planes_used.shape == (M,)
+    assert (np.asarray(stats.row_planes_used)
+            <= np.asarray(budget.astype(jnp.float32))).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_row_budget_backends_identical(seed):
+    """jnp in-scan masking and the Pallas SMEM budget vector are the same
+    semantics: identical outputs, identical planes_used, identical
+    row_planes_used for random per-row budgets."""
+    rng = np.random.default_rng(seed)
+    M, K, N = 32, 16, 32
+    x = jnp.asarray(np.maximum(rng.normal(0.2, 0.5, (M, K)), 0), jnp.float32)
+    w = jnp.asarray(rng.integers(-64, 65, (K, N)) / 128.0, jnp.float32)
+    budget = jnp.asarray(rng.integers(1, 9, M), jnp.int32)
+    outs = {}
+    for backend in ("jnp", "pallas"):
+        prep = dslot_prepare(w, block_m=16, block_n=16, block_k=16,
+                             backend=backend)
+        outs[backend] = dslot_execute(prep, x, n_planes=budget)
+    oj, sj = outs["jnp"]
+    op, sp = outs["pallas"]
+    np.testing.assert_allclose(np.asarray(oj), np.asarray(op),
+                               rtol=1e-6, atol=1e-7)
+    np.testing.assert_array_equal(np.asarray(sj.planes_used),
+                                  np.asarray(sp.planes_used))
+    np.testing.assert_array_equal(np.asarray(sj.row_planes_used),
+                                  np.asarray(sp.row_planes_used))
+
+
+def test_row_budget_rows_match_scalar_runs():
+    """Each row under a vector budget equals that row under a scalar run at
+    the same budget (the serving contract: per-request precision in a pooled
+    batch is indistinguishable from solo execution)."""
+    rng = np.random.default_rng(3)
+    M, K, N = 32, 24, 16
+    x = jnp.asarray(np.maximum(rng.normal(0.2, 0.5, (M, K)), 0), jnp.float32)
+    w = jnp.asarray(rng.normal(0, 0.05, (K, N)), jnp.float32)
+    prep = dslot_prepare(w, block_m=16, block_n=16, block_k=24,
+                         backend="pallas")
+    budget = jnp.asarray(rng.integers(2, 9, M), jnp.int32)
+    ov, _ = dslot_execute(prep, x, n_planes=budget)
+    for r in (0, 7, 31):
+        orow, _ = dslot_execute(prep, x, n_planes=int(budget[r]))
+        np.testing.assert_array_equal(np.asarray(ov[r]),
+                                      np.asarray(orow[r]))

@@ -23,9 +23,9 @@ def test_kernel_matches_oracle_sweep(M, K, N, bm, bn, wdtype):
     rng = np.random.default_rng(M + N)
     aq = jnp.asarray(rng.integers(0, 256, size=(M, K)), jnp.int32)
     w = jnp.asarray(rng.normal(0, 0.05, size=(K, N)), wdtype)
-    planes = make_planes(aq, 8)
-    ref = dslot_matmul_ref(planes, w.astype(jnp.float32), 8, relu=True)
-    out = dslot_matmul_pallas(planes, w.astype(jnp.float32), n_bits=8,
+    ref = dslot_matmul_ref(make_planes(aq, 8), w.astype(jnp.float32), 8,
+                           relu=True)
+    out = dslot_matmul_pallas(aq, w.astype(jnp.float32), n_bits=8,
                               relu=True, block_m=bm, block_n=bn)
     np.testing.assert_allclose(np.asarray(out.out), np.asarray(ref),
                                atol=1e-2, rtol=1e-5)
@@ -39,7 +39,7 @@ def test_runtime_precision_knob(n_planes):
     w = jnp.asarray(rng.normal(0, 0.06, size=(32, 32)), jnp.float32)
     planes = make_planes(aq, 8, n_planes=n_planes)
     ref = dslot_matmul_ref(planes, w, 8, relu=True)
-    out = dslot_matmul_pallas(planes, w, n_bits=8, relu=True,
+    out = dslot_matmul_pallas(aq, w, n_bits=8, n_planes=n_planes, relu=True,
                               block_m=16, block_n=16)
     np.testing.assert_allclose(np.asarray(out.out), np.asarray(ref),
                                atol=1e-2)
@@ -53,9 +53,8 @@ def test_termination_soundness_and_savings():
     aq = jnp.asarray(rng.integers(0, 256, size=(64, 64)), jnp.int32)
     w = rng.normal(0, 0.04, size=(64, 64)).astype(np.float32)
     w[:, :32] -= 0.08                       # clustered dead columns
-    planes = make_planes(aq, 8)
-    ref = dslot_matmul_ref(planes, jnp.asarray(w), 8, relu=True)
-    out = dslot_matmul_pallas(planes, jnp.asarray(w), n_bits=8, relu=True,
+    ref = dslot_matmul_ref(make_planes(aq, 8), jnp.asarray(w), 8, relu=True)
+    out = dslot_matmul_pallas(aq, jnp.asarray(w), n_bits=8, relu=True,
                               block_m=32, block_n=32)
     np.testing.assert_allclose(np.asarray(out.out), np.asarray(ref),
                                atol=1e-2)
@@ -73,11 +72,10 @@ def test_no_termination_without_relu():
     rng = np.random.default_rng(8)
     aq = jnp.asarray(rng.integers(0, 256, size=(32, 32)), jnp.int32)
     w = jnp.asarray(rng.normal(0, 0.05, size=(32, 32)) - 0.1, jnp.float32)
-    planes = make_planes(aq, 8)
-    out = dslot_matmul_pallas(planes, w, n_bits=8, relu=False,
+    out = dslot_matmul_pallas(aq, w, n_bits=8, relu=False,
                               block_m=16, block_n=16)
     assert (np.asarray(out.planes_used) == 8).all()
-    ref = dslot_matmul_ref(planes, w, 8, relu=False)
+    ref = dslot_matmul_ref(make_planes(aq, 8), w, 8, relu=False)
     np.testing.assert_allclose(np.asarray(out.out), np.asarray(ref),
                                atol=1e-2)
 
@@ -123,9 +121,8 @@ def test_kernel_oracle_property(seed):
     N = int(rng.integers(1, 3)) * 16
     aq = jnp.asarray(rng.integers(-255, 256, size=(M, K)), jnp.int32)
     w = jnp.asarray(rng.normal(0, 0.1, size=(K, N)), jnp.float32)
-    planes = make_planes(aq, 8)
-    ref = dslot_matmul_ref(planes, w, 8, relu=True)
-    out = dslot_matmul_pallas(planes, w, n_bits=8, relu=True,
+    ref = dslot_matmul_ref(make_planes(aq, 8), w, 8, relu=True)
+    out = dslot_matmul_pallas(aq, w, n_bits=8, relu=True,
                               block_m=16, block_n=16)
     np.testing.assert_allclose(np.asarray(out.out), np.asarray(ref),
                                atol=5e-2, rtol=1e-4)

@@ -1,6 +1,11 @@
-"""K-tiled digit-plane kernel: streaming correctness + chunk-aware early
+"""K-tiled digit-serial kernel: streaming correctness + chunk-aware early
 termination soundness (the bound must cover unseen K chunks as well as unseen
-digit planes), automatic block-size selection, bf16 weights, batched entry."""
+digit planes), automatic block-size selection, bf16 weights, batched entry.
+
+The kernel consumes the quantized activations (M, K) directly and derives
+digit planes in-kernel; the oracle (``dslot_matmul_ref``) still evaluates
+over an explicitly materialized ``make_planes`` tensor — agreement between
+the two is what pins the fused encoding."""
 
 import numpy as np
 import jax.numpy as jnp
@@ -9,7 +14,7 @@ import pytest
 from repro.kernels.dslot_matmul import (dslot_matmul_pallas,
                                         dslot_matmul_pallas_batched,
                                         select_block_k)
-from repro.kernels.ops import dslot_matmul
+from repro.kernels.ops import dslot_matmul, dslot_prepare
 from repro.kernels.ref import dslot_matmul_ref, make_planes
 
 
@@ -25,23 +30,22 @@ def test_bitexact_across_block_k_sweep(block_k):
     rng = np.random.default_rng(0)
     aq = jnp.asarray(rng.integers(0, 256, (64, 96)), jnp.int32)
     w = _dyadic_w(rng, 96, 64)
-    planes = make_planes(aq, 8)
-    ref = dslot_matmul_ref(planes, w, 8, relu=True)
-    out = dslot_matmul_pallas(planes, w, n_bits=8, relu=True,
+    ref = dslot_matmul_ref(make_planes(aq, 8), w, 8, relu=True)
+    out = dslot_matmul_pallas(aq, w, n_bits=8, relu=True,
                               block_m=32, block_n=32, block_k=block_k)
     np.testing.assert_array_equal(np.asarray(out.out), np.asarray(ref))
 
 
 @pytest.mark.parametrize("n_planes", [2, 4, 8])
 def test_bitexact_truncated_planes_tiled(n_planes):
-    """Runtime-precision truncation interacts with the chunk-aware bound via
+    """Static-precision truncation interacts with the chunk-aware bound via
     the 2^(n_bits - D) term — must stay exact for every D."""
     rng = np.random.default_rng(n_planes)
     aq = jnp.asarray(rng.integers(-255, 256, (32, 64)), jnp.int32)
     w = _dyadic_w(rng, 64, 32)
-    planes = make_planes(aq, 8, n_planes=n_planes)
-    ref = dslot_matmul_ref(planes, w, 8, relu=True)
-    out = dslot_matmul_pallas(planes, w, n_bits=8, relu=True,
+    ref = dslot_matmul_ref(make_planes(aq, 8, n_planes=n_planes), w, 8,
+                           relu=True)
+    out = dslot_matmul_pallas(aq, w, n_bits=8, n_planes=n_planes, relu=True,
                               block_m=16, block_n=16, block_k=16)
     np.testing.assert_array_equal(np.asarray(out.out), np.asarray(ref))
 
@@ -58,10 +62,9 @@ def test_negative_first_chunk_positive_overall_must_not_terminate():
     w[:bk] = -64 / 128.0      # chunk 0: uniformly negative columns
     w[bk:] = 80 / 128.0       # chunk 1: stronger positive columns
     w = jnp.asarray(w)
-    planes = make_planes(aq, 8)
-    ref = dslot_matmul_ref(planes, w, 8, relu=True)
+    ref = dslot_matmul_ref(make_planes(aq, 8), w, 8, relu=True)
     assert float(jnp.min(ref)) > 0.0, "workload must be positive overall"
-    out = dslot_matmul_pallas(planes, w, n_bits=8, relu=True,
+    out = dslot_matmul_pallas(aq, w, n_bits=8, relu=True,
                               block_m=16, block_n=16, block_k=bk)
     # termination never fired (output positive everywhere) and all planes ran
     np.testing.assert_array_equal(np.asarray(out.out), np.asarray(ref))
@@ -76,15 +79,14 @@ def test_tiled_planes_used_only_leq_untiled():
     aq = jnp.asarray(rng.integers(0, 256, (64, 96)), jnp.int32)
     w = rng.normal(0, 0.04, (96, 64)).astype(np.float32)
     w[:, :32] -= 0.08                       # clustered dead columns
-    planes = make_planes(aq, 8)
-    ref = dslot_matmul_ref(planes, jnp.asarray(w), 8, relu=True)
-    untiled = dslot_matmul_pallas(planes, jnp.asarray(w), n_bits=8,
+    ref = dslot_matmul_ref(make_planes(aq, 8), jnp.asarray(w), 8, relu=True)
+    untiled = dslot_matmul_pallas(aq, jnp.asarray(w), n_bits=8,
                                   relu=True, block_m=32, block_n=32,
                                   block_k=96)
     assert np.asarray(untiled.planes_used).min() < 8, \
         "workload must actually terminate somewhere"
     for bk in (48, 32, 16):
-        tiled = dslot_matmul_pallas(planes, jnp.asarray(w), n_bits=8,
+        tiled = dslot_matmul_pallas(aq, jnp.asarray(w), n_bits=8,
                                     relu=True, block_m=32, block_n=32,
                                     block_k=bk)
         np.testing.assert_allclose(np.asarray(tiled.out), np.asarray(ref),
@@ -98,9 +100,9 @@ def test_terminated_tiles_are_zero_and_sound():
     aq = jnp.asarray(rng.integers(0, 256, (64, 64)), jnp.int32)
     w = rng.normal(0, 0.04, (64, 64)).astype(np.float32)
     w[:, :32] -= 0.08
-    planes = make_planes(aq, 8)
-    ref = np.asarray(dslot_matmul_ref(planes, jnp.asarray(w), 8, relu=True))
-    out = dslot_matmul_pallas(planes, jnp.asarray(w), n_bits=8, relu=True,
+    ref = np.asarray(dslot_matmul_ref(make_planes(aq, 8), jnp.asarray(w), 8,
+                                      relu=True))
+    out = dslot_matmul_pallas(aq, jnp.asarray(w), n_bits=8, relu=True,
                               block_m=32, block_n=32, block_k=16)
     pu = np.asarray(out.planes_used)
     assert pu.min() < 8
@@ -115,9 +117,8 @@ def test_k_not_multiple_of_block_k_pads():
     rng = np.random.default_rng(5)
     aq = jnp.asarray(rng.integers(0, 256, (32, 72)), jnp.int32)  # 72 % 32 != 0
     w = _dyadic_w(rng, 72, 32)
-    planes = make_planes(aq, 8)
-    ref = dslot_matmul_ref(planes, w, 8, relu=True)
-    out = dslot_matmul_pallas(planes, w, n_bits=8, relu=True,
+    ref = dslot_matmul_ref(make_planes(aq, 8), w, 8, relu=True)
+    out = dslot_matmul_pallas(aq, w, n_bits=8, relu=True,
                               block_m=16, block_n=16, block_k=32)
     np.testing.assert_array_equal(np.asarray(out.out), np.asarray(ref))
 
@@ -129,30 +130,78 @@ def test_bf16_weights_tiled():
     w32 = _dyadic_w(rng, 64, 32)
     wb = w32.astype(jnp.bfloat16)
     assert (np.asarray(wb.astype(jnp.float32)) == np.asarray(w32)).all()
-    planes = make_planes(aq, 8)
-    ref = dslot_matmul_ref(planes, w32, 8, relu=True)
-    out = dslot_matmul_pallas(planes, wb, n_bits=8, relu=True,
+    ref = dslot_matmul_ref(make_planes(aq, 8), w32, 8, relu=True)
+    out = dslot_matmul_pallas(aq, wb, n_bits=8, relu=True,
                               block_m=16, block_n=16, block_k=16)
     np.testing.assert_array_equal(np.asarray(out.out), np.asarray(ref))
+
+
+def test_narrow_q_dtypes_match_int32():
+    """The execute path stores q at the narrowest width that holds the
+    range; the kernel widens in VMEM — the dtype must never change digits."""
+    rng = np.random.default_rng(21)
+    a = rng.integers(-127, 128, (32, 32))
+    w = _dyadic_w(rng, 32, 32)
+    base = dslot_matmul_pallas(jnp.asarray(a, jnp.int32), w, n_bits=8,
+                               block_m=16, block_n=16, block_k=16)
+    for dt in (jnp.int8, jnp.int16):
+        out = dslot_matmul_pallas(jnp.asarray(a, dt), w, n_bits=8,
+                                  block_m=16, block_n=16, block_k=16)
+        np.testing.assert_array_equal(np.asarray(out.out),
+                                      np.asarray(base.out))
 
 
 def test_batched_entry_matches_per_sample():
     rng = np.random.default_rng(13)
     w = _dyadic_w(rng, 48, 32)
-    batch_planes = jnp.stack(
-        [make_planes(jnp.asarray(rng.integers(0, 256, (32, 48)), jnp.int32), 8)
-         for _ in range(3)])                                   # (B, D, M, K)
-    out = dslot_matmul_pallas_batched(batch_planes, w, n_bits=8, relu=True,
+    batch_q = jnp.asarray(rng.integers(0, 256, (3, 32, 48)), jnp.int32)
+    out = dslot_matmul_pallas_batched(batch_q, w, n_bits=8, relu=True,
                                       block_m=16, block_n=16, block_k=16)
     assert out.out.shape == (3, 32, 32)
     assert out.planes_used.shape == (3, 2, 2)
     for b in range(3):
-        single = dslot_matmul_pallas(batch_planes[b], w, n_bits=8, relu=True,
+        single = dslot_matmul_pallas(batch_q[b], w, n_bits=8, relu=True,
                                      block_m=16, block_n=16, block_k=16)
         np.testing.assert_array_equal(np.asarray(out.out[b]),
                                       np.asarray(single.out))
         np.testing.assert_array_equal(np.asarray(out.planes_used[b]),
                                       np.asarray(single.planes_used))
+
+
+def test_batched_entry_runtime_precision_and_prepared_tables():
+    """The batched entry forwards runtime precision, per-request budgets and
+    the PREPARED |W| colsum tables — results identical to per-sample calls
+    that pass the same (so batched serving callers never recompute
+    colsums)."""
+    rng = np.random.default_rng(19)
+    B, M, K, N, bk = 3, 32, 48, 32, 16
+    w = _dyadic_w(rng, K, N)
+    batch_q = jnp.asarray(rng.integers(-255, 256, (B, M, K)), jnp.int32)
+    prep = dslot_prepare(np.asarray(w), block_m=16, block_n=16, block_k=bk,
+                         backend="pallas")
+    budgets = jnp.asarray([3, 8, 5], jnp.int32)                  # per request
+    npl = jnp.max(budgets)
+    out = dslot_matmul_pallas_batched(
+        batch_q, prep.w, n_bits=8, relu=True, block_m=16, block_n=16,
+        block_k=bk, n_planes_rt=npl, row_budget=budgets,
+        suffix_colsum=prep.suffix_colsum, total_colsum=prep.total_colsum)
+    for b in range(B):
+        single = dslot_matmul_pallas(
+            batch_q[b], prep.w, n_bits=8, relu=True, block_m=16, block_n=16,
+            block_k=bk, n_planes_rt=npl,
+            row_budget=jnp.full((M,), budgets[b], jnp.int32),
+            suffix_colsum=prep.suffix_colsum, total_colsum=prep.total_colsum)
+        np.testing.assert_array_equal(np.asarray(out.out[b]),
+                                      np.asarray(single.out))
+        np.testing.assert_array_equal(np.asarray(out.planes_used[b]),
+                                      np.asarray(single.planes_used))
+    # a (B, M) per-row budget matrix is accepted too and matches the (B,) one
+    out2 = dslot_matmul_pallas_batched(
+        batch_q, prep.w, n_bits=8, relu=True, block_m=16, block_n=16,
+        block_k=bk, n_planes_rt=npl,
+        row_budget=jnp.broadcast_to(budgets[:, None], (B, M)),
+        suffix_colsum=prep.suffix_colsum, total_colsum=prep.total_colsum)
+    np.testing.assert_array_equal(np.asarray(out.out), np.asarray(out2.out))
 
 
 def test_select_block_k_respects_budget():
@@ -163,16 +212,21 @@ def test_select_block_k_respects_budget():
     assert bk < 65536 and bk % 128 == 0 and bk >= 128
     fixed = 2 * 128 * 128 * 4 + 2 * 128 * 4
     assert fixed + bk * (128 + 128 * 4) <= 2 * 1024 * 1024
+    # a wider activation dtype shrinks the chunk (working set now counts the
+    # quantized block at its storage width, not an int8 plane)
+    bk16 = select_block_k(65536, 128, 128, 4, act_itemsize=2,
+                          budget=2 * 1024 * 1024)
+    assert bk16 <= bk
     # an output tile that alone blows the budget is a hard error
     with pytest.raises(ValueError):
         select_block_k(1024, 1024, 1024, 4, budget=1024 * 1024)
 
 
 def test_explicit_block_k_over_budget_raises():
-    planes = make_planes(jnp.ones((128, 65536), jnp.int32), 8)
+    q = jnp.ones((128, 65536), jnp.int32)
     w = jnp.ones((65536, 128), jnp.float32)
     with pytest.raises(ValueError, match="VMEM budget"):
-        dslot_matmul_pallas(planes, w, block_m=128, block_n=128,
+        dslot_matmul_pallas(q, w, block_m=128, block_n=128,
                             block_k=65536)
 
 

@@ -319,3 +319,26 @@ def test_chunked_admission_keeps_per_request_precision():
     solo = generate(model, pp, {"tokens": jnp.asarray(lo.prompt[None])}, 3,
                     n_planes=2)
     assert lo.out == list(np.asarray(solo[0]))
+    # precision is a TRACED argument to the jitted chunk forwards: two
+    # admissions at different plane budgets share one compile per chunk
+    # length (10-token prompts at chunk 4 -> one 4-token prefill trace and
+    # 4-/2-token extend traces), never one per precision
+    assert eng.pipeline._prefill_chunk._cache_size() == 1
+    assert eng.pipeline._extend_chunk._cache_size() == 2
+
+
+def test_jitted_prefill_chunks_match_eager(lm):
+    """ServeConfig.jit_prefill only changes how chunk forwards execute —
+    token streams must be identical to the eager admission path."""
+    _, model, params = lm
+    outs = {}
+    for jit in (True, False):
+        eng = ServeEngine(model, params, n_slots=1, max_len=64,
+                          serve_config=ServeConfig(prefill_chunk=5,
+                                                   jit_prefill=jit))
+        r = Request(uid=1, prompt=_prompt(13, seed=7), max_new=4)
+        assert eng.try_add(r)
+        while not r.done:
+            eng.step()
+        outs[jit] = r.out
+    assert outs[True] == outs[False]
