@@ -61,15 +61,19 @@ def main():
         print(f"digit-serial MLP calls: {len(vals)}, mean skipped MXU "
               f"passes {np.mean(vals):.1%}")
 
-    # ---- slot-pool continuous batching with chunked-prefill admission
-    # try_add only enqueues; the step loop interleaves at most one
-    # prefill_chunk of admission work per pooled decode step, so a long
-    # prompt trickles in without stalling live slots for a full forward.
+    # ---- slot-pool continuous batching with batched chunked admission
+    # try_add only enqueues; each engine step interleaves ONE batched
+    # admission forward — up to chunks_per_step PREFILLING prompts advance
+    # together, one prefill_chunk each, at ragged per-request offsets — so
+    # long prompts trickle in without stalling live slots for a full
+    # forward, and bursts drain two prompts at a time (watch two slots sit
+    # in 'prefilling' simultaneously below).
     lcfg = get_arch("olmo-1b").reduced()
     lmodel = build_model(lcfg)
     lparams = lmodel.init(jax.random.PRNGKey(2))
     eng = ServeEngine(lmodel, lparams, n_slots=2, max_len=48,
-                      serve_config=ServeConfig(prefill_chunk=4))
+                      serve_config=ServeConfig(prefill_chunk=4,
+                                               chunks_per_step=2))
     rng = np.random.default_rng(0)
     reqs = [Request(uid=i,
                     prompt=rng.integers(0, lcfg.vocab_size,

@@ -92,10 +92,13 @@ def flash_attention(q, k, v, q_pos, k_pos, *, causal: bool, window: int,
 
     q: (B, Sq, Hq, D); k/v: (B, Sk, Hkv, D); positions int32 arrays
     (q_pos: (Sq,) or per-sequence (B, Sq); k_pos: (Sk,) or (B, Sk); k_pos
-    may contain -1 = invalid slot).  2-D positions are only meaningful on
-    the decode fast path (Sq == 1) — a slot pool whose sequences sit at
-    different depths.  GQA folds Hq into (Hkv, G).  Returns (B, Sq, Hq, D)
-    in q.dtype.
+    may contain -1 = invalid slot).  2-D positions work on every path: the
+    decode fast path (Sq == 1, a slot pool whose sequences sit at different
+    depths) and the generic chunked-KV scan (Sq > 1, batched multi-token
+    cache extension at ragged per-sequence offsets — each sequence gets its
+    own causal/window mask against its own ring positions).  Shared 1-D
+    positions keep the cheaper (Sq, ck) per-chunk mask.  GQA folds Hq into
+    (Hkv, G).  Returns (B, Sq, Hq, D) in q.dtype.
     """
     B, Sq, Hq, D = q.shape
     Hkv = k.shape[2]
@@ -124,20 +127,30 @@ def flash_attention(q, k, v, q_pos, k_pos, *, causal: bool, window: int,
         m, l, acc = _attend_block(qg, k, v, mask, m0, l0, a0)
         out = acc / jnp.maximum(l[..., None], 1e-30)
         return out.reshape(B, Sq, Hq, D).astype(q.dtype)
-    assert q_pos.ndim == 1 and k_pos.ndim == 1, \
-        "per-sequence positions are decode-only (Sq == 1)"
 
+    shared = q_pos.ndim == 1 and k_pos.ndim == 1
     ck = min(chunk, Sk)
     n_chunks = -(-Sk // ck)
     pad = n_chunks * ck - Sk
     if pad:
         k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        k_pos = jnp.pad(k_pos, (0, pad), constant_values=-1)
+        k_pos = jnp.pad(k_pos, ((0, 0),) * (k_pos.ndim - 1) + ((0, pad),),
+                        constant_values=-1)
 
     kc = k.reshape(B, n_chunks, ck, Hkv, D)
     vc = v.reshape(B, n_chunks, ck, Hkv, D)
-    pc = k_pos.reshape(n_chunks, ck)
+    if shared:
+        pc = k_pos.reshape(n_chunks, ck)
+    else:
+        # per-sequence positions: each batch row masks against its OWN ring
+        # offsets, so the mask carries the batch axis ((B, Sq, ck) instead of
+        # a shared (Sq, ck)) and the KV-position chunks are scanned per-row.
+        qp = q_pos if q_pos.ndim == 2 \
+            else jnp.broadcast_to(q_pos[None], (B, Sq))
+        kp = k_pos if k_pos.ndim == 2 \
+            else jnp.broadcast_to(k_pos[None], (B, k_pos.shape[-1]))
+        pc = jnp.moveaxis(kp.reshape(B, n_chunks, ck), 1, 0)
 
     m0 = jnp.full((B, Sq, Hkv, G), _NEG_INF, jnp.float32)
     l0 = jnp.zeros((B, Sq, Hkv, G), jnp.float32)
@@ -147,11 +160,18 @@ def flash_attention(q, k, v, q_pos, k_pos, *, causal: bool, window: int,
         m, l, acc = carry
         kb, vb, pb = inputs
         valid = pb >= 0
-        mask = valid[None, :]
-        if causal:
-            mask = mask & (pb[None, :] <= q_pos[:, None])
-        if window:
-            mask = mask & (pb[None, :] > q_pos[:, None] - window)
+        if shared:
+            mask = valid[None, :]
+            if causal:
+                mask = mask & (pb[None, :] <= q_pos[:, None])
+            if window:
+                mask = mask & (pb[None, :] > q_pos[:, None] - window)
+        else:
+            mask = valid[:, None, :]
+            if causal:
+                mask = mask & (pb[:, None, :] <= qp[:, :, None])
+            if window:
+                mask = mask & (pb[:, None, :] > qp[:, :, None] - window)
         m, l, acc = _attend_block(qg, kb, vb, mask, m, l, acc)
         return (m, l, acc), None
 
@@ -225,16 +245,24 @@ def attention_forward(p: Params, x: jax.Array, cfg, *, positions: jax.Array,
                       causal: bool = True,
                       return_cache: bool = False,
                       is_cross: bool = False,
-                      cache_len: int | None = None
+                      cache_len: int | None = None,
+                      q_valid: jax.Array | None = None
                       ) -> tuple[jax.Array, KVCache | None]:
     """Full attention pass (train / prefill / decode / cross).
 
-    x: (B, S, d_model).  positions: (S,) int32 absolute positions.
+    x: (B, S, d_model).  positions: (S,) shared or (B, S) per-sequence int32
+    absolute positions.
     cache: when given and S is small (decode), new KV are appended (ring) and
     attention runs against the cache; when ``return_cache`` on a long pass
     (prefill), the cache is built from this pass's KV.
     kv_x: encoder output for cross-attention (keys/values from there, no
     causal mask, no rope on cross keys beyond their own positions).
+    q_valid: optional (B, S) bool — ragged batched cache extension.  Rows
+    where it is False are right-padding of a shorter chunk: their KV is NOT
+    written into the ring (the scatter writes back what the ring already
+    holds at those slots, so a lane's padding can never clobber live slots
+    even when its phantom positions wrap the ring capacity).  Their
+    attention outputs are still computed (garbage) — callers discard them.
     """
     B, S, _ = x.shape
     hd = cfg.head_dim_
@@ -284,18 +312,48 @@ def attention_forward(p: Params, x: jax.Array, cfg, *, positions: jax.Array,
         # decode: write new kv into per-sequence ring slots, attend against
         # the whole cache.  positions may be (S,) shared or (B, S) per-slot
         # (serving pools where sequences sit at different depths).  S > 1
-        # with a cache is the chunked-prefill extension path: a prompt chunk
-        # appended to an existing ring at an arbitrary position offset.
+        # with a cache is the chunked-prefill extension path: prompt chunks
+        # appended to existing rings at arbitrary per-sequence offsets —
+        # batched, each row masked against its own positions.
+        window = cfg.window if cfg.attn_type == "swa" else 0
+        if S > 1 and window:
+            # A chunk landing at offset o recycles ring slots (capacity
+            # = window) that still hold in-window keys needed by the
+            # chunk's own earliest queries — extension would be silently
+            # wrong, so refuse instead (callers fall back to one-shot
+            # prefill; see serve/prefill.py).  Applies to ANY batch size.
+            raise NotImplementedError(
+                "multi-token cache extension is unsupported for "
+                "sliding-window attention: the window-sized ring would "
+                "evict in-window keys the chunk still needs")
         C = cache.k.shape[1]
+        if S > C:
+            # consecutive positions are only slot-distinct modulo the ring
+            # capacity: a wider chunk would make two rows of the same
+            # sequence scatter into one slot (nondeterministic winner)
+            raise ValueError(
+                f"cache extension chunk ({S} tokens) exceeds the KV ring "
+                f"capacity ({C}): in-chunk positions would alias ring slots")
         pos_b = positions if positions.ndim == 2 \
             else jnp.broadcast_to(positions[None], (B, S))
         slots = pos_b % C                                   # (B, S)
         bidx = jnp.arange(B)[:, None]
-        kc = cache.k.at[bidx, slots].set(k)
-        vc = cache.v.at[bidx, slots].set(v)
-        pc = cache.positions.at[bidx, slots].set(pos_b)
+        if q_valid is not None:
+            # ragged rows: pad entries re-write the ring's current contents
+            # (slots within a row are distinct — S <= C enforced above and
+            # positions are consecutive — so the masked scatter is
+            # deterministic)
+            kw = jnp.where(q_valid[..., None, None], k,
+                           cache.k[bidx, slots])
+            vw = jnp.where(q_valid[..., None, None], v,
+                           cache.v[bidx, slots])
+            pw = jnp.where(q_valid, pos_b, cache.positions[bidx, slots])
+        else:
+            kw, vw, pw = k, v, pos_b
+        kc = cache.k.at[bidx, slots].set(kw)
+        vc = cache.v.at[bidx, slots].set(vw)
+        pc = cache.positions.at[bidx, slots].set(pw)
         new_cache = KVCache(k=kc, v=vc, positions=pc)
-        window = cfg.window if cfg.attn_type == "swa" else 0
         # decode: the cache is sequence-sharded (context parallelism); keep
         # that layout — repeating kv heads is fine, but constraining heads
         # onto the model axis here would force a full cache reshard.
@@ -307,29 +365,8 @@ def attention_forward(p: Params, x: jax.Array, cfg, *, positions: jax.Array,
             ka, va = kc, vc
         ka = constrain(ka, "b", "tp", None, None)
         va = constrain(va, "b", "tp", None, None)
-        if S > 1:
-            # Multi-token cache extension is batch-1 only: the generic flash
-            # path needs shared 1-D positions, so squeeze the per-sequence
-            # axis (B == 1 makes the shared/per-sequence distinction moot).
-            if B != 1:
-                raise NotImplementedError(
-                    "multi-token cache extension (chunked prefill) is "
-                    "batch-1 only; pooled decode steps pass S == 1")
-            if window:
-                # A chunk landing at offset o recycles ring slots (capacity
-                # = window) that still hold in-window keys needed by the
-                # chunk's own earliest queries — extension would be silently
-                # wrong, so refuse instead (callers fall back to one-shot
-                # prefill; see serve/prefill.py).
-                raise NotImplementedError(
-                    "multi-token cache extension is unsupported for "
-                    "sliding-window attention: the window-sized ring would "
-                    "evict in-window keys the chunk still needs")
-            out = flash_attention(q, ka, va, pos_b[0], pc[0], causal=causal,
-                                  window=window, chunk=cfg.attn_chunk)
-        else:
-            out = flash_attention(q, ka, va, pos_b, pc, causal=causal,
-                                  window=window, chunk=cfg.attn_chunk)
+        out = flash_attention(q, ka, va, pos_b, pc, causal=causal,
+                              window=window, chunk=cfg.attn_chunk)
     else:
         window = cfg.window if (cfg.attn_type == "swa" and not cross) else 0
         ka, va = _spread(k, v)

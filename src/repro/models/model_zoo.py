@@ -71,6 +71,23 @@ class Model:
         from .mlp import prepare_mlp_dslot
         return prepare_mlp_dslot(params, self.cfg)
 
+    @property
+    def supports_ragged_batches(self) -> bool:
+        """Whether ``prefill``/``extend`` accept stacked ragged requests
+        (the ``lengths`` argument): decoder-only FULL-attention token
+        stacks.  Recurrent mixers (ssm/rglru) advance their carried state
+        per token, so a right-pad token would corrupt the lane; enc-dec and
+        frontend models key their inputs off more than ``tokens``; and
+        sliding-window attention builds its window-capacity ring from the
+        LAST ``window`` columns of the padded batch, which for a short row
+        are pads — its real in-window keys would be evicted."""
+        if self.cfg.family == "encdec" or self.cfg.frontend:
+            return False
+        if self.cfg.attn_type == "swa" and self.cfg.window:
+            return False
+        kinds = set(self.decoder.pattern) | set(self.decoder.rest_kinds)
+        return not (kinds & {"ssm", "rglru"})
+
     # ------------------------------------------------------------- helpers
 
     def _embed_inputs(self, params, batch) -> jax.Array:
@@ -92,9 +109,19 @@ class Model:
     # ------------------------------------------------------------- forward
 
     def forward(self, params, batch, mode: str = "train",
-                cache_len: int | None = None
+                cache_len: int | None = None,
+                lengths: jax.Array | None = None
                 ) -> tuple[jax.Array, jax.Array, Any]:
-        """Full-sequence pass.  Returns (logits, aux_loss, caches|None)."""
+        """Full-sequence pass.  Returns (logits, aux_loss, caches|None).
+
+        ``lengths`` (prefill mode only): per-sequence (B,) valid token
+        counts for a RAGGED stacked batch — rows are right-padded to the
+        common S and the prefill logits are taken at each row's last VALID
+        position instead of column S-1.  Pad positions do land in the built
+        cache, but they are invisible to decoding: a pad key at position p
+        is causal-masked until the real token at p is decoded, and that
+        decode step overwrites slot ``p % C`` before attending.
+        """
         cfg = self.cfg
         enc_out = self._encode(params, batch) if self.encoder is not None \
             else None
@@ -110,20 +137,36 @@ class Model:
         if mode == "prefill":
             # serving only needs the next-token distribution: computing the
             # (B, S, V) logits for a 32k prompt is pure waste (multi-GB)
-            x = x[:, -1:]
+            if lengths is not None:
+                idx = jnp.clip(lengths.astype(jnp.int32) - 1, 0,
+                               x.shape[1] - 1)
+                x = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+            else:
+                x = x[:, -1:]
         logits = lm_logits(params["head"], params["embed"], x, cfg)
         return logits, aux, caches if mode == "prefill" else None
 
     # ------------------------------------------------------------- serving
 
-    def prefill(self, params, batch, max_len: int | None = None
+    def prefill(self, params, batch, max_len: int | None = None,
+                lengths: jax.Array | None = None
                 ) -> tuple[jax.Array, dict]:
+        """One-shot prompt ingestion.  ``lengths``: optional per-sequence
+        (B,) valid token counts — stacked RAGGED prompts, right-padded to a
+        common width, each row's logits and decode position taken at its own
+        length (see ``forward``; ``supports_ragged_batches`` stacks only,
+        ``NotImplementedError`` otherwise)."""
+        if lengths is not None and not self.supports_ragged_batches:
+            raise NotImplementedError(
+                "ragged stacked prefill (lengths=...) needs a "
+                "full-attention decoder-only stack "
+                "(see Model.supports_ragged_batches)")
         logits, _, caches = self.forward(params, batch, mode="prefill",
-                                         cache_len=max_len)
+                                         cache_len=max_len, lengths=lengths)
         B = batch["tokens"].shape[0]
-        return logits[:, -1], {"caches": caches,
-                               "pos": jnp.full((B,), self._full_len(batch),
-                                               jnp.int32)}
+        pos = jnp.asarray(lengths, jnp.int32) if lengths is not None \
+            else jnp.full((B,), self._full_len(batch), jnp.int32)
+        return logits[:, -1], {"caches": caches, "pos": pos}
 
     def _full_len(self, batch) -> int:
         S = batch["tokens"].shape[1]
@@ -150,33 +193,60 @@ class Model:
         logits = lm_logits(params["head"], params["embed"], x, cfg)
         return logits[:, 0], {"caches": caches, "pos": state["pos"] + 1}
 
-    def extend(self, params, state: dict, tokens: jax.Array
+    def extend(self, params, state: dict, tokens: jax.Array,
+               lengths: jax.Array | None = None
                ) -> tuple[jax.Array, dict]:
-        """Append a multi-token prompt chunk to an existing decode state.
+        """Append multi-token prompt chunks to an existing decode state.
 
         The chunked-prefill primitive: runs the decode path with S > 1
-        tokens at positions ``state["pos"] .. state["pos"] + S - 1``, writing
-        KV into each sequence's cache ring at those offsets (recurrent
-        mixers advance from their carried state).  Returns the last
-        position's logits and the extended state — so a prompt can be fed
-        through the cache one fixed-size chunk at a time, and the final
-        chunk's logits seed decoding exactly like a one-shot ``prefill``.
+        tokens per sequence at positions ``state["pos"][b] ..
+        state["pos"][b] + S - 1``, writing KV into each sequence's cache
+        ring at those per-sequence offsets (recurrent mixers advance from
+        their carried state).  Returns each row's last position's logits and
+        the extended state — so stacked prompts can be fed through their
+        caches one fixed-size chunk at a time, at ragged offsets, and the
+        final chunk's logits seed decoding exactly like a one-shot
+        ``prefill``.
 
-        tokens: (B, 1..S) int32.  Attention stacks support B == 1 only (a
-        prompt chunk needs per-sequence positions with multi-token queries);
-        serving admits one request at a time, so that is the natural shape.
+        tokens: (B, 1..S) int32 — any batch size; ``state["pos"]`` is the
+        per-sequence (B,) offset vector, so stacked requests may sit at
+        different depths.
+
+        lengths: optional per-sequence (B,) valid token counts for RAGGED
+        chunks right-padded to the common S.  Pad rows write nothing into
+        the KV rings and do not advance ``pos``; each row's logits come
+        from its last VALID position (rows with length 0 ride along
+        untouched — their logits are garbage, callers ignore them).
+        Attention-only stacks (``supports_ragged_batches``) — recurrent
+        mixers would fold pad tokens into their carried state.
         """
         cfg = self.cfg
         x = embed_tokens(params["embed"], tokens, cfg)
         B, S = tokens.shape
         pos0 = state["pos"].astype(jnp.int32)
         pos = pos0[:, None] + jnp.arange(S, dtype=jnp.int32)[None]   # (B, S)
+        q_valid = None
+        if lengths is not None:
+            if not self.supports_ragged_batches:
+                raise NotImplementedError(
+                    "ragged batched extension (lengths=...) needs a "
+                    "full-attention decoder-only stack "
+                    "(see Model.supports_ragged_batches)")
+            lengths = jnp.asarray(lengths, jnp.int32)
+            q_valid = jnp.arange(S, dtype=jnp.int32)[None] < lengths[:, None]
         x, caches, _ = self.decoder.apply(
             params["decoder"], x, positions=pos, caches=state["caches"],
-            mode="decode")
+            mode="decode", q_valid=q_valid)
         x = apply_norm(params["final_norm"], x, cfg)
-        logits = lm_logits(params["head"], params["embed"], x[:, -1:], cfg)
-        return logits[:, 0], {"caches": caches, "pos": pos0 + S}
+        if lengths is None:
+            last = x[:, -1:]
+            new_pos = pos0 + S
+        else:
+            idx = jnp.clip(lengths - 1, 0, S - 1)
+            last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+            new_pos = pos0 + lengths
+        logits = lm_logits(params["head"], params["embed"], last, cfg)
+        return logits[:, 0], {"caches": caches, "pos": new_pos}
 
     def init_decode_state(self, batch_size: int, seq_len: int,
                           enc_len: int = 0) -> dict:

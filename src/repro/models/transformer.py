@@ -12,10 +12,12 @@ pattern remainder (e.g. recurrentgemma's 26 = 3*8 + 2) runs unscanned.
 
 Caches are pytrees mirroring the parameter stacking, so decode steps scan
 with the same structure.  ``mode="decode"`` accepts multi-token inputs too:
-attention writes the chunk's KV at its positions into the per-sequence rings
-(batch-1 only — see ``attention_forward``), recurrent mixers advance from
-their carried state — this is the ``Model.extend`` path that chunked prefill
-(``docs/serving.md``) is built on.
+attention writes each chunk's KV at its positions into the per-sequence
+rings — batched, at ragged per-sequence offsets, with ``q_valid`` masking
+the ring writes of right-padded rows — recurrent mixers advance from their
+carried state (and therefore reject ragged ``q_valid`` batches: a pad token
+would pollute the carried state).  This is the ``Model.extend`` path that
+batched chunked prefill (``docs/serving.md``) is built on.
 """
 
 from __future__ import annotations
@@ -88,12 +90,24 @@ def init_layer_cache(cfg, kind: str, batch: int, seq_len: int,
 def apply_layer(p: Params, x: jax.Array, cfg, kind: str, *,
                 positions: jax.Array, cache: Any = None,
                 enc_out: jax.Array | None = None, mode: str = "train",
-                causal: bool = True, cache_len: int | None = None
+                causal: bool = True, cache_len: int | None = None,
+                q_valid: jax.Array | None = None
                 ) -> tuple[jax.Array, Any, jax.Array]:
-    """Returns (x, new_cache, aux_loss)."""
+    """Returns (x, new_cache, aux_loss).
+
+    ``q_valid``: (B, S) bool for ragged batched cache extension — pad rows
+    skip the KV-ring write (see ``attention_forward``).  Only attention
+    kinds support it; recurrent mixers advance per token and would fold pad
+    tokens into their carried state.
+    """
     aux = jnp.zeros((), jnp.float32)
     return_cache = mode == "prefill"
     use_cache = mode == "decode"
+    if q_valid is not None and kind in ("ssm", "rglru"):
+        raise NotImplementedError(
+            f"ragged batched extension (q_valid) is unsupported for "
+            f"recurrent mixer {kind!r}: pad tokens would advance the "
+            f"carried state")
 
     if kind == "ssm":
         h, new_state = apply_ssm(p["mixer"], apply_norm(p["norm"], x, cfg),
@@ -114,7 +128,8 @@ def apply_layer(p: Params, x: jax.Array, cfg, kind: str, *,
         h, new_self = attention_forward(
             p["attn"], apply_norm(p["norm1"], x, cfg), cfg,
             positions=positions, cache=self_cache if use_cache else None,
-            causal=causal, return_cache=return_cache, cache_len=cache_len)
+            causal=causal, return_cache=return_cache, cache_len=cache_len,
+            q_valid=q_valid)
         x = x + h
         if use_cache:
             # decode: static cross cache built at prefill
@@ -135,7 +150,7 @@ def apply_layer(p: Params, x: jax.Array, cfg, kind: str, *,
     h, new_cache = attention_forward(
         p["attn"], apply_norm(p["norm1"], x, cfg), cfg, positions=positions,
         cache=cache if use_cache else None, causal=causal,
-        return_cache=return_cache, cache_len=cache_len)
+        return_cache=return_cache, cache_len=cache_len, q_valid=q_valid)
     x = x + h
     if kind == "moe":
         h, aux = apply_moe(p["moe"], apply_norm(p["norm2"], x, cfg), cfg)
@@ -201,7 +216,8 @@ class Stack:
         return c
 
     def apply(self, p: Params, x: jax.Array, *, positions, caches=None,
-              enc_out=None, mode: str = "train", cache_len: int | None = None):
+              enc_out=None, mode: str = "train", cache_len: int | None = None,
+              q_valid: jax.Array | None = None):
         cfg = self.cfg
         aux_total = jnp.zeros((), jnp.float32)
         new_caches = {"groups": [], "rest": []}
@@ -221,7 +237,8 @@ class Stack:
                         x, nc, aux = apply_layer(
                             params_g[pos], x, cfg, kind, positions=positions,
                             cache=c, enc_out=enc_out, mode=mode,
-                            causal=self.causal, cache_len=cache_len)
+                            causal=self.causal, cache_len=cache_len,
+                            q_valid=q_valid)
                         new_cs.append(nc)
                         aux_g = aux_g + aux
                 recs = {k: tuple(v) for k, v in sink.items()}
@@ -263,7 +280,8 @@ class Stack:
             x, nc, aux = apply_layer(p["rest"][i], x, cfg, kind,
                                      positions=positions, cache=c,
                                      enc_out=enc_out, mode=mode,
-                                     causal=self.causal, cache_len=cache_len)
+                                     causal=self.causal, cache_len=cache_len,
+                                     q_valid=q_valid)
             new_caches["rest"].append(nc)
             aux_total = aux_total + aux
 

@@ -23,10 +23,15 @@ class ServeConfig:
         one forward (the pre-pipeline blocking behaviour, still via the
         queue).
     chunks_per_step: admission-work budget per engine step.  1 (default)
-        gives the paper-style overlap — one chunk of serial admission work
-        rides along with every decode step; raise it to drain the queue
-        faster at the cost of longer per-step stalls.  Values below 1 are
-        clamped to 1 (admission cannot be paused through this knob).
+        gives the paper-style overlap — one chunk of admission work rides
+        along with every decode step; raise it to drain bursts faster.  On
+        attention-only stacks the budget is spent as admission LANES: up to
+        ``chunks_per_step`` PREFILLING requests advance together, one chunk
+        each, in a single batched ragged-offset forward per step (so the
+        per-step stall grows sub-linearly in the budget).  On the serial
+        fallback (SWA whole-prompt admission, recurrent mixers) it is spent
+        as sequential chunks of the single in-flight task.  Values below 1
+        are clamped to 1 (admission cannot be paused through this knob).
     max_queue: bound on requests waiting in the admission queue (pending +
         in-flight prefill).  ``try_add`` returns False when full.  ``None``
         means unbounded.

@@ -8,14 +8,17 @@ planes-executed statistics per request.
 
 ``ServeEngine`` is the production shape: a fixed pool of B slots; decode
 steps advance every live slot together (one jitted step for the whole
-pool), finished slots free up immediately.  Admission is NON-BLOCKING:
-``try_add`` only validates and enqueues; the engine's step loop interleaves
-at most one fixed-size chunk of prefill work per decode step
-(``ServeConfig.prefill_chunk`` / ``chunks_per_step``, executed by
-``repro.serve.prefill.PrefillPipeline``), so admitting a long prompt never
-stalls the pool for a full-prompt forward.  A request moves through
-PENDING -> PREFILLING -> DECODING -> DONE (``Request.phase``), and its slot
-joins the pooled decode the very step its last prompt chunk lands.
+pool), finished slots free up immediately.  Admission is NON-BLOCKING and
+BATCHED: ``try_add`` only validates and enqueues; the engine's step loop
+interleaves one batched admission forward per decode step — up to
+``ServeConfig.chunks_per_step`` PREFILLING requests each advance by one
+fixed-size ``prefill_chunk`` of prompt, stacked into a single ragged-offset
+forward (executed by ``repro.serve.prefill.PrefillPipeline``) — so
+admitting long prompts never stalls the pool for a full-prompt forward,
+and a burst of admissions drains ``chunks_per_step`` prompts at a time.  A
+request moves through PENDING -> PREFILLING -> DECODING -> DONE
+(``Request.phase``), and its slot joins the pooled decode the very step
+its last prompt chunk lands.
 
 Per-slot position vectors (threaded through the model's per-sequence
 KV-cache ring) make the batch composition fully dynamic without
@@ -285,16 +288,15 @@ class ServeEngine:
 
     def slot_phases(self) -> list[str]:
         """Phase of each pool slot: 'free' | PREFILLING | DECODING."""
-        act = self.pipeline.active
-        return [PREFILLING if act is not None and act.slot == i
+        held = {t.slot for t in self.pipeline.active}
+        return [PREFILLING if i in held
                 else (DECODING if r is not None else "free")
                 for i, r in enumerate(self.slot_req)]
 
     def _free_slot(self, exclude: set = frozenset()) -> int | None:
-        act = self.pipeline.active
+        held = {t.slot for t in self.pipeline.active}
         for i, r in enumerate(self.slot_req):
-            if r is None and (act is None or act.slot != i) \
-                    and i not in exclude:
+            if r is None and i not in held and i not in exclude:
                 return i
         return None
 
@@ -307,9 +309,10 @@ class ServeEngine:
 
     def _admission_tick(self) -> None:
         """One step's worth of admission work: at most ``chunks_per_step``
-        prompt chunks; completed prefills are merged into their slots' rows
-        (the PR 2 per-slot position vectors keep live slots undisturbed)
-        and decode from THIS step on."""
+        prompt chunks — batched into one forward when the model supports
+        ragged stacked extension; completed prefills are merged into their
+        slots' rows (the PR 2 per-slot position vectors keep live slots
+        undisturbed) and decode from THIS step on."""
         for task in self.pipeline.tick(self._free_slot):
             i = task.slot
             self.state = _merge_slot(self.state, task.state, i)

@@ -4,37 +4,55 @@ The paper's core idea — start subsequent operations as soon as the first
 digits arrive instead of waiting for the full result — applied at the
 serving layer: instead of blocking the whole decode pool for one full-prompt
 forward per admission (the old ``try_add``), admission work is cut into
-fixed-size prompt chunks and the engine interleaves at most
-``chunks_per_step`` chunks with every pooled decode step.  Live slots keep
-decoding at their usual cadence; a pending prompt trickles into its KV cache
-a chunk at a time and the slot becomes decodable the very step its last
-chunk lands.
+fixed-size prompt chunks and the engine interleaves admission work with
+every pooled decode step.  Live slots keep decoding at their usual cadence;
+pending prompts trickle into their KV caches a chunk at a time and a slot
+becomes decodable the very step its last chunk lands.
+
+Like the serial-dataflow batching the paper's comparison baselines lean on
+(Stripes; DSLR-CNN), throughput comes from keeping MANY serial streams in
+flight at once: admission work is BATCHED.  Up to
+``ServeConfig.chunks_per_step`` PREFILLING requests advance together in ONE
+forward per engine step — each in its own **lane** of a persistent stacked
+decode state, at its own ragged offset, padded to the fixed chunk width,
+with per-lane position vectors and per-lane DSLOT plane budgets
+(``Model.extend(..., lengths=...)``).
 
 Lifecycle of a request::
 
     try_add --> PENDING ----> PREFILLING ----------> DECODING --> DONE
-               (queued,       (slot reserved;        (in the pooled
-                FIFO)          chunks accumulate      decode step)
-                               into a private
-                               batch-1 state)
+               (queued,       (slot + lane           (in the pooled
+                FIFO)          reserved; chunks       decode step)
+                               accumulate into the
+                               task's lane)
 
-Chunk mechanics: the first chunk runs ``model.prefill`` (builds a fresh
-batch-1 ring sized for ``max_len``), later chunks run ``model.extend``
-(multi-token decode-mode append at the current offset, writing KV at
-positions ``off .. off+c-1`` through the per-sequence position vectors).
-The accumulating state is **private** to the task — the pool is written
-exactly once, by ``_merge_slot`` on completion, which replaces the reserved
-slot's rows wholesale.  That makes the pipeline trivially safe against
+Chunk mechanics (batched mode): every chunk — the first included — runs
+``Model.extend`` on the stacked lane state, starting from a freshly reset
+lane (an empty ring at position 0 extends bit-identically to a one-shot
+``Model.prefill``: masked ring entries are healed by the online softmax).
+Lanes are **private** to their tasks — the pool is written exactly once, by
+``_merge_slot`` on completion, which replaces the reserved slot's rows with
+the finished lane's rows.  That makes the pipeline trivially safe against
 everything that happens to the pool in between (pooled decode steps write
 garbage KV into reserved rows exactly as they always did into free rows;
 the final merge wipes it) and makes cancelling a mid-prefill request free:
-drop the task, nothing to clean up.
+drop the task, the lane is reset when the next request claims it.
 
-Sliding-window attention is the one stack that cannot extend a ring
-chunk-by-chunk (a chunk landing at offset ``o`` recycles ring slots that
-still hold in-window keys needed by the chunk's own earliest queries), so
-SWA configs fall back to whole-prompt chunks — admission is still
-queue-paced, one admission per step, but each is a single forward.
+Right-padding is harmless by construction: pad rows write nothing into the
+ring (``q_valid`` masks the scatter) and don't advance the lane's position,
+so a ragged tail chunk costs one fixed-width forward and nothing else.
+
+Two stacks fall back to the SERIAL path (one task in flight, batch-1
+states, ``model.prefill`` then ``model.extend`` per chunk —
+``chunks_per_step`` then meaning sequential chunks per tick):
+
+* sliding-window attention cannot extend a ring chunk-by-chunk at all (a
+  chunk landing at offset ``o`` recycles ring slots that still hold
+  in-window keys needed by the chunk's own earliest queries), so SWA
+  configs additionally fall back to whole-prompt chunks;
+* recurrent mixers (ssm/rglru) advance carried state per token, so ragged
+  right-padding would corrupt their lanes
+  (``Model.supports_ragged_batches``).
 """
 
 from __future__ import annotations
@@ -42,6 +60,8 @@ from __future__ import annotations
 from collections import deque
 from dataclasses import dataclass, field
 from typing import TYPE_CHECKING, Any, Callable
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -64,12 +84,17 @@ CANCELLED = "cancelled"      # abandoned at any earlier phase
 
 @dataclass
 class PrefillTask:
-    """One in-flight admission: a request, its reserved slot, and the
-    private batch-1 decode state its prompt chunks accumulate into."""
+    """One in-flight admission: a request, its reserved pool slot, and the
+    lane of the pipeline's stacked state (batched mode) or the private
+    batch-1 decode state (serial fallback) its prompt chunks accumulate
+    into."""
     req: "Request"
     slot: int
+    lane: int = -1                   # batched mode: row of the lane state
     offset: int = 0                  # prompt tokens already processed
-    state: dict | None = None        # batch-1 model decode state
+    state: dict | None = None        # batch-1 model decode state (serial
+                                     # mode throughout; batched mode: the
+                                     # extracted lane row, on completion)
     logits: Any = None               # last chunk's final-position logits
     chunks_done: int = 0
 
@@ -78,14 +103,54 @@ class PrefillTask:
         return len(self.req.prompt) - self.offset
 
 
+def _batch_axes(model, max_len: int):
+    """Locate the batch axis of every decode-state leaf (shape-only, via
+    ``eval_shape`` — nothing is allocated).  -1 marks a leaf with no batch
+    axis (shared across sequences)."""
+    s1 = jax.eval_shape(lambda: model.init_decode_state(1, max_len))
+    s2 = jax.eval_shape(lambda: model.init_decode_state(2, max_len))
+
+    def ax(a, b):
+        diffs = [i for i, (x, y) in enumerate(zip(a.shape, b.shape))
+                 if x != y]
+        return diffs[0] if diffs else -1
+
+    return jax.tree.map(ax, s1, s2)
+
+
+def _lane_ops(axes, jit: bool):
+    """Row extract/insert over a stacked decode state, with the lane index
+    as a TRACED scalar (one compile each, any lane) — the eager per-leaf
+    form costs dozens of dispatches and a full state copy per call, which
+    would eat the batching win at claim/completion time."""
+
+    def extract(state, i):
+        return jax.tree.map(
+            lambda leaf, a: leaf if a < 0
+            else jax.lax.dynamic_slice_in_dim(leaf, i, 1, axis=a),
+            state, axes)
+
+    def insert(state, row, i):
+        return jax.tree.map(
+            lambda leaf, a, r: leaf if a < 0
+            else jax.lax.dynamic_update_slice_in_dim(leaf, r, i, axis=a),
+            state, axes, row)
+
+    if jit:
+        extract, insert = jax.jit(extract), jax.jit(insert)
+    return extract, insert
+
+
 @dataclass
 class PrefillPipeline:
-    """FIFO admission queue + the chunk executor (one task in flight).
+    """FIFO admission queue + the chunk executor.
 
     The engine calls :meth:`tick` once per step with a free-slot provider;
-    the pipeline claims the queue head into a slot when one is available and
-    advances the in-flight task by at most ``chunks_per_step`` chunks,
-    returning completed tasks for the engine to merge into the pool.
+    the pipeline claims queue heads into slots (and lanes) as they become
+    available and advances every in-flight task by one chunk — all tasks in
+    ONE batched forward (``chunks_per_step`` lanes) when the model supports
+    ragged stacked extension, serially otherwise — returning completed
+    tasks for the engine to merge into the pool.
     """
     model: Any
     params: Any
@@ -95,14 +160,53 @@ class PrefillPipeline:
     max_queue: int | None = None
     jit_chunks: bool = True
     queue: deque = field(default_factory=deque)
-    active: PrefillTask | None = None
+    active: list = field(default_factory=list)   # in-flight PrefillTasks
+    forwards: int = 0                            # model forwards run (a
+                                                 # batched tick counts 1)
 
     def __post_init__(self):
         if self.model.cfg.attn_type == "swa" and self.chunk:
             # SWA rings recycle slots within chunk+window spans (see module
             # docstring): chunked extension would drop needed keys.
             self.chunk = 0
-        # Jitted chunk forwards (the engine's ``_decode`` pattern): the
+        if self.chunk > self.max_len:
+            # batched chunks are padded to the FULL chunk width; wider than
+            # the KV ring, the pad phantoms would alias real slots (the
+            # attention layer rejects such chunks).  A prompt can never
+            # exceed max_len anyway (try_add validates), so clamping loses
+            # nothing.
+            self.chunk = self.max_len
+        self.lanes = 1
+        self.batched = bool(self.chunk > 0
+                            and self.model.supports_ragged_batches)
+        model, max_len = self.model, self.max_len
+        if self.batched:
+            # Lane-pool batched admission: one persistent stacked decode
+            # state with `chunks_per_step` lanes; every tick advances every
+            # active lane by one fixed-width chunk in a single forward.
+            # Tokens are always padded to (lanes, chunk), lengths carry the
+            # ragged tails, and the per-lane DSLOT budgets enter as a traced
+            # (lanes,) i32 vector — so there is exactly ONE compile, total,
+            # shared by every admission at every precision and every ragged
+            # tail length.
+            self.lanes = max(1, self.chunks_per_step)
+            self._axes = _batch_axes(model, max_len)
+            self._lane_state = model.init_decode_state(self.lanes, max_len)
+            self._fresh = model.init_decode_state(1, max_len)
+            self._extract_lane, self._insert_lane = _lane_ops(
+                self._axes, self.jit_chunks)
+
+            def _extend_lanes(params, state, tokens, lengths, npl):
+                with precision_scope(npl):
+                    return model.extend(params, state, tokens,
+                                        lengths=lengths)
+
+            if self.jit_chunks:
+                _extend_lanes = jax.jit(_extend_lanes)
+            self._extend_lanes = _extend_lanes
+            return
+        # Serial fallback (SWA / whole-prompt / recurrent mixers): jitted
+        # batch-1 chunk forwards (the engine's ``_decode`` pattern): the
         # request's DSLOT precision enters as a TRACED i32 argument, so every
         # admission at every precision shares one compile per chunk length —
         # a python int closed over at trace time would recompile per
@@ -112,7 +216,6 @@ class PrefillPipeline:
         # (``chunk == 0``, incl. the SWA fallback) every distinct prompt
         # length would be a fresh full-model compile, so that path stays
         # eager.
-        model, max_len = self.model, self.max_len
 
         def _prefill_chunk(params, tokens, npl):
             with precision_scope(npl):
@@ -129,26 +232,30 @@ class PrefillPipeline:
         self._prefill_chunk = _prefill_chunk
         self._extend_chunk = _extend_chunk
 
-    def _chunk_precision(self, req: "Request") -> jax.Array:
-        """The request's plane budget as a traced-friendly i32 scalar.
+    def _resolve_precision(self, req: "Request | None") -> int:
+        """The request's plane budget as a python int.
 
-        ``None`` resolves HERE (at python level) to what ``scope(None)``
-        would have meant eagerly — fall through to the layer default
-        (``cfg.dslot.n_planes``, then ``n_bits``).  Passing None into the
-        traced scope instead would be wrong twice over: it is untraceable,
-        and a traced ``n_bits`` stand-in would override a layer default
-        smaller than ``n_bits``.
+        ``None`` (no request, or no explicit budget) resolves HERE (at
+        python level) to what ``scope(None)`` would have meant eagerly —
+        fall through to the layer default (``cfg.dslot.n_planes``, then
+        ``n_bits``).  Passing None into the traced scope instead would be
+        wrong twice over: it is untraceable, and a traced ``n_bits``
+        stand-in would override a layer default smaller than ``n_bits``.
         """
         d = self.model.cfg.dslot
-        npl = req.n_planes if req.n_planes is not None \
-            else (d.n_planes or d.n_bits)
-        return jnp.asarray(npl, jnp.int32)
+        if req is not None and req.n_planes is not None:
+            return int(req.n_planes)
+        return int(d.n_planes or d.n_bits)
+
+    def _chunk_precision(self, req: "Request") -> jax.Array:
+        """Serial-path budget as a traced-friendly i32 scalar."""
+        return jnp.asarray(self._resolve_precision(req), jnp.int32)
 
     # ------------------------------------------------------------- queue
 
     def __len__(self) -> int:
         """Admissions not yet decodable: queued + in-flight."""
-        return len(self.queue) + (1 if self.active is not None else 0)
+        return len(self.queue) + len(self.active)
 
     def enqueue(self, req: "Request") -> bool:
         if self.max_queue is not None and len(self) >= self.max_queue:
@@ -159,52 +266,109 @@ class PrefillPipeline:
 
     def cancel(self, uid: int) -> bool:
         """Drop a pending or in-flight admission.  Mid-prefill cancellation
-        is free: the pool was never written, so only the private task state
-        is discarded (its reserved slot is simply released).  A cancelled
-        request is terminal: ``done`` is set so completion loops exit."""
+        is free: the pool was never written, so only the task is discarded —
+        its reserved slot is released, and its lane is reset when the next
+        claimed request reuses it.  Co-batched survivors are untouched
+        (lanes are independent batch rows).  A cancelled request is
+        terminal: ``done`` is set so completion loops exit."""
         for req in self.queue:
             if req.uid == uid:
                 self.queue.remove(req)
                 req.phase = CANCELLED
                 req.done = True
                 return True
-        if self.active is not None and self.active.req.uid == uid:
-            self.active.req.phase = CANCELLED
-            self.active.req.done = True
-            self.active = None
-            return True
+        for task in self.active:
+            if task.req.uid == uid:
+                task.req.phase = CANCELLED
+                task.req.done = True
+                self.active.remove(task)
+                return True
         return False
 
     # ------------------------------------------------------------- stepping
 
     def tick(self, free_slot: Callable[[set], int | None]
              ) -> list[PrefillTask]:
-        """Run up to ``chunks_per_step`` chunks of admission work.
+        """Run one step's worth of admission work.
 
         ``free_slot(exclude)`` returns a claimable slot index not in
         ``exclude``, or None (pool full).  Returns the tasks whose LAST
         chunk landed this tick — the engine merges them and their slots
         decode this same step.  Slots of tasks completed WITHIN this tick
         are excluded from claiming (the engine merges them only after the
-        tick returns), so ``chunks_per_step > 1`` can never double-book a
-        slot.
+        tick returns), so admission can never double-book a slot.
+
+        Batched mode: claim queue heads into free (slot, lane) pairs up to
+        ``chunks_per_step`` lanes, then advance ALL active tasks by one
+        chunk in a single stacked forward.  Serial fallback: up to
+        ``chunks_per_step`` sequential chunks of the single in-flight task.
         """
+        if not self.batched:
+            return self._tick_serial(free_slot)
+        completed: list[PrefillTask] = []
+        while self.queue and len(self.active) < self.lanes:
+            slot = free_slot(set())
+            if slot is None:
+                break
+            req = self.queue.popleft()
+            req.phase = PREFILLING
+            lane = min(set(range(self.lanes))
+                       - {t.lane for t in self.active})
+            # reset the lane: an empty ring at position 0 (a previous
+            # occupant's stale keys would otherwise be causally visible)
+            self._lane_state = self._insert_lane(self._lane_state,
+                                                 self._fresh, lane)
+            self.active.append(PrefillTask(req=req, slot=slot, lane=lane))
+        if not self.active:
+            return completed
+        L, c = self.lanes, self.chunk
+        toks = np.zeros((L, c), np.int32)
+        lens = np.zeros((L,), np.int32)
+        npl = np.full((L,), self._resolve_precision(None), np.int32)
+        for t in self.active:
+            end = min(t.offset + c, len(t.req.prompt))
+            n = end - t.offset
+            toks[t.lane, :n] = t.req.prompt[t.offset:end]
+            lens[t.lane] = n
+            npl[t.lane] = self._resolve_precision(t.req)
+        logits, self._lane_state = self._extend_lanes(
+            self.params, self._lane_state, jnp.asarray(toks),
+            jnp.asarray(lens), jnp.asarray(npl))
+        self.forwards += 1
+        still: list[PrefillTask] = []
+        for t in self.active:
+            t.offset += int(lens[t.lane])
+            t.chunks_done += 1
+            if t.offset >= len(t.req.prompt):
+                t.logits = logits[t.lane:t.lane + 1]
+                t.state = self._extract_lane(self._lane_state, t.lane)
+                completed.append(t)
+            else:
+                still.append(t)
+        self.active = still
+        return completed
+
+    def _tick_serial(self, free_slot: Callable[[set], int | None]
+                     ) -> list[PrefillTask]:
+        """Serial fallback: one task in flight, ``chunks_per_step``
+        sequential chunks per tick (whole-prompt chunks for SWA)."""
         completed: list[PrefillTask] = []
         landed: set[int] = set()
         for _ in range(max(1, self.chunks_per_step)):
-            if self.active is None and self.queue:
+            if not self.active and self.queue:
                 slot = free_slot(landed)
                 if slot is None:
                     break
                 req = self.queue.popleft()
                 req.phase = PREFILLING
-                self.active = PrefillTask(req=req, slot=slot)
-            if self.active is None:
+                self.active.append(PrefillTask(req=req, slot=slot))
+            if not self.active:
                 break
-            if self._advance(self.active):
-                completed.append(self.active)
-                landed.add(self.active.slot)
-                self.active = None
+            task = self.active[0]
+            if self._advance(task):
+                completed.append(task)
+                landed.add(task.slot)
+                self.active.remove(task)
         return completed
 
     def _advance(self, task: PrefillTask) -> bool:
@@ -226,6 +390,7 @@ class PrefillPipeline:
         else:
             task.logits, task.state = self._extend_chunk(
                 self.params, task.state, tokens, npl)
+        self.forwards += 1
         task.offset = end
         task.chunks_done += 1
         return end >= P

@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from _hyp import given, st  # hypothesis or skip-shim
 from repro.configs.registry import ARCHS
 from repro.models.model_zoo import build_model
 from repro.serve import (DECODING, PENDING, PREFILLING, Request, ServeConfig,
@@ -31,6 +32,30 @@ def _prompt(n, seed=0):
 def _solo(model, params, prompt, n):
     return list(np.asarray(
         generate(model, params, {"tokens": jnp.asarray(prompt[None])}, n)[0]))
+
+
+_SOLO_CACHE: dict = {}     # keyed (len, seed, max_new); lm fixture only
+
+
+def _solo_cached(model, params, n, seed, max_new):
+    key = (n, seed, max_new)
+    if key not in _SOLO_CACHE:
+        _SOLO_CACHE[key] = _solo(model, params, _prompt(n, seed=seed),
+                                 max_new)
+    return _SOLO_CACHE[key]
+
+
+def _drive(eng, reqs, arrivals, max_steps=200):
+    """Step the engine, admitting each request at its arrival step, until
+    every request finishes."""
+    for step in range(max_steps):
+        for r, a in zip(reqs, arrivals):
+            if a == step:
+                assert eng.try_add(r)
+        eng.step()
+        if all(r.done for r in reqs):
+            return
+    raise AssertionError(f"requests not drained in {max_steps} steps")
 
 
 # ------------------------------------------------------------- edge cases
@@ -319,12 +344,11 @@ def test_chunked_admission_keeps_per_request_precision():
     solo = generate(model, pp, {"tokens": jnp.asarray(lo.prompt[None])}, 3,
                     n_planes=2)
     assert lo.out == list(np.asarray(solo[0]))
-    # precision is a TRACED argument to the jitted chunk forwards: two
-    # admissions at different plane budgets share one compile per chunk
-    # length (10-token prompts at chunk 4 -> one 4-token prefill trace and
-    # 4-/2-token extend traces), never one per precision
-    assert eng.pipeline._prefill_chunk._cache_size() == 1
-    assert eng.pipeline._extend_chunk._cache_size() == 2
+    # precision is a TRACED argument to the jitted batched chunk forward,
+    # tokens are always padded to the fixed (lanes, chunk) shape and the
+    # ragged tails ride in a traced lengths vector: every admission at every
+    # precision and every tail length shares ONE compile, total
+    assert eng.pipeline._extend_lanes._cache_size() == 1
 
 
 def test_jitted_prefill_chunks_match_eager(lm):
@@ -342,3 +366,158 @@ def test_jitted_prefill_chunks_match_eager(lm):
             eng.step()
         outs[jit] = r.out
     assert outs[True] == outs[False]
+
+
+# ------------------------------------------------------- batched admission
+
+def test_batched_admission_advances_two_requests_in_one_forward(lm):
+    """The lifted batch-1 restriction, end to end: with chunks_per_step=2,
+    two queued prompts PREFILL simultaneously — co-batched lanes, ONE model
+    forward per tick for both — and still come out token-exact."""
+    _, model, params = lm
+    eng = ServeEngine(model, params, n_slots=2, max_len=64,
+                      serve_config=ServeConfig(prefill_chunk=4,
+                                               chunks_per_step=2))
+    assert eng.pipeline.batched and eng.pipeline.lanes == 2
+    a = Request(uid=1, prompt=_prompt(12, seed=70), max_new=2)
+    b = Request(uid=2, prompt=_prompt(10, seed=71), max_new=2)
+    assert eng.try_add(a) and eng.try_add(b)
+    f0 = eng.pipeline.forwards
+    eng.step()
+    # both in flight at once (the old pipeline held b PENDING until a
+    # landed), and the tick spent exactly one forward on the pair
+    assert a.phase == PREFILLING and b.phase == PREFILLING
+    assert eng.pipeline.forwards == f0 + 1
+    assert eng.slot_phases() == [PREFILLING, PREFILLING]
+    while not (a.done and b.done):
+        eng.step()
+    assert a.out == _solo(model, params, a.prompt, 2)
+    assert b.out == _solo(model, params, b.prompt, 2)
+
+
+@pytest.mark.parametrize("lens,chunk,cps,arrivals", [
+    ((9, 5, 13), 4, 3, (0, 0, 2)),     # ragged mix, one late arrival
+    ((4, 4), 8, 2, (0, 1)),            # single-chunk prompts, staggered
+    ((12, 3, 7, 5), 5, 4, (0, 0, 0, 0)),   # 4-wide burst, ragged tails
+    ((6, 11), 3, 2, (0, 3)),           # second joins mid-prefill of first
+    ((13, 13, 13), 4, 2, (0, 0, 0)),   # 3 requests through 2 lanes
+])
+def test_batched_ragged_admissions_match_solo(lm, lens, chunk, cps, arrivals):
+    """Deterministic pin of the ragged-batch equivalence property: stacked
+    prompts at ragged lengths/offsets, co-batched through the lane pool at
+    staggered arrival steps, each token-exact vs a solo ``generate``."""
+    _, model, params = lm
+    eng = ServeEngine(model, params, n_slots=len(lens), max_len=32,
+                      serve_config=ServeConfig(prefill_chunk=chunk,
+                                               chunks_per_step=cps))
+    reqs = [Request(uid=i, prompt=_prompt(n, seed=80 + i), max_new=3)
+            for i, n in enumerate(lens)]
+    _drive(eng, reqs, arrivals)
+    for i, (r, n) in enumerate(zip(reqs, lens)):
+        assert r.out == _solo_cached(model, params, n, 80 + i, 3), r.uid
+
+
+@given(data=st.data())
+def test_hyp_batched_chunked_admission_token_exact(lm, data):
+    """Property: batched chunked admission is token-exact vs solo
+    ``generate`` across ragged prompt lengths, chunk sizes,
+    chunks_per_step in 1..4, and staggered arrival steps.  Example count
+    and derandomization come from the loaded profile (tests/_hyp.py) so
+    HYPOTHESIS_PROFILE=dev really deepens the search."""
+    _, model, params = lm
+    n_req = data.draw(st.integers(1, 4), label="n_req")
+    chunk = data.draw(st.integers(1, 8), label="chunk")
+    cps = data.draw(st.integers(1, 4), label="chunks_per_step")
+    lens = [data.draw(st.integers(1, 13), label=f"len{i}")
+            for i in range(n_req)]
+    arrivals = sorted(data.draw(st.integers(0, 5), label=f"arrive{i}")
+                      for i in range(n_req))
+    eng = ServeEngine(model, params, n_slots=n_req, max_len=32,
+                      serve_config=ServeConfig(prefill_chunk=chunk,
+                                               chunks_per_step=cps))
+    reqs = [Request(uid=i, prompt=_prompt(n, seed=90 + i), max_new=3)
+            for i, n in enumerate(lens)]
+    _drive(eng, reqs, arrivals)
+    for i, (r, n) in enumerate(zip(reqs, lens)):
+        assert r.out == _solo_cached(model, params, n, 90 + i, 3), \
+            (r.uid, lens, chunk, cps, arrivals)
+
+
+def test_cancel_cobatched_prefill_frees_lane_and_keeps_survivors_exact(lm):
+    """Cancelling ONE co-batched PREFILLING request mid-batch: the freed
+    lane (and pool slot) is claimable the very next tick, and the surviving
+    requests' outputs are bit-identical to an unbatched (chunks_per_step=1)
+    run of the same prompts."""
+    _, model, params = lm
+    eng = ServeEngine(model, params, n_slots=3, max_len=64,
+                      serve_config=ServeConfig(prefill_chunk=4,
+                                               chunks_per_step=3))
+    a = Request(uid=1, prompt=_prompt(12, seed=100), max_new=3)
+    b = Request(uid=2, prompt=_prompt(12, seed=101), max_new=3)
+    c = Request(uid=3, prompt=_prompt(12, seed=102), max_new=3)
+    assert eng.try_add(a) and eng.try_add(b) and eng.try_add(c)
+    eng.step()
+    assert [r.phase for r in (a, b, c)] == [PREFILLING] * 3   # co-batched
+    victim_lane = next(t.lane for t in eng.pipeline.active if t.req is b)
+    assert eng.cancel(2)
+    assert b.done and b.phase == "cancelled"
+    assert {t.req.uid for t in eng.pipeline.active} == {1, 3}
+    # freed lane is reusable next tick by a fresh admission
+    d = Request(uid=4, prompt=_prompt(9, seed=103), max_new=3)
+    assert eng.try_add(d)
+    eng.step()
+    assert d.phase == PREFILLING
+    assert next(t.lane for t in eng.pipeline.active
+                if t.req is d) == victim_lane
+    while not (a.done and c.done and d.done):
+        eng.step()
+    # bit-identical to an engine that admits one request at a time
+    for r in (a, c, d):
+        ref = ServeEngine(model, params, n_slots=1, max_len=64,
+                          serve_config=ServeConfig(prefill_chunk=4,
+                                                   chunks_per_step=1))
+        rr = Request(uid=9, prompt=r.prompt, max_new=3)
+        assert ref.try_add(rr)
+        while not rr.done:
+            ref.step()
+        assert r.out == rr.out, r.uid
+        assert r.out == _solo(model, params, r.prompt, 3), r.uid
+
+
+def test_prefill_chunk_wider_than_ring_is_clamped(lm):
+    """Regression: batched chunks are padded to the FULL chunk width, so a
+    prefill_chunk wider than max_len would alias ring slots (pad phantoms
+    overwriting real keys).  The pipeline must clamp the chunk to the ring
+    capacity and stay token-exact."""
+    _, model, params = lm
+    eng = ServeEngine(model, params, n_slots=1, max_len=12,
+                      serve_config=ServeConfig(prefill_chunk=40,
+                                               chunks_per_step=2))
+    assert eng.pipeline.chunk == 12
+    p = _prompt(7, seed=130)
+    r = Request(uid=1, prompt=p, max_new=4)
+    assert eng.try_add(r)
+    while not r.done:
+        eng.step()
+    assert r.out == _solo(model, params, p, 4)
+
+
+def test_batched_more_requests_than_lanes_queue_fifo(lm):
+    """5 requests through 2 lanes and 3 slots: lane reuse after completion
+    keeps FIFO admission order and exactness."""
+    _, model, params = lm
+    eng = ServeEngine(model, params, n_slots=3, max_len=32,
+                      serve_config=ServeConfig(prefill_chunk=4,
+                                               chunks_per_step=2))
+    reqs = [Request(uid=i, prompt=_prompt(5 + i, seed=110 + i), max_new=2)
+            for i in range(5)]
+    for r in reqs:
+        assert eng.try_add(r)
+    done = []
+    for _ in range(40):
+        done += eng.step()
+        if len(done) == 5:
+            break
+    assert [r.uid for r in done] == [0, 1, 2, 3, 4]
+    for i, r in enumerate(reqs):
+        assert r.out == _solo(model, params, r.prompt, 2), r.uid
