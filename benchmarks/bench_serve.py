@@ -29,6 +29,18 @@ device-gets the sampled tokens, so ``perf_counter`` around it is honest):
   on shared CI runners (the per-step cost bound is already gated by
   ``decode_stall_ms < prefill_full_ms`` above).
 
+* OVERLOAD (``"overload"`` key): the SLO control loop under a 4x burst.  A
+  calibrated DSLOT model serves ``4 * n_slots`` requests enqueued at once,
+  tiers cycling reserved/standard/degradable, with ``ServeConfig.slo`` set.
+  Reports the accuracy-vs-latency Pareto sweep per QoS tier — mean planes
+  actually executed (the accuracy/energy side) against p95 TTFT in ENGINE
+  STEPS (the deterministic latency domain) — plus the controller account
+  (shed/restore events, minimum levels).  Gated (steps domain, so CI-safe):
+  p95 TTFT stays within the analytic drain bound, the degradable tier's
+  mean planes degrades below full precision (shedding did real work),
+  reserved slots NEVER decode below their plane floor, and every tier's
+  level is restored to its ceiling after the queue drains.
+
 Emits ``BENCH_serve.json``.  CPU numbers from the tiny reduced config are a
 scheduling proxy, not TPU performance; the *ratios* (stall vs full prefill,
 batched vs sequential burst) are the contract.
@@ -52,7 +64,8 @@ import jax.numpy as jnp
 
 from repro.configs.registry import ARCHS
 from repro.models.model_zoo import build_model
-from repro.serve import Request, ServeConfig, ServeEngine
+from repro.serve import (DEGRADABLE, RESERVED, STANDARD, Request,
+                         ServeConfig, ServeEngine, SloConfig)
 
 
 def _mk_prompt(rng, n, vocab):
@@ -81,8 +94,8 @@ def run(model, params, cfg, prompt_len: int, chunk: int, n_slots: int,
     prefill_full_ms = (time.perf_counter() - t0) / reps * 1e3
 
     # ---- engine with live decoding slots
-    eng = ServeEngine(model, params, n_slots=n_slots, max_len=max_len,
-                      serve_config=ServeConfig(prefill_chunk=chunk))
+    eng = ServeEngine(model, params, ServeConfig(
+        n_slots=n_slots, max_len=max_len, prefill_chunk=chunk))
     live = [Request(uid=100 + i,
                     prompt=_mk_prompt(rng, chunk, cfg.vocab_size),
                     max_new=max_len - chunk - 1)
@@ -144,9 +157,9 @@ def _drain_burst(model, params, prompts, *, chunk, lanes, n_slots, max_len,
                  max_new) -> dict:
     """Enqueue every prompt at once, step until all finish; return TTFT
     percentiles and the total decode-stall of the drain."""
-    eng = ServeEngine(model, params, n_slots=n_slots, max_len=max_len,
-                      serve_config=ServeConfig(prefill_chunk=chunk,
-                                               chunks_per_step=lanes))
+    eng = ServeEngine(model, params, ServeConfig(
+        n_slots=n_slots, max_len=max_len, prefill_chunk=chunk,
+        chunks_per_step=lanes))
     # warmup: trace the chunk forward + pooled decode shapes off the clock
     warm = Request(uid=0, prompt=prompts[0], max_new=max_new + 8)
     eng.try_add(warm)
@@ -219,6 +232,107 @@ def run_burst(model, params, cfg, prompt_len: int, chunk: int, n_slots: int,
     }
 
 
+def run_overload(prompt_len: int, chunk: int, n_slots: int, max_new: int,
+                 lanes: int, smoke: bool) -> dict:
+    """SLO control loop under a 4x overload burst on a calibrated DSLOT
+    model: the accuracy-vs-latency Pareto sweep per QoS tier.
+
+    All gates are in the deterministic ENGINE-STEPS domain (wall-clock
+    p95s on shared CI runners are noise; the step schedule is exact).
+    """
+    import dataclasses
+
+    from repro.configs.base import DslotConfig
+
+    cfg = dataclasses.replace(
+        ARCHS["olmo-1b"].reduced(), act="relu", glu=False,
+        dslot=DslotConfig(enabled=True, block_m=16, block_n=32, block_k=16,
+                          act_scale=0.05))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(2))
+    n_bits = cfg.dslot.n_bits
+    rng = np.random.default_rng(2)
+    max_len = prompt_len + max_new + 8
+    n_burst = 4 * n_slots
+    slo = SloConfig(queue_high_water=n_slots, shed_patience=2,
+                    restore_patience=2, target_ttft_steps=4 * n_slots)
+    eng = ServeEngine(model, params, ServeConfig(
+        n_slots=n_slots, max_len=max_len, prefill_chunk=chunk,
+        chunks_per_step=lanes, slo=slo))
+    cycle = [RESERVED, STANDARD, DEGRADABLE, DEGRADABLE]
+    reqs = [Request(uid=i + 1,
+                    prompt=_mk_prompt(rng, prompt_len, cfg.vocab_size),
+                    max_new=max_new, tier=cycle[i % len(cycle)])
+            for i in range(n_burst)]
+    for r in reqs:
+        if not eng.try_add(r):
+            raise RuntimeError(f"overload enqueue rejected uid {r.uid}")
+    reserved_floor_held = True
+    steps = 0
+    while not all(r.done for r in reqs):
+        eng.step()
+        steps += 1
+        if eng.last_budget is not None:
+            for slot, req in enumerate(eng.slot_req):
+                if req is not None and req.tier == RESERVED \
+                        and eng.last_budget[slot] < eng.slo.floor(RESERVED):
+                    reserved_floor_held = False
+    # drain: slack steps must restore every tier's level to its ceiling
+    # (the stale TTFT window expires after ttft_idle_expiry idle steps,
+    # then one tier-restore lands every restore_patience steps)
+    for _ in range(slo.ttft_idle_expiry + 3 * n_bits * slo.restore_patience):
+        eng.step()
+    restored = eng.slo.levels == {n: t.ceiling
+                                  for n, t in eng.slo.tiers.items()}
+    # analytic drain bound on TTFT (steps domain, deterministic): every
+    # request's first token waits at worst for the whole burst's admission
+    # work (n_burst * chunks, one batched tick per step) plus the decode
+    # occupancy of the slot waves ahead of it, plus slack for the tick the
+    # merge lands on
+    chunks_each = -(-prompt_len // chunk)
+    ttft_bound = (n_burst * chunks_each
+                  + (n_burst // n_slots + 1) * max_new + 8)
+    pareto = {}
+    for tier in (RESERVED, STANDARD, DEGRADABLE):
+        rs = [r for r in reqs if r.tier == tier]
+        ttfts = [r.ttft_steps for r in rs]
+        pareto[tier] = {
+            "n_requests": len(rs),
+            "mean_planes_used": round(float(np.mean(
+                [r.result.planes_used_mean for r in rs])), 3),
+            "ttft_p50_steps": float(np.percentile(ttfts, 50)),
+            "ttft_p95_steps": float(np.percentile(ttfts, 95)),
+            "floor": eng.slo.floor(tier),
+            "min_level": eng.slo.min_levels[tier],
+        }
+    p95_all = float(np.percentile([r.ttft_steps for r in reqs], 95))
+    gates = {
+        "reserved_floor_held": reserved_floor_held,
+        "shed_occurred": eng.slo.shed_events > 0,
+        "degraded_gracefully":
+            pareto[DEGRADABLE]["mean_planes_used"] < float(n_bits),
+        "ttft_p95_within_bound": p95_all <= ttft_bound,
+        "budgets_restored_after_drain": restored,
+    }
+    return {
+        "config": {"arch": "olmo-1b.reduced+dslot", "n_burst": n_burst,
+                   "n_slots": n_slots, "prompt_len": prompt_len,
+                   "prefill_chunk": chunk, "lanes": lanes,
+                   "max_new": max_new, "n_bits": n_bits, "smoke": smoke,
+                   "slo": {"queue_high_water": slo.queue_high_water,
+                           "shed_patience": slo.shed_patience,
+                           "restore_patience": slo.restore_patience,
+                           "target_ttft_steps": slo.target_ttft_steps}},
+        "drain_steps": steps,
+        "ttft_p95_steps": p95_all,
+        "ttft_bound_steps": ttft_bound,
+        "pareto": pareto,
+        "controller": eng.slo.summary(),
+        "gates": gates,
+        "ok": all(gates.values()),
+    }
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--smoke", action="store_true",
@@ -248,6 +362,8 @@ def main():
     out["burst"] = run_burst(model, params, cfg, prompt_len, chunk,
                              args.slots, args.max_new, n_burst,
                              args.burst_lanes, args.smoke)
+    out["overload"] = run_overload(3 * chunk, chunk, args.slots,
+                                   args.max_new, 2, args.smoke)
     with open(args.json, "w") as f:
         json.dump(out, f, indent=2)
     print(f"full-prompt prefill     {out['prefill_full_ms']:9.2f} ms")
@@ -275,10 +391,26 @@ def main():
           f"{b['sequential']['ttft_steps_worst']} steps "
           f"({'OK' if b['batched_stall_leq_sequential'] else 'FAIL'}: "
           f"batched <= sequential)")
+    o = out["overload"]
+    print(f"overload 4x burst ({o['config']['n_burst']} reqs, "
+          f"{o['drain_steps']} steps to drain; ttft p95 "
+          f"{o['ttft_p95_steps']:.0f} <= bound {o['ttft_bound_steps']}):")
+    for tier, p in o["pareto"].items():
+        print(f"  {tier:10s}  planes-used {p['mean_planes_used']:5.2f} "
+              f"(floor {p['floor']}, min level {p['min_level']})  "
+              f"ttft p95 {p['ttft_p95_steps']:5.0f} steps  "
+              f"[{p['n_requests']} reqs]")
+    c = o["controller"]
+    print(f"  controller: {c['shed_events']} sheds / "
+          f"{c['restore_events']} restores; levels {c['levels']}")
+    for gate, okv in o["gates"].items():
+        print(f"  gate {gate}: {'OK' if okv else 'FAIL'}")
     print(f"wrote {args.json}")
     if not out["stall_below_full_prefill"]:
         raise SystemExit(1)
     if not b["batched_stall_leq_sequential"]:
+        raise SystemExit(1)
+    if not o["ok"]:
         raise SystemExit(1)
 
 

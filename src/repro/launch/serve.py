@@ -2,10 +2,12 @@
 execution (the paper's engine as a serving-time switch).
 
     python -m repro.launch.serve --arch seamless-m4t-medium --reduced \
-        --batch 4 --max-new 16 [--dslot --planes 6]
+        --batch 4 --max-new 16 [--dslot --n-planes 6]
 
 ``--dslot`` turns on digit-plane execution (with early negative termination)
-for every ReLU MLP; ``--planes`` is the runtime precision knob.
+for every ReLU MLP; ``--n-planes`` is the runtime precision knob (named like
+the ``generate(..., n_planes=...)`` / ``Request.n_planes`` argument it sets;
+``--planes`` is kept as a hidden alias).
 """
 
 import argparse
@@ -21,7 +23,8 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--dslot", action="store_true")
-    ap.add_argument("--planes", type=int, default=8)
+    ap.add_argument("--n-planes", "--planes", type=int, default=8,
+                    dest="n_planes")
     args = ap.parse_args()
 
     import jax
@@ -38,7 +41,7 @@ def main():
         cfg = cfg.reduced()
     if args.dslot:
         cfg = dataclasses.replace(cfg, dslot=DslotConfig(
-            enabled=True, n_planes=args.planes, block_m=32, block_n=32))
+            enabled=True, n_planes=args.n_planes, block_m=32, block_n=32))
         if cfg.act != "relu" or cfg.glu:
             print(f"note: {cfg.name} has {cfg.act}/glu MLPs — DSLOT early "
                   "termination applies only to ReLU MLPs (DESIGN.md §6); "
@@ -57,7 +60,7 @@ def main():
             key, (args.batch, 8, cfg.d_model)) * 0.02
 
     t0 = time.time()
-    toks = generate(model, params, batch, args.max_new)
+    toks = generate(model, params, batch, args.max_new).tokens
     toks.block_until_ready()
     dt = time.time() - t0
     with stats.collect() as sink:
@@ -71,7 +74,7 @@ def main():
             sink["mlp_dslot_skipped_frac"])]
         print(f"DSLOT: {len(vals)} digit-serial MLP calls, mean "
               f"{sum(vals)/len(vals):.1%} MXU passes skipped "
-              f"(D={args.planes} planes)")
+              f"(D={args.n_planes} planes)")
 
 
 if __name__ == "__main__":

@@ -2,7 +2,7 @@
 
 Model code (MLP blocks, CNN layers) is called through jitted entry points
 whose signatures don't carry a precision argument.  Instead, the caller opens
-``precision_scope(value)`` around the traced call and layers ask
+``precision_scope(n_planes)`` around the traced call and layers ask
 ``current_precision(name, default)`` at trace time — the value (a python int,
 a ``{layer_name: planes}`` dict, or a traced jax array such as a per-slot
 budget vector) flows into the trace like any other closed-over input.
@@ -21,13 +21,15 @@ _ACTIVE: list[Any] = []
 
 
 @contextlib.contextmanager
-def precision_scope(value: Any) -> Iterator[None]:
-    """Make ``value`` the active runtime precision for DSLOT layers.
+def precision_scope(n_planes: Any) -> Iterator[None]:
+    """Make ``n_planes`` the active runtime precision for DSLOT layers.
 
-    ``value``: int | jax i32 array (scalar or per-row) | dict mapping layer
-    names to either.  ``None`` entries fall through to the layer default.
+    ``n_planes``: int | jax i32 array (scalar or per-row) | dict mapping
+    layer names to either.  ``None`` entries fall through to the layer
+    default.  (The argument is named ``n_planes`` everywhere precision
+    crosses an API boundary — ``generate``, ``Request``, kernels.)
     """
-    _ACTIVE.append(value)
+    _ACTIVE.append(n_planes)
     try:
         yield
     finally:

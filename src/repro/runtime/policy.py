@@ -31,10 +31,17 @@ from typing import Any, Protocol
 
 @dataclasses.dataclass
 class PolicyFeedback:
-    """One execution's observed statistics, fed back to the policy."""
+    """One execution's observed statistics, fed back to the policy.
+
+    The same record feeds the serving layer's SLO controller
+    (``repro.serve.slo.SloController.observe``), which tracks per-tier
+    planes-used — ``tier`` carries the request's QoS tier there and is
+    ``None`` for policy-only (non-engine) callers.
+    """
     n_planes: int                   # precision the request ran at
     planes_used_mean: float         # effective planes per output row
     skipped_frac: float             # fraction of plane budget skipped
+    tier: str | None = None         # QoS tier (serving engine fills this)
 
 
 class PrecisionPolicy(Protocol):

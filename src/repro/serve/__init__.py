@@ -1,14 +1,32 @@
-"""Serving layer: slot-pool engine + chunked-prefill admission pipeline.
+"""Serving layer: slot-pool engine + chunked-prefill admission pipeline +
+SLO-driven precision elasticity.
 
-See ``docs/serving.md`` for the slot lifecycle and the admission/decode
-overlap design.
+Public surface (pinned by ``tests/test_public_api.py``):
+
+* ``ServeEngine(model, params, cfg: ServeConfig)`` / ``generate`` — the two
+  serving paths, both yielding :class:`GenerateResult`.
+* ``ServeConfig`` — every engine knob beyond ``(model, params)``.
+* ``Request`` — one in-flight generation (QoS ``tier``, streaming
+  ``on_token`` / ``token_steps``, terminal ``result``).
+* ``SloConfig`` / ``SloController`` / ``TierSpec`` + tier names — the SLO
+  plane-shedding control loop (``repro.serve.slo``).
+
+See ``docs/serving.md`` for the slot lifecycle, the admission/decode
+overlap design, and the SLO/QoS control loop.
 """
 
 from repro.serve.config import ServeConfig
 from repro.serve.engine import Request, ServeEngine, generate
 from repro.serve.prefill import (CANCELLED, DECODING, DONE, PENDING,
                                  PREFILLING, PrefillPipeline, PrefillTask)
+from repro.serve.result import GenerateResult
+from repro.serve.slo import (DEGRADABLE, RESERVED, STANDARD, TIERS,
+                             SloConfig, SloController, SloSignals, TierSpec,
+                             default_tiers)
 
 __all__ = ["ServeConfig", "Request", "ServeEngine", "generate",
+           "GenerateResult",
            "PrefillPipeline", "PrefillTask", "PENDING", "PREFILLING",
-           "DECODING", "DONE", "CANCELLED"]
+           "DECODING", "DONE", "CANCELLED",
+           "SloConfig", "SloController", "SloSignals", "TierSpec",
+           "default_tiers", "RESERVED", "STANDARD", "DEGRADABLE", "TIERS"]

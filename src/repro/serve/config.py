@@ -1,20 +1,34 @@
 """Serving-layer configuration (engine-level knobs, not model config).
 
-``ServeConfig`` controls the admission pipeline: how much prefill work the
-engine is allowed to interleave with each pooled decode step, and how deep
-the pending-request queue may grow.  Model-level execution knobs (DSLOT
-precision, block geometry) stay in ``repro.configs.base.DslotConfig``.
+``ServeConfig`` is the ONE construction argument of ``ServeEngine`` beyond
+``(model, params)``: pool geometry, the chunked-prefill admission pipeline,
+sampling, the precision policy, and the optional SLO control loop all live
+here.  Model-level execution knobs (DSLOT precision, block geometry) stay
+in ``repro.configs.base.DslotConfig``.
+
+Before this, ``ServeEngine.__init__`` had accreted ``n_slots`` /
+``max_len`` / ``sample`` / ``precision_policy`` keywords alongside a
+partial ``serve_config`` — the old keywords still work through a
+deprecation shim (see ``ServeEngine``), but new code writes::
+
+    eng = ServeEngine(model, params, ServeConfig(n_slots=4, max_len=512))
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Any, Callable
+
+from repro.serve.slo import SloConfig
 
 
 @dataclass(frozen=True)
 class ServeConfig:
-    """Knobs for the chunked-prefill admission pipeline.
+    """Engine construction knobs.
 
+    n_slots: decode-pool width — concurrently DECODING requests.
+    max_len: KV-ring capacity per slot.  ``try_add`` rejects requests with
+        ``len(prompt) + max_new > max_len`` (the ring would wrap).
     prefill_chunk: prompt tokens processed per unit of admission work.  The
         engine runs at most ``chunks_per_step`` chunks of prefill per decode
         step, so this bounds the decode-stall an admission can inflict on
@@ -44,8 +58,21 @@ class ServeConfig:
         automatic SWA fallback) always runs eagerly: prompt lengths are
         unbounded, so jitting there would compile per distinct length.
         Disable for eager-mode debugging of the admission path.
+    sample: token sampler ``(logits[, key]) -> (B,) i32``; ``None`` means
+        greedy argmax.
+    precision_policy: a ``repro.runtime`` precision policy consulted at
+        enqueue for requests without an explicit ``n_planes`` and fed the
+        planes-executed account on finish.  ``None`` disables.
+    slo: SLO control-loop config (``repro.serve.slo.SloConfig``).  ``None``
+        (default) disables load-driven plane shedding; a config builds one
+        ``SloController`` owned by the engine.
     """
+    n_slots: int = 4
+    max_len: int = 512
     prefill_chunk: int = 32
     chunks_per_step: int = 1
     max_queue: int | None = None
     jit_prefill: bool = True
+    sample: Callable | None = None
+    precision_policy: Any = None
+    slo: SloConfig | None = None

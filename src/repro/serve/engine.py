@@ -1,24 +1,36 @@
 """Serving engine: slot-pool continuous batching with a chunked-prefill
-admission pipeline, DSLOT digit-serial execution mode, and per-request
-accounting.
+admission pipeline, DSLOT digit-serial execution mode, per-request QoS
+tiers under an optional SLO control loop, and streaming token output.
 
-``generate`` is the simple batch API (prefill once, decode N tokens); in
-DSLOT mode it takes a runtime per-request precision and can return
-planes-executed statistics per request.
+``generate`` is the simple batch API (prefill once, decode N tokens); it
+returns a :class:`repro.serve.result.GenerateResult` — tokens plus the
+per-request planes-executed account when the DSLOT path is on.  The old
+``return_stats=True`` tuple form still works through a deprecation shim.
 
 ``ServeEngine`` is the production shape: a fixed pool of B slots; decode
 steps advance every live slot together (one jitted step for the whole
-pool), finished slots free up immediately.  Admission is NON-BLOCKING and
-BATCHED: ``try_add`` only validates and enqueues; the engine's step loop
-interleaves one batched admission forward per decode step — up to
-``ServeConfig.chunks_per_step`` PREFILLING requests each advance by one
-fixed-size ``prefill_chunk`` of prompt, stacked into a single ragged-offset
-forward (executed by ``repro.serve.prefill.PrefillPipeline``) — so
-admitting long prompts never stalls the pool for a full-prompt forward,
-and a burst of admissions drains ``chunks_per_step`` prompts at a time.  A
-request moves through PENDING -> PREFILLING -> DECODING -> DONE
-(``Request.phase``), and its slot joins the pooled decode the very step
-its last prompt chunk lands.
+pool), finished slots free up immediately.  Construction takes exactly
+``(model, params, cfg: ServeConfig)`` — pool geometry, admission knobs,
+sampler, precision policy and SLO config all live on the config (the old
+``n_slots=``/``max_len=``/``sample=``/``precision_policy=``/
+``serve_config=`` keywords are mapped onto a config by a warn-once
+deprecation shim).  Admission is NON-BLOCKING and BATCHED: ``try_add`` only
+validates and enqueues; the engine's step loop interleaves one batched
+admission forward per decode step — up to ``ServeConfig.chunks_per_step``
+PREFILLING requests each advance by one fixed-size ``prefill_chunk`` of
+prompt, stacked into a single ragged-offset forward (executed by
+``repro.serve.prefill.PrefillPipeline``) — so admitting long prompts never
+stalls the pool for a full-prompt forward, and a burst of admissions drains
+``chunks_per_step`` prompts at a time.  A request moves through PENDING ->
+PREFILLING -> DECODING -> DONE (``Request.phase``), and its slot joins the
+pooled decode the very step its last prompt chunk lands.
+
+Streaming: every emitted token is pushed through ``Request.on_token`` (when
+set) the step it is sampled, and ``Request.token_steps`` records the engine
+step of each token — so TTFT and inter-token latency are externally
+observable per token, not just engine-internal counters.
+``ServeEngine.stream(req)`` wraps both as a generator handle that drives
+the engine and yields tokens as they land.
 
 Per-slot position vectors (threaded through the model's per-sequence
 KV-cache ring) make the batch composition fully dynamic without
@@ -27,7 +39,9 @@ disturbs other slots' decode positions, and chunked admission stays
 token-exact versus a solo ``generate`` of the same prompt (in DSLOT mode
 this additionally requires a calibrated ``DslotConfig.act_scale``: the
 per-call-max quantization fallback is not invariant to how a prompt is
-split into chunks — see ``kernels/ops.py`` and ``docs/serving.md``).
+split into chunks — ``try_add`` REJECTS budgeted multi-chunk admissions on
+an uncalibrated model instead of silently drifting; see ``kernels/ops.py``
+and ``docs/serving.md``).
 
 DSLOT serving mode (``cfg.dslot.enabled`` + ReLU MLPs): the engine prepares
 the model's weight-stationary plane tables ONCE at construction
@@ -37,27 +51,46 @@ policy at enqueue time), prefill chunks and the pooled decode step execute
 each request's rows at that request's precision (a runtime argument — no
 retrace across precisions), and the per-request planes-executed account is
 fed back to the policy when the request finishes (the ``AdaptiveBudget``
-loop).
+loop).  With ``ServeConfig.slo`` set, a ``repro.serve.slo.SloController``
+additionally clamps every slot's budget to its QoS tier's current plane
+level each step — shedding planes under burst, restoring them under slack
+— which is the load side of the paper's run-time-tunable precision.
 """
 
 from __future__ import annotations
 
+import dataclasses
+import warnings
 from dataclasses import dataclass, field
-from typing import Callable
+from typing import Callable, Iterator
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.ops import DslotWeights
 from repro.models import stats as stats_channel
 from repro.models.mlp import mlp_uses_dslot
 from repro.models.model_zoo import Model
-from repro.runtime import PolicyFeedback, PrecisionPolicy, precision_scope
+from repro.runtime import PolicyFeedback, precision_scope
 from repro.serve.config import ServeConfig
 from repro.serve.prefill import (CANCELLED, DECODING, DONE, PREFILLING,
                                  PrefillPipeline)
+from repro.serve.result import GenerateResult
+from repro.serve.slo import STANDARD, TIERS, SloController, SloSignals
 
 _ROWKEY = "mlp_up_dslot.row_planes_used"
+
+# one DeprecationWarning per legacy surface per process — enough to nudge a
+# migration without drowning a driving loop in repeats
+_LEGACY_WARNED: set[str] = set()
+
+
+def _warn_once(key: str, msg: str) -> None:
+    if key in _LEGACY_WARNED:
+        return
+    _LEGACY_WARNED.add(key)
+    warnings.warn(msg, DeprecationWarning, stacklevel=3)
 
 
 def greedy_sample(logits: jax.Array, key=None) -> jax.Array:
@@ -86,16 +119,25 @@ def _collapse_rows(sink: dict, batch: int) -> jax.Array | None:
 
 def generate(model: Model, params, batch: dict, max_new_tokens: int,
              *, max_len: int | None = None, sample=greedy_sample,
-             key=None, n_planes=None, return_stats: bool = False):
-    """Prefill + greedy/temperature decode.  Returns (B, max_new_tokens),
-    or ``(tokens, stats)`` with ``return_stats=True``.
+             key=None, n_planes=None, return_stats: bool | None = None
+             ) -> GenerateResult:
+    """Prefill + greedy/temperature decode.  Returns a ``GenerateResult``
+    (``.tokens`` is (B, max_new_tokens); the DSLOT planes-executed account
+    rides along when the digit-serial path is on).
 
     ``n_planes``: runtime DSLOT precision — int or per-request (B,) i32
     vector (ignored unless the model's digit-serial MLP path is enabled).
-    ``stats``: {"planes_used_mean": (B,) effective digit planes per request,
-    "skipped_frac": (B,)} — the per-request energy account, averaged over
-    decode steps (empty when the DSLOT path is off).
+
+    ``return_stats`` is DEPRECATED: ``True`` returns the legacy
+    ``(tokens, stats_dict)`` tuple, ``False`` the bare tokens array — both
+    warn once.  Leave it unset for the ``GenerateResult``.
     """
+    if return_stats is not None:
+        _warn_once(
+            "generate.return_stats",
+            "generate(return_stats=...) is deprecated; generate() now "
+            "returns a GenerateResult — use .tokens / .planes_used_mean / "
+            ".skipped_frac")
     B, S = batch["tokens"].shape
     if model.cfg.frontend and "frontend" in batch:
         S += batch["frontend"].shape[1]
@@ -104,6 +146,10 @@ def generate(model: Model, params, batch: dict, max_new_tokens: int,
         n_planes = jnp.asarray(n_planes, jnp.int32)
         if n_planes.ndim == 0:
             n_planes = jnp.full((B,), n_planes, jnp.int32)
+    # stats collection is trace-time gated (no dead work when off): on by
+    # default exactly when the DSLOT path can produce them
+    want_stats = mlp_uses_dslot(model.cfg) if return_stats is None \
+        else bool(return_stats)
 
     with precision_scope(n_planes):
         logits, state = model.prefill(params, batch, max_len=max_len)
@@ -111,10 +157,9 @@ def generate(model: Model, params, batch: dict, max_new_tokens: int,
 
         def step(carry, _):
             tok, state, key = carry
-            if return_stats:       # stats collection is trace-time gated:
-                with stats_channel.collect() as sink:   # no dead work in
-                    lg, state = model.decode_step(       # the plain path
-                        params, state, tok[:, None])
+            if want_stats:
+                with stats_channel.collect() as sink:
+                    lg, state = model.decode_step(params, state, tok[:, None])
                 rows = _collapse_rows(sink, B)
                 st = {} if rows is None else {"rows": rows}
             else:
@@ -130,20 +175,25 @@ def generate(model: Model, params, batch: dict, max_new_tokens: int,
         (_, _, _), (toks, sts) = jax.lax.scan(
             step, (tok, state, key), None, length=max_new_tokens)
     toks = jnp.moveaxis(toks, 0, 1)                    # (B, max_new)
-    if not return_stats:
-        return toks
-    stats: dict = {}
+    granted = used = skipped = None
     if "rows" in sts:
         used = jnp.mean(sts["rows"], axis=0)           # (B,)
         if n_planes is not None:
+            granted = n_planes
             budget = n_planes.astype(jnp.float32)
         else:
             # no explicit budget: layers ran at their static default
-            budget = float(model.cfg.dslot.n_planes
-                           or model.cfg.dslot.n_bits)
-        stats = {"planes_used_mean": used,
-                 "skipped_frac": 1.0 - used / budget}
-    return toks, stats
+            granted = budget = float(model.cfg.dslot.n_planes
+                                     or model.cfg.dslot.n_bits)
+        skipped = 1.0 - used / budget
+    result = GenerateResult(tokens=toks, n_planes=granted,
+                            planes_used_mean=used, skipped_frac=skipped,
+                            steps=max_new_tokens, phase=DONE)
+    if return_stats is True:
+        return toks, result.stats
+    if return_stats is False:
+        return toks
+    return result
 
 
 @dataclass
@@ -153,9 +203,14 @@ class Request:
     max_new: int
     n_planes: int | None = None        # per-request DSLOT precision (None =
                                        # policy-assigned or full n_bits)
+    tier: str = STANDARD               # QoS tier (repro.serve.slo.TIERS)
+    on_token: Callable | None = None   # streaming: called (req, token, step)
+                                       # the step each token is emitted
     out: list = field(default_factory=list)
+    token_steps: list = field(default_factory=list)  # engine step per token
     done: bool = False
     dslot_stats: dict | None = None    # set on finish in DSLOT mode
+    result: GenerateResult | None = None  # set on finish / cancel-in-pool
     phase: str = "new"                 # pending|prefilling|decoding|done|...
     enqueue_step: int | None = None    # engine step count at try_add
     first_token_step: int | None = None  # step that emitted out[0]
@@ -168,37 +223,86 @@ class Request:
         return self.first_token_step - self.enqueue_step
 
 
+def _dslot_calibrated(params) -> bool:
+    """True iff every prepared ``DslotWeights`` in the tree carries a
+    calibrated activation scale (False when none are found)."""
+    found, ok = [False], [True]
+
+    def walk(node):
+        if isinstance(node, DslotWeights):
+            found[0] = True
+            if node.x_scale is None:
+                ok[0] = False
+        elif isinstance(node, dict):
+            for v in node.values():
+                walk(v)
+        elif isinstance(node, (list, tuple)):
+            for v in node:
+                walk(v)
+
+    walk(params)
+    return found[0] and ok[0]
+
+
 class ServeEngine:
     """Slot-pool continuous batching on a single jitted decode step, with
-    chunked-prefill admission interleaved into the step loop."""
+    chunked-prefill admission interleaved into the step loop and an
+    optional SLO plane-shedding control loop."""
 
-    def __init__(self, model: Model, params, *, n_slots: int,
-                 max_len: int, sample: Callable = greedy_sample,
-                 precision_policy: PrecisionPolicy | None = None,
+    def __init__(self, model: Model, params,
+                 cfg: ServeConfig | None = None, *,
+                 n_slots: int | None = None, max_len: int | None = None,
+                 sample: Callable | None = None,
+                 precision_policy=None,
                  serve_config: ServeConfig | None = None):
+        legacy = {k: v for k, v in (("n_slots", n_slots),
+                                    ("max_len", max_len),
+                                    ("sample", sample),
+                                    ("precision_policy", precision_policy))
+                  if v is not None}
+        if serve_config is not None or legacy:
+            # deprecation shim: fold the accreted keywords onto a ServeConfig
+            if cfg is not None:
+                raise TypeError(
+                    "pass either cfg=ServeConfig(...) or the legacy "
+                    "keywords, not both")
+            _warn_once(
+                "ServeEngine.kwargs",
+                "ServeEngine(model, params, n_slots=..., max_len=..., "
+                "serve_config=...) is deprecated; pass a single "
+                "ServeConfig: ServeEngine(model, params, ServeConfig("
+                "n_slots=..., max_len=..., ...))")
+            cfg = dataclasses.replace(serve_config or ServeConfig(), **legacy)
+        self.cfg = cfg or ServeConfig()
         self.model = model
         self.dslot = mlp_uses_dslot(model.cfg)
         # one-time weight-stationary lowering: every decode step executes
         # against cached digit-plane tables (no per-call re-encode)
         self.params = model.prepare_dslot(params) if self.dslot else params
-        self.n_slots = n_slots
-        self.max_len = max_len
-        self.sample = sample
-        self.policy = precision_policy
+        self.n_slots = self.cfg.n_slots
+        self.max_len = self.cfg.max_len
+        self.sample = self.cfg.sample or greedy_sample
+        self.policy = self.cfg.precision_policy
         self.n_bits = model.cfg.dslot.n_bits
-        self.serve_config = serve_config or ServeConfig()
-        self.state = model.init_decode_state(n_slots, max_len)
-        self.slot_req: list[Request | None] = [None] * n_slots
-        self.next_tok = np.zeros(n_slots, np.int32)
-        self._acc_planes = np.zeros(n_slots, np.float64)
-        self._acc_steps = np.zeros(n_slots, np.int64)
+        self.calibrated = (not self.dslot) or _dslot_calibrated(self.params)
+        self.slo: SloController | None = None if self.cfg.slo is None \
+            else SloController(self.n_bits, self.cfg.slo)
+        self.state = model.init_decode_state(self.n_slots, self.max_len)
+        self.slot_req: list[Request | None] = [None] * self.n_slots
+        self.next_tok = np.zeros(self.n_slots, np.int32)
+        self.last_budget: np.ndarray | None = None  # budgets of last decode
+        self._acc_planes = np.zeros(self.n_slots, np.float64)
+        self._acc_steps = np.zeros(self.n_slots, np.int64)
         self._steps = 0
+        self._ttft_obs: list[int] = []     # TTFTs landed since last signal
+        self._last_rows_mean: float | None = None
         self.pipeline = PrefillPipeline(
-            model=model, params=self.params, max_len=max_len,
-            chunk=self.serve_config.prefill_chunk,
-            chunks_per_step=self.serve_config.chunks_per_step,
-            max_queue=self.serve_config.max_queue,
-            jit_chunks=self.serve_config.jit_prefill)
+            model=model, params=self.params, max_len=self.max_len,
+            chunk=self.cfg.prefill_chunk,
+            chunks_per_step=self.cfg.chunks_per_step,
+            max_queue=self.cfg.max_queue,
+            jit_chunks=self.cfg.jit_prefill,
+            dslot=self.dslot, calibrated=self.calibrated)
 
         def _decode(p, st, t, npl):
             with stats_channel.collect() as sink, precision_scope(npl):
@@ -207,6 +311,11 @@ class ServeEngine:
             return lg, st2, {} if rows is None else {"rows": rows}
 
         self._decode = jax.jit(_decode)
+
+    @property
+    def serve_config(self) -> ServeConfig:
+        """Back-compat alias for the engine's config."""
+        return self.cfg
 
     # ------------------------------------------------------------ requests
 
@@ -220,8 +329,13 @@ class ServeEngine:
 
         Requests that can NEVER run are rejected immediately with
         ``ValueError``: an empty prompt, a non-positive generation budget,
-        or ``len(prompt) + max_new > max_len`` (the KV ring would wrap and
-        silently corrupt the sequence mid-decode).
+        ``len(prompt) + max_new > max_len`` (the KV ring would wrap and
+        silently corrupt the sequence mid-decode), an unknown QoS tier, or
+        — in DSLOT mode — a per-request plane budget whose prompt would be
+        split into multiple chunks on a model with NO calibrated activation
+        scale (per-call-max quantization is not chunk-invariant, so the
+        chunked prefill would silently diverge from a one-shot prefill of
+        the same prompt; pin ``DslotConfig.act_scale``).
 
         Policy-assigned precision (DSLOT mode) is granted here, at enqueue:
         a scalar policy (``Fixed``, ``AdaptiveBudget``) grants this
@@ -241,6 +355,22 @@ class ServeEngine:
                 f"request {req.uid}: prompt ({P}) + max_new ({req.max_new}) "
                 f"= {P + req.max_new} exceeds max_len ({self.max_len}); the "
                 f"KV ring would wrap and corrupt the sequence")
+        known_tiers = self.slo.tiers if self.slo is not None else TIERS
+        if req.tier not in known_tiers:
+            raise ValueError(
+                f"request {req.uid}: unknown QoS tier {req.tier!r} "
+                f"(known: {sorted(known_tiers)})")
+        wants_budget = req.n_planes is not None or (
+            self.dslot and self.policy is not None)
+        if (self.dslot and not self.calibrated and wants_budget
+                and 0 < self.pipeline.chunk < P):
+            raise ValueError(
+                f"request {req.uid}: a per-request DSLOT plane budget with "
+                f"a chunked prompt ({P} tokens > prefill_chunk="
+                f"{self.pipeline.chunk}) requires a calibrated activation "
+                "scale — per-call max quantization is not invariant to how "
+                "the prompt is split into chunks.  Set DslotConfig.act_scale"
+                " (or DslotWeights.with_scale), or use prefill_chunk=0")
         if not self.pipeline.enqueue(req):
             return False        # queue full: the policy is NOT consulted, so
                                 # a later retry gets a fresh grant
@@ -262,19 +392,47 @@ class ServeEngine:
         rings) and are replaced wholesale by the next admission's merge.
 
         Cancellation is terminal: ``req.done`` is set (with
-        ``phase == "cancelled"`` distinguishing it from a natural finish),
-        so ``while not req.done`` driving loops exit.  A cancelled request
+        ``phase == "cancelled"`` distinguishing it from a natural finish)
+        and ``req.result`` carries whatever was produced, so
+        ``while not req.done`` driving loops exit.  A cancelled request
         is never returned from ``step()``.
         """
+        found = next((r for r in list(self.pipeline.queue)
+                      + [t.req for t in self.pipeline.active]
+                      if r.uid == uid), None)
         if self.pipeline.cancel(uid):
+            if found is not None:
+                found.result = self._result_of(found)
             return True
         for i, req in enumerate(self.slot_req):
             if req is not None and req.uid == uid:
                 req.phase = CANCELLED
                 req.done = True
+                req.result = self._result_of(req)
                 self.slot_req[i] = None
                 return True
         return False
+
+    def stream(self, req: Request) -> Iterator[int]:
+        """Generator handle over a request's token stream.
+
+        Admits ``req`` if it is new (raising ``RuntimeError`` on a full
+        queue), then drives ``step()`` and yields each generated token as
+        it lands — the pull-based twin of the ``Request.on_token`` push
+        callback.  Other slots keep decoding underneath; interleave
+        ``stream`` handles freely with direct ``step()`` calls.
+        """
+        if req.phase == "new" and not self.try_add(req):
+            raise RuntimeError(
+                f"request {req.uid}: admission queue full")
+        sent = 0
+        while True:
+            while sent < len(req.out):
+                yield req.out[sent]
+                sent += 1
+            if req.done:
+                return
+            self.step()
 
     @property
     def queue_depth(self) -> int:
@@ -301,8 +459,13 @@ class ServeEngine:
         return None
 
     def _budget_vector(self) -> jax.Array:
-        npl = [self.n_bits if r is None or r.n_planes is None
-               else r.n_planes for r in self.slot_req]
+        npl = []
+        for r in self.slot_req:
+            base = self.n_bits if r is None or r.n_planes is None \
+                else r.n_planes
+            if self.slo is not None and r is not None:
+                base = self.slo.budget_for(r.tier, base)
+            npl.append(int(base))
         return jnp.asarray(npl, jnp.int32)
 
     # ------------------------------------------------------------ stepping
@@ -325,25 +488,44 @@ class ServeEngine:
             self.next_tok[i] = int(jax.device_get(self.sample(task.logits)[0]))
 
     def step(self) -> list[Request]:
-        """One engine step: admission chunk(s), then advance all live slots
-        by one token.  Returns finished requests."""
+        """One engine step: admission chunk(s), SLO control, then advance
+        all live slots by one token.  Returns finished requests."""
         self._steps += 1
+        f0 = self.pipeline.forwards
         self._admission_tick()
+        if self.slo is not None:
+            # load signals: queue AFTER this step's admissions, the TTFTs
+            # that landed since the last update, and last decode's planes
+            self.slo.update(SloSignals(
+                queue_depth=self.queue_depth,
+                ttft_steps=self._ttft_obs,
+                decode_stalled=self.pipeline.forwards > f0,
+                planes_used_mean=self._last_rows_mean))
+            self._ttft_obs = []
         if all(r is None for r in self.slot_req):
             return []
         toks = jnp.asarray(self.next_tok[:, None])
+        budgets = self._budget_vector()
+        self.last_budget = np.asarray(jax.device_get(budgets))
         logits, self.state, aux = self._decode(
-            self.params, self.state, toks, self._budget_vector())
+            self.params, self.state, toks, budgets)
         nxt = np.asarray(jax.device_get(self.sample(logits)))
         rows = np.asarray(jax.device_get(aux["rows"])) \
             if "rows" in aux else None
+        self._last_rows_mean = None if rows is None else float(rows.mean())
         finished = []
         for i, req in enumerate(self.slot_req):
             if req is None:
                 continue
-            req.out.append(int(self.next_tok[i]))
+            tok = int(self.next_tok[i])
+            req.out.append(tok)
+            req.token_steps.append(self._steps)
             if req.first_token_step is None:
                 req.first_token_step = self._steps
+                if req.ttft_steps is not None:
+                    self._ttft_obs.append(req.ttft_steps)
+            if req.on_token is not None:
+                req.on_token(req, tok, self._steps)
             self.next_tok[i] = nxt[i]
             if rows is not None:
                 self._acc_planes[i] += float(rows[i])
@@ -356,19 +538,39 @@ class ServeEngine:
                 self.slot_req[i] = None
         return finished
 
+    def _result_of(self, req: Request, granted=None, used=None,
+                   skipped=None) -> GenerateResult:
+        return GenerateResult(
+            tokens=list(req.out), n_planes=granted,
+            planes_used_mean=used, skipped_frac=skipped,
+            ttft_steps=req.ttft_steps,
+            steps=None if req.enqueue_step is None
+            else self._steps - req.enqueue_step,
+            phase=req.phase, uid=req.uid, tier=req.tier)
+
     def _finish_stats(self, i: int, req: Request) -> None:
-        if not self.dslot or self._acc_steps[i] == 0:
-            return
-        granted = req.n_planes if req.n_planes is not None else self.n_bits
-        used = self._acc_planes[i] / self._acc_steps[i]
-        fb = PolicyFeedback(n_planes=int(granted),
-                            planes_used_mean=float(used),
-                            skipped_frac=1.0 - float(used) / float(granted))
-        req.dslot_stats = {"n_planes": fb.n_planes,
-                           "planes_used_mean": fb.planes_used_mean,
-                           "skipped_frac": fb.skipped_frac}
-        if self.policy is not None:
-            self.policy.observe(fb)
+        granted = used = skipped = None
+        if self.dslot and self._acc_steps[i] > 0:
+            granted = req.n_planes if req.n_planes is not None \
+                else self.n_bits
+            if self.slo is not None:
+                # a tier floor may have raised the effective budget above
+                # the granted one (e.g. reserved pins full precision)
+                granted = max(int(granted), self.slo.floor(req.tier))
+            used = self._acc_planes[i] / self._acc_steps[i]
+            skipped = 1.0 - float(used) / float(granted)
+            fb = PolicyFeedback(n_planes=int(granted),
+                                planes_used_mean=float(used),
+                                skipped_frac=skipped, tier=req.tier)
+            req.dslot_stats = {"n_planes": fb.n_planes,
+                               "planes_used_mean": fb.planes_used_mean,
+                               "skipped_frac": fb.skipped_frac}
+            if self.policy is not None:
+                self.policy.observe(fb)
+            if self.slo is not None:
+                self.slo.observe(fb)
+        req.result = self._result_of(req, granted=granted, used=used,
+                                     skipped=skipped)
 
 
 def _merge_slot(pool_state: dict, one_state: dict, slot: int) -> dict:

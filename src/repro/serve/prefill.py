@@ -159,6 +159,8 @@ class PrefillPipeline:
     chunks_per_step: int = 1
     max_queue: int | None = None
     jit_chunks: bool = True
+    dslot: bool = False          # model runs the digit-serial MLP path
+    calibrated: bool = True      # prepared weights carry an act scale
     queue: deque = field(default_factory=deque)
     active: list = field(default_factory=list)   # in-flight PrefillTasks
     forwards: int = 0                            # model forwards run (a
@@ -260,6 +262,21 @@ class PrefillPipeline:
     def enqueue(self, req: "Request") -> bool:
         if self.max_queue is not None and len(self) >= self.max_queue:
             return False
+        if (self.dslot and not self.calibrated
+                and req.n_planes is not None
+                and 0 < self.chunk < len(req.prompt)):
+            # Chunked prefill quantizes each chunk's activations separately;
+            # without a calibrated scale the per-call max fallback makes the
+            # result depend on WHERE the prompt was split — a budgeted
+            # admission would silently diverge from a one-shot prefill of
+            # the same prompt.  Refuse instead of drifting.
+            raise ValueError(
+                f"request {req.uid}: a per-request DSLOT plane budget with "
+                f"a chunked prompt ({len(req.prompt)} tokens > prefill_"
+                f"chunk={self.chunk}) requires a calibrated activation "
+                "scale — per-call max quantization is not chunk-invariant. "
+                "Set DslotConfig.act_scale (or DslotWeights.with_scale), "
+                "or use prefill_chunk=0")
         req.phase = PENDING
         self.queue.append(req)
         return True

@@ -30,8 +30,8 @@ def _prompt(n, seed=0):
 
 
 def _solo(model, params, prompt, n):
-    return list(np.asarray(
-        generate(model, params, {"tokens": jnp.asarray(prompt[None])}, n)[0]))
+    return list(np.asarray(generate(
+        model, params, {"tokens": jnp.asarray(prompt[None])}, n).tokens[0]))
 
 
 _SOLO_CACHE: dict = {}     # keyed (len, seed, max_new); lm fixture only
@@ -343,7 +343,7 @@ def test_chunked_admission_keeps_per_request_precision():
     pp = model.prepare_dslot(params)
     solo = generate(model, pp, {"tokens": jnp.asarray(lo.prompt[None])}, 3,
                     n_planes=2)
-    assert lo.out == list(np.asarray(solo[0]))
+    assert lo.out == list(np.asarray(solo.tokens[0]))
     # precision is a TRACED argument to the jitted batched chunk forward,
     # tokens are always padded to the fixed (lanes, chunk) shape and the
     # ragged tails ride in a traced lengths vector: every admission at every

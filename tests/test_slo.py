@@ -1,0 +1,262 @@
+"""SLO-aware precision elasticity: controller law, QoS tiers, streaming,
+and the calibration guard.
+
+Controller tests are pure python (nothing traced); engine tests drive a
+reduced calibrated DSLOT model through overload and verify the properties
+the overload benchmark gates on: reserved requests never drop below their
+plane floor, shedding happens under burst, and budgets are restored after
+the queue drains.
+"""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import DslotConfig
+from repro.configs.registry import ARCHS
+from repro.models.model_zoo import build_model
+from repro.serve import (CANCELLED, DEGRADABLE, DONE, RESERVED, STANDARD,
+                         Request, ServeConfig, ServeEngine, SloConfig,
+                         SloController, SloSignals, TierSpec, default_tiers)
+
+N_BITS = 8
+
+
+def _press(depth=10):
+    return SloSignals(queue_depth=depth)
+
+
+def _slack():
+    return SloSignals(queue_depth=0)
+
+
+# ------------------------------------------------------------- controller
+
+def test_default_tiers_shape():
+    tiers = default_tiers(N_BITS)
+    assert tiers[RESERVED].floor == tiers[RESERVED].ceiling == N_BITS
+    assert tiers[DEGRADABLE].floor == 1
+    assert tiers[DEGRADABLE].shed_order < tiers[STANDARD].shed_order \
+        < tiers[RESERVED].shed_order
+
+
+def test_shed_requires_consecutive_pressure():
+    c = SloController(N_BITS, SloConfig(shed_patience=3, queue_high_water=4))
+    c.update(_press())
+    c.update(_press())
+    assert c.shed_events == 0                 # patience not yet reached
+    c.update(SloSignals(queue_depth=2))       # neutral: resets the counter
+    c.update(_press())
+    c.update(_press())
+    assert c.shed_events == 0                 # counter restarted
+    c.update(_press())
+    assert c.shed_events == 1                 # third consecutive -> shed
+    assert c.levels[DEGRADABLE] == N_BITS - 1
+
+
+def test_shed_order_degradable_first_reserved_never():
+    c = SloController(N_BITS, SloConfig(shed_patience=1))
+    for _ in range(100):                      # way past every floor
+        c.update(_press())
+    assert c.levels[DEGRADABLE] == c.tiers[DEGRADABLE].floor == 1
+    assert c.levels[STANDARD] == c.tiers[STANDARD].floor == 2
+    assert c.levels[RESERVED] == N_BITS       # reserved never moved
+    assert c.min_levels[RESERVED] == N_BITS
+    # degradable must bottom out before standard loses a single plane:
+    c2 = SloController(N_BITS, SloConfig(shed_patience=1))
+    for _ in range(N_BITS - 1):               # exactly drain degradable
+        c2.update(_press())
+    assert c2.levels[DEGRADABLE] == 1 and c2.levels[STANDARD] == N_BITS
+
+
+def test_restore_reverse_order_after_slack():
+    c = SloController(N_BITS, SloConfig(shed_patience=1, restore_patience=2))
+    for _ in range(N_BITS):                   # degradable floored, standard
+        c.update(_press())                    # down one
+    assert c.levels[STANDARD] == N_BITS - 1
+    c.update(_slack())
+    assert c.restore_events == 0              # patience not reached
+    c.update(_slack())
+    assert c.restore_events == 1
+    assert c.levels[STANDARD] == N_BITS       # most important tier first
+    assert c.levels[DEGRADABLE] == 1
+    for _ in range(2 * (N_BITS - 1)):
+        c.update(_slack())
+    assert c.levels == {n: t.ceiling for n, t in c.tiers.items()}
+
+
+def test_budget_for_applies_floor_level_and_ceiling():
+    c = SloController(N_BITS, SloConfig(shed_patience=1))
+    # reserved floor RAISES a lower explicit budget
+    assert c.budget_for(RESERVED, 2) == N_BITS
+    assert c.budget_for(STANDARD, 5) == 5     # fully restored: granted wins
+    for _ in range(N_BITS + 2):
+        c.update(_press())
+    lvl = c.levels[STANDARD]
+    assert c.budget_for(STANDARD, N_BITS) == lvl   # level caps the grant
+    assert c.budget_for(STANDARD, 1) == c.tiers[STANDARD].floor
+
+
+def test_ttft_pressure_and_p95_window():
+    c = SloController(N_BITS, SloConfig(target_ttft_steps=4, ttft_window=4,
+                                        shed_patience=1, queue_high_water=99))
+    c.update(SloSignals(queue_depth=0, ttft_steps=[10, 10, 10, 10]))
+    assert c.ttft_p95() == 10.0
+    assert c.shed_events == 1                 # TTFT alone trips pressure
+    c.update(SloSignals(queue_depth=0, ttft_steps=[1, 1, 1, 1]))
+    assert c.ttft_p95() == 1.0                # old samples rolled out
+
+
+def test_stale_ttft_window_expires_when_idle():
+    """A drained burst's TTFT samples must not hold the controller in
+    pressure forever: after ``ttft_idle_expiry`` idle updates the window
+    clears and restores can proceed."""
+    c = SloController(N_BITS, SloConfig(
+        target_ttft_steps=4, shed_patience=1, restore_patience=1,
+        queue_high_water=99, ttft_idle_expiry=3))
+    c.update(SloSignals(queue_depth=0, ttft_steps=[50]))   # hot -> shed
+    assert c.shed_events == 1
+    for _ in range(2):
+        c.update(_slack())
+    assert c.restore_events == 0          # window still hot, not yet idle
+    c.update(_slack())                    # third idle update: window expires
+    c.update(_slack())                    # p95 is None -> slack -> restore
+    assert c.ttft_p95() is None
+    assert c.restore_events >= 1
+
+
+def test_custom_tiers_clamped_to_n_bits():
+    cfg = SloConfig(tiers={"gold": TierSpec(floor=99, ceiling=99,
+                                            shed_order=0)})
+    c = SloController(N_BITS, cfg)
+    assert c.tiers["gold"].floor == N_BITS
+    assert c.budget_for("gold", 3) == N_BITS
+
+
+# ------------------------------------------------------------- engine
+
+def _dslot_cfg(act_scale=0.05):
+    return dataclasses.replace(
+        ARCHS["olmo-1b"].reduced(), act="relu", glu=False,
+        dslot=DslotConfig(enabled=True, block_m=16, block_n=32, block_k=16,
+                          act_scale=act_scale))
+
+
+@pytest.fixture(scope="module")
+def dslot_lm():
+    cfg = _dslot_cfg()
+    model = build_model(cfg)
+    return model, model.init(jax.random.PRNGKey(11))
+
+
+def _prompt(n, seed=0):
+    return np.random.RandomState(seed).randint(
+        0, 256, size=n).astype(np.int32)
+
+
+def test_engine_overload_sheds_holds_reserved_floor_and_restores(dslot_lm):
+    model, params = dslot_lm
+    slo = SloConfig(queue_high_water=1, shed_patience=1, restore_patience=2,
+                    target_ttft_steps=100)
+    eng = ServeEngine(model, params, ServeConfig(
+        n_slots=2, max_len=64, prefill_chunk=4, slo=slo))
+    n_bits = model.cfg.dslot.n_bits
+    reqs = [Request(uid=i, prompt=_prompt(6, seed=i), max_new=4,
+                    tier=(RESERVED if i == 0 else DEGRADABLE))
+            for i in range(6)]
+    for r in reqs:
+        assert eng.try_add(r)
+    done = []
+    while len(done) < len(reqs):
+        done += eng.step()
+        if eng.last_budget is not None:
+            for slot, req in enumerate(eng.slot_req):
+                if req is not None and req.tier == RESERVED:
+                    assert eng.last_budget[slot] == n_bits
+    assert eng.slo.shed_events > 0            # burst forced shedding
+    assert eng.slo.min_levels[DEGRADABLE] < n_bits
+    assert eng.slo.min_levels[RESERVED] == n_bits
+    shed_reqs = [r for r in reqs if r.tier == DEGRADABLE
+                 and r.result.planes_used_mean is not None]
+    res_req = reqs[0]
+    assert res_req.result.n_planes == n_bits
+    # degradable ran cheaper than reserved on average
+    assert (np.mean([r.result.planes_used_mean for r in shed_reqs])
+            <= res_req.result.planes_used_mean + 1e-6)
+    # queue drained: slack steps restore every tier to its ceiling
+    for _ in range(4 * n_bits):
+        eng.step()
+    assert eng.slo.levels == {n: t.ceiling for n, t in eng.slo.tiers.items()}
+    assert eng.slo.restore_events > 0
+    # per-tier planes-used EMA flowed through observe()
+    assert DEGRADABLE in eng.slo.planes_used_ema
+
+
+def test_engine_rejects_unknown_tier(dslot_lm):
+    model, params = dslot_lm
+    eng = ServeEngine(model, params, ServeConfig(n_slots=1, max_len=32))
+    with pytest.raises(ValueError, match="unknown QoS tier"):
+        eng.try_add(Request(uid=1, prompt=_prompt(3), max_new=2,
+                            tier="platinum"))
+
+
+def test_streaming_on_token_and_generator(dslot_lm):
+    model, params = dslot_lm
+    eng = ServeEngine(model, params, ServeConfig(n_slots=2, max_len=64,
+                                                 prefill_chunk=4))
+    pushed = []
+    r1 = Request(uid=1, prompt=_prompt(6, seed=1), max_new=4,
+                 on_token=lambda req, tok, step: pushed.append((tok, step)))
+    r2 = Request(uid=2, prompt=_prompt(6, seed=2), max_new=3)
+    assert eng.try_add(r1)
+    streamed = list(eng.stream(r2))           # drives the engine; r1 rides
+    assert streamed == r2.out and len(streamed) == 3
+    while not r1.done:
+        eng.step()
+    assert [t for t, _ in pushed] == r1.out   # push path saw every token
+    assert [s for _, s in pushed] == r1.token_steps
+    assert r1.token_steps == sorted(r1.token_steps)
+    assert r1.token_steps[0] == r1.first_token_step
+    for r in (r1, r2):
+        assert r.result is not None and r.result.phase == DONE
+        assert r.result.tokens == r.out
+        assert r.result.ttft_steps == r.ttft_steps >= 1
+        assert r.result.steps >= r.result.ttft_steps
+
+
+def test_cancel_attaches_terminal_result(dslot_lm):
+    model, params = dslot_lm
+    eng = ServeEngine(model, params, ServeConfig(n_slots=1, max_len=64,
+                                                 prefill_chunk=4))
+    active = Request(uid=1, prompt=_prompt(4, seed=3), max_new=8)
+    queued = Request(uid=2, prompt=_prompt(4, seed=4), max_new=8)
+    assert eng.try_add(active) and eng.try_add(queued)
+    for _ in range(3):
+        eng.step()
+    assert eng.cancel(1) and eng.cancel(2)
+    for r in (active, queued):
+        assert r.done and r.phase == CANCELLED
+        assert r.result is not None and r.result.phase == CANCELLED
+    assert active.result.tokens == active.out and len(active.out) > 0
+    assert queued.result.tokens == []
+
+
+def test_uncalibrated_chunked_budget_rejected():
+    """Per-request budgets + multi-chunk prompts need a calibrated
+    act_scale (per-call max quantization is not chunk-invariant)."""
+    cfg = _dslot_cfg(act_scale=None)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(12))
+    eng = ServeEngine(model, params, ServeConfig(n_slots=1, max_len=64,
+                                                 prefill_chunk=4))
+    assert not eng.calibrated
+    with pytest.raises(ValueError, match="calibrated activation scale"):
+        eng.try_add(Request(uid=1, prompt=_prompt(10), max_new=2,
+                            n_planes=4))
+    # single-chunk prompts and unbudgeted requests are unaffected
+    ok = Request(uid=2, prompt=_prompt(3), max_new=2, n_planes=4)
+    ok2 = Request(uid=3, prompt=_prompt(10), max_new=2)
+    assert eng.try_add(ok) and eng.try_add(ok2)

@@ -85,8 +85,10 @@ def test_generate_shapes_and_determinism():
     batch = {"tokens": jnp.asarray([[1, 2, 3, 4], [4, 3, 2, 1]], jnp.int32)}
     out1 = generate(model, params, batch, 6)
     out2 = generate(model, params, batch, 6)
-    assert out1.shape == (2, 6)
-    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+    assert out1.tokens.shape == (2, 6)
+    np.testing.assert_array_equal(np.asarray(out1.tokens),
+                                  np.asarray(out2.tokens))
+    assert out1.stats == {}                      # non-DSLOT: no plane stats
 
 
 def test_generate_matches_stepwise_decode():
@@ -94,7 +96,7 @@ def test_generate_matches_stepwise_decode():
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(1))
     toks = jnp.asarray([[5, 6, 7, 8]], jnp.int32)
-    out = generate(model, params, {"tokens": toks}, 4)
+    out = generate(model, params, {"tokens": toks}, 4).tokens
     # manual loop
     logits, st = model.prefill(params, {"tokens": toks}, max_len=8)
     cur = jnp.argmax(logits, -1).astype(jnp.int32)
@@ -150,7 +152,7 @@ def test_serve_engine_staggered_admissions_match_solo():
     for req, prompt in zip(reqs, prompts):
         solo = generate(model, params, {"tokens": jnp.asarray(prompt[None])},
                         5)
-        assert req.out == list(np.asarray(solo[0])), req.uid
+        assert req.out == list(np.asarray(solo.tokens[0])), req.uid
 
 
 def _dslot_model(key=4):
@@ -257,6 +259,10 @@ def test_generate_dslot_stats_per_request():
     used = np.asarray(stats["planes_used_mean"])
     assert used.shape == (2,)
     assert used[1] <= 2.0 + 1e-6 < used[0]
-    # plain generate (no stats) unchanged
-    toks2 = generate(model, params, batch, 3)
-    assert toks2.shape == (2, 3)
+    # default call returns the unified result with the same account
+    res = generate(model, params, batch, 3,
+                   n_planes=jnp.asarray([8, 2], jnp.int32))
+    assert res.tokens.shape == (2, 3)
+    np.testing.assert_array_equal(np.asarray(res.tokens), np.asarray(toks))
+    np.testing.assert_allclose(np.asarray(res.planes_used_mean), used,
+                               rtol=1e-6)
