@@ -18,10 +18,21 @@ footprint, and a bit-exactness cross-check — written to
 ``BENCH_kernel.json``.  Exits nonzero (CI-fatal) if the fused path moves
 more activation bytes than the materialized one.
 
+``--msr-profile`` profiles weight-side digit sparsity on the MNIST CNN:
+per-layer MSR (Most-Significant-Run) histograms of the quantized weights,
+the measured planes-ISSUED reduction from the static per-N-tile MSR bound
+(``dslot_prepare(msr_bound=True)``) on a channel-pruned variant with full
+forward bit-exactness against the unbounded path, and the CSD/Booth
+nonzero-digit enumeration prototype (``core.csd``) head-to-head against
+the dense-plane scan's digit-slot count.  Results MERGE into the same
+``BENCH_kernel.json`` under ``"msr_profile"``; exits nonzero if outputs
+diverge, the bound saves nothing, or CSD is not sparser than binary.
+
 Standalone CLI (used by the CI smoke job):
     python benchmarks/bench_kernel.py [--smoke] [--json out.json]
         [--sweep-precision [--precision-json BENCH_precision.json]]
         [--compare-encoding [--kernel-json BENCH_kernel.json]]
+        [--msr-profile [--kernel-json BENCH_kernel.json]]
 """
 
 from __future__ import annotations
@@ -311,6 +322,156 @@ def run_encoding_comparison(smoke: bool = False) -> dict:
     return report
 
 
+# --------------------------------------------------- weight-side sparsity
+
+def run_msr_profile(smoke: bool = False) -> dict:
+    """Weight-side digit sparsity on the paper's MNIST CNN.
+
+    Three measurements, one artifact block:
+
+    * **MSR histograms** — per-layer Most-Significant-Run depth of the
+      int8-quantized weights (``core.msr.msr_histogram``), the trained-net
+      statistic the static plane bound exploits.
+    * **Static MSR bound, measured** — the network's conv layer is
+      structurally pruned (the weakest half of its output channels zeroed
+      — the standard dead-neuron deployment transform) and prepared with
+      ``sort_columns=True`` so the zero columns cluster into whole N-tiles;
+      the same prepared state runs with and without ``msr_bound`` and the
+      report carries Σ planes-issued (and MXU passes) for both, gated on
+      (a) bit-identical logits and (b) a strictly positive reduction.
+      The unpruned network is profiled alongside for honesty: dense random
+      weights have no output-inert tile, so its reduction is 0 — the bound
+      is a *sparsity* win, not a free lunch.
+    * **CSD head-to-head** — the activations' CSD/Booth recoding
+      (``core.csd``) vs plain binary vs the dense plane scan: essential
+      (nonzero) digit count per path, with ``csd_matmul`` asserted
+      bit-equal to the integer product ``q @ w_q``.
+    """
+    import dataclasses
+
+    from repro.configs.dslot_mnist import CONFIG
+    from repro.core.conv import im2col
+    from repro.core.csd import (binary_digit_count, csd_matmul, csd_recode,
+                                essential_digit_count)
+    from repro.core.mnist_cnn import _pool_flatten, init_cnn
+    from repro.core.msr import msr_histogram, quantize_weights
+    from repro.layers import DslotConv2d, DslotDense
+
+    rng = np.random.default_rng(0)
+    cfg = CONFIG
+    m, k = cfg.conv_channels, cfg.kernel_size
+    side = (cfg.image_size - k + 1) // cfg.pool
+    params = init_cnn(cfg, jax.random.PRNGKey(0))
+    imgs = jnp.asarray(rng.uniform(0, 1, (4 if smoke else 16, 28, 28)),
+                       jnp.float32)
+
+    # conv weights as the (k*k, M) im2col matrix the kernel actually sees
+    conv_mat = np.asarray(jnp.transpose(params.conv, (1, 2, 0))
+                          .reshape(k * k, m))
+    dense_mat = np.asarray(params.dense)
+
+    # structured pruning: zero the weakest half of the conv output channels
+    l2 = np.linalg.norm(conv_mat, axis=0)
+    pruned_ch = np.argsort(l2)[:m // 2]
+    conv_pruned = conv_mat.copy()
+    conv_pruned[:, pruned_ch] = 0.0
+
+    report = {"smoke": smoke, "n_bits": cfg.n_bits,
+              "pruned_channels": sorted(int(c) for c in pruned_ch),
+              "violations": [],
+              "msr_histograms": {
+                  "conv1": msr_histogram(jnp.asarray(conv_mat), cfg.n_bits),
+                  "conv1_pruned": msr_histogram(jnp.asarray(conv_pruned),
+                                                cfg.n_bits),
+                  "dense1": msr_histogram(jnp.asarray(dense_mat),
+                                          cfg.n_bits)}}
+
+    def _forward(conv_w, *, msr_bound):
+        """Full-network forward through the layer API; returns logits and
+        Σ planes-issued / Σ MXU passes / Σ planes-bounded per layer."""
+        conv = DslotConv2d(in_channels=1, out_channels=m, kernel_size=k,
+                           name="conv1", n_bits=cfg.n_bits, relu=True,
+                           sort_columns=True, block_m=32, block_n=2)
+        head = DslotDense(d_in=m * side * side, d_out=cfg.n_classes,
+                          name="dense1", n_bits=cfg.n_bits, relu=False,
+                          signed=False, block_m=32, block_n=2)
+        wc = jnp.asarray(conv_w).reshape(k, k, 1, m)
+        cp = conv.prepare({"w": wc})
+        hp = head.prepare({"w": jnp.asarray(dense_mat)})
+        if not msr_bound:
+            cp = {**cp, "dslot": dataclasses.replace(cp["dslot"],
+                                                     msr_bound=None)}
+            hp = {**hp, "dslot": dataclasses.replace(hp["dslot"],
+                                                     msr_bound=None)}
+        x, conv_st = conv.apply(cp, imgs[..., None])
+        logits, head_st = head.apply(hp, _pool_flatten(x, cfg))
+        layers = {}
+        for name, st, prep in (("conv1", conv_st, cp["dslot"]),
+                               ("dense1", head_st, hp["dslot"])):
+            Kt = prep.w.shape[0] // prep.block_k
+            issued = int(np.asarray(st.planes_used).sum())
+            layers[name] = {
+                "planes_issued": issued,
+                "mxu_passes": issued * Kt,
+                "planes_bounded": (0 if st.planes_bounded is None else
+                                   int(np.asarray(st.planes_bounded).sum())),
+                "bound_table": (None if prep.msr_bound is None else
+                                np.asarray(prep.msr_bound).tolist()),
+            }
+        return np.asarray(logits), layers
+
+    for tag, conv_w in (("pruned", conv_pruned), ("unpruned", conv_mat)):
+        yb, lb = _forward(conv_w, msr_bound=True)
+        yu, lu = _forward(conv_w, msr_bound=False)
+        np.testing.assert_array_equal(
+            yb, yu, err_msg=f"MSR bound changed {tag} logits")
+        issued_b = sum(d["planes_issued"] for d in lb.values())
+        issued_u = sum(d["planes_issued"] for d in lu.values())
+        passes_b = sum(d["mxu_passes"] for d in lb.values())
+        passes_u = sum(d["mxu_passes"] for d in lu.values())
+        report[tag] = {
+            "bit_exact": True,
+            "layers": {n: {"bounded": lb[n], "unbounded": lu[n]}
+                       for n in lb},
+            "planes_issued": {"bounded": issued_b, "unbounded": issued_u,
+                              "reduction": 1.0 - issued_b / issued_u},
+            "mxu_passes": {"bounded": passes_b, "unbounded": passes_u,
+                           "reduction": 1.0 - passes_b / passes_u},
+        }
+    if report["pruned"]["planes_issued"]["reduction"] <= 0.0:
+        report["violations"].append(
+            "MSR bound saved no issued planes on the pruned CNN "
+            f"({report['pruned']['planes_issued']})")
+
+    # CSD/Booth nonzero-digit enumeration vs the dense-plane scan, on the
+    # conv layer's real activation stream (im2col'd images, quantized)
+    cols = im2col(imgs[..., None], k, 1, "valid").reshape(-1, k * k)
+    q, _ = ops.quantize_activations(cols, n_bits=cfg.n_bits, signed=False)
+    q = q[:64 if smoke else 512]
+    w_q = quantize_weights(jnp.asarray(conv_mat), cfg.n_bits)
+    out_csd, nz_planes = csd_matmul(q, w_q, cfg.n_bits)
+    np.testing.assert_array_equal(
+        np.asarray(out_csd), np.asarray(q) @ np.asarray(w_q),
+        err_msg="CSD matmul diverged from the integer product")
+    essential = int(essential_digit_count(csd_recode(q, cfg.n_bits)))
+    binary = int(binary_digit_count(q, cfg.n_bits))
+    dense_slots = cfg.n_bits * int(q.size)
+    report["csd"] = {
+        "bit_exact": True,
+        "activation_rows": int(q.shape[0]),
+        "essential_digits_csd": essential,
+        "nonzero_digits_binary": binary,
+        "dense_plane_digit_slots": dense_slots,
+        "nonzero_planes": int(nz_planes),
+        "csd_vs_dense_reduction": 1.0 - essential / dense_slots,
+        "csd_vs_binary_reduction": 1.0 - essential / max(binary, 1),
+    }
+    if essential > binary:
+        report["violations"].append(
+            f"CSD recoding is denser than binary ({essential} > {binary})")
+    return report
+
+
 def run_precision_sweep(smoke: bool = False) -> dict:
     """Prepare-once/execute-many amortization + skipped-frac per precision.
 
@@ -403,8 +564,40 @@ def main() -> None:
                          "materialized (D, M, K) plane-tensor baseline "
                          "(wall-clock, bytes moved, bit-exactness)")
     ap.add_argument("--kernel-json", type=str, default="BENCH_kernel.json",
-                    help="output path for the --compare-encoding report")
+                    help="output path for the --compare-encoding and "
+                         "--msr-profile reports (merged, not clobbered)")
+    ap.add_argument("--msr-profile", action="store_true",
+                    help="weight-side digit sparsity: per-layer MSR "
+                         "histograms, static-bound planes-issued reduction "
+                         "on the MNIST CNN (bit-exact gated), and the "
+                         "CSD/Booth vs dense-plane digit count")
     args = ap.parse_args()
+    if args.msr_profile:
+        import os
+        report = run_msr_profile(smoke=args.smoke)
+        for tag in ("pruned", "unpruned"):
+            pi = report[tag]["planes_issued"]
+            print(f"{tag}: planes issued {pi['bounded']} bounded vs "
+                  f"{pi['unbounded']} unbounded "
+                  f"({pi['reduction']:.1%} reduction, bit-exact)")
+        c = report["csd"]
+        print(f"csd: {c['essential_digits_csd']} essential digits vs "
+              f"{c['nonzero_digits_binary']} binary nonzeros vs "
+              f"{c['dense_plane_digit_slots']} dense plane slots "
+              f"({c['csd_vs_dense_reduction']:.1%} vs dense)")
+        # merge into the shared kernel artifact: --compare-encoding runs
+        # earlier in the CI job and owns the top-level keys
+        merged = {}
+        if os.path.exists(args.kernel_json):
+            with open(args.kernel_json) as f:
+                merged = json.load(f)
+        merged["msr_profile"] = report
+        with open(args.kernel_json, "w") as f:
+            json.dump(merged, f, indent=2)
+        print(f"merged msr_profile into {args.kernel_json}")
+        if report["violations"]:
+            raise SystemExit("; ".join(report["violations"]))
+        return
     if args.compare_encoding:
         report = run_encoding_comparison(smoke=args.smoke)
         print("n_planes,fused_us,materialized_us")

@@ -34,7 +34,10 @@ device-gets the sampled tokens, so ``perf_counter`` around it is honest):
   tiers cycling reserved/standard/degradable, with ``ServeConfig.slo`` set.
   Reports the accuracy-vs-latency Pareto sweep per QoS tier — mean planes
   actually executed (the accuracy/energy side) against p95 TTFT in ENGINE
-  STEPS (the deterministic latency domain) — plus the controller account
+  STEPS (the deterministic latency domain) — plus the weight-side
+  ``mean_planes_bounded`` (digit planes never issued because of the static
+  MSR bound baked into the prepared weights; request-independent, so it
+  compounds with per-tier shedding) and the controller account
   (shed/restore events, minimum levels).  Gated (steps domain, so CI-safe):
   p95 TTFT stays within the analytic drain bound, the degradable tier's
   mean planes degrades below full precision (shedding did real work),
@@ -296,10 +299,16 @@ def run_overload(prompt_len: int, chunk: int, n_slots: int, max_new: int,
     for tier in (RESERVED, STANDARD, DEGRADABLE):
         rs = [r for r in reqs if r.tier == tier]
         ttfts = [r.ttft_steps for r in rs]
+        bnd = [r.result.planes_bounded_mean for r in rs
+               if r.result.planes_bounded_mean is not None]
         pareto[tier] = {
             "n_requests": len(rs),
             "mean_planes_used": round(float(np.mean(
                 [r.result.planes_used_mean for r in rs])), 3),
+            # weight-side planes never issued (static MSR bound) — the
+            # request-independent saving that compounds with shedding
+            "mean_planes_bounded": (round(float(np.mean(bnd)), 3)
+                                    if bnd else None),
             "ttft_p50_steps": float(np.percentile(ttfts, 50)),
             "ttft_p95_steps": float(np.percentile(ttfts, 95)),
             "floor": eng.slo.floor(tier),

@@ -89,8 +89,22 @@ def main():
                        block_k=args.block_k, block_m=32)
     prep = calibrate_cnn(prep, xe[:16], CONFIG)
     n_prepares = ops.prepare_call_count() - n0
+    # weight-side static MSR plane bounds baked in at prepare time: tiles
+    # with bound 0 are never issued by any backend (bit-exact saving)
+    weight_side = {}
+    for name, lp in (("conv1", prep.conv_params), ("dense1",
+                                                   prep.head_params)):
+        tbl = lp["dslot"].msr_bound
+        tbl = None if tbl is None else np.asarray(tbl).tolist()
+        weight_side[name] = {
+            "bound_table": tbl,
+            "bounded_tiles": 0 if tbl is None else sum(
+                b < CONFIG.n_bits for b in tbl)}
     print(f"\nprepared {n_prepares} layers once ({backend}, "
-          f"block_k={args.block_k}); runtime precision sweep:")
+          f"block_k={args.block_k}); weight-side bounded tiles: "
+          + ", ".join(f"{n} {d['bounded_tiles']}"
+                      for n, d in weight_side.items())
+          + "; runtime precision sweep:")
 
     sweep = []
     planes_list = ([args.n_planes] if args.n_planes
@@ -108,6 +122,12 @@ def main():
             row["layers"][name] = {
                 "planes_used_mean": float(used.mean()),
                 "skipped_frac": float(st.skipped_frac),
+                # weight-side planes saved: granted budget minus the
+                # static MSR bound, per tile (0 unless weights carry
+                # inert tiles — see bench_kernel.py --msr-profile)
+                "planes_bounded_mean": (
+                    None if st.planes_bounded is None else
+                    float(np.asarray(st.planes_bounded).mean())),
             }
             print(f"  D={n_planes}  {name:8s} planes_used "
                   f"{used.mean():5.2f}  skipped "
@@ -121,6 +141,7 @@ def main():
         with open(args.json, "w") as f:
             json.dump({"smoke": args.smoke, "backend": backend,
                        "train_accuracy": acc, "prepares": n_prepares,
+                       "weight_side": weight_side,
                        "precision_sweep": sweep}, f, indent=2)
         print(f"wrote per-precision planes-skipped sweep to {args.json}")
 

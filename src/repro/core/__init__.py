@@ -11,6 +11,9 @@ from .sip import SIPSchedule, sip_schedule, sip_sop, sip_sop_trace
 from .cycle_model import FPGAModel, TABLE1_PUBLISHED, table1_model
 from .conv import (DSLOTConvResult, dslot_conv2d_stats, extract_windows,
                    im2col, sip_conv2d)
+from .csd import (binary_digit_count, csd_matmul, csd_planes_nonzero,
+                  csd_recode, essential_digit_count)
+from .msr import msr_depths, msr_histogram, quantize_weights, tile_plane_bound
 
 __all__ = [
     "fixed_to_sd", "first_negative_prefix", "sd_from_value",
@@ -24,4 +27,7 @@ __all__ = [
     "FPGAModel", "TABLE1_PUBLISHED", "table1_model",
     "DSLOTConvResult", "dslot_conv2d_stats", "extract_windows", "im2col",
     "sip_conv2d",
+    "binary_digit_count", "csd_matmul", "csd_planes_nonzero", "csd_recode",
+    "essential_digit_count",
+    "msr_depths", "msr_histogram", "quantize_weights", "tile_plane_bound",
 ]

@@ -1,0 +1,115 @@
+"""CSD / Booth nonzero-digit enumeration prototype (essential digits only).
+
+Bit-Pragmatic and Laconic (PAPERS.md) process only the *essential* —
+nonzero — digits of a serial operand instead of scanning every bit
+position.  The DSLOT dense-plane scan issues all ``n_bits`` MSDF planes of
+the quantized activations (minus what early termination kills); most of
+those digits are zero, and plain binary is not even the sparsest encoding.
+
+This module recodes quantized activations into **Canonical Signed Digit**
+form — the unique minimal-weight radix-2 signed-digit representation
+(digits in {-1, 0, +1}, no two adjacent nonzeros), computed via the
+non-adjacent-form identity ``NAF(m) = bits(3m) - bits(m)`` — and provides
+the integer-domain evaluation + work accounting the
+``bench_kernel.py --msr-profile`` head-to-head uses:
+
+* ``csd_recode`` — (P, ...) MSDF digit planes, ``P = n_bits + 1`` (CSD of
+  an ``n``-bit magnitude can carry into weight ``2^n``), value-exact.
+* ``essential_digit_count`` / ``binary_digit_count`` — nonzero digits under
+  CSD vs plain sign-magnitude binary (Laconic's "essential digit" metric
+  vs Pragmatic's "essential bit" metric) vs the ``n_bits * size`` dense
+  digit slots the plane scan issues.
+* ``csd_matmul`` — exact integer matmul over the CSD planes, plus the
+  number of planes that carry any nonzero digit (what a plane-granular
+  engine could skip) — asserted bit-equal to ``q @ w_q`` in the bench.
+
+A hardware DSLOT datapath would consume these via per-digit (position,
+sign) pairs; on the TPU's plane-granular MXU the win shows up as fewer
+nonzero planes and a strictly lower essential-digit count.  This is the
+prototype half of ISSUE 7's weight-side sparsity pipeline — the exact
+static-plane-bound half lives in ``core.msr``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["binary_digit_count", "csd_matmul", "csd_planes_nonzero",
+           "csd_recode", "essential_digit_count"]
+
+
+def csd_recode(q: jax.Array, n_bits: int = 8) -> jax.Array:
+    """MSDF CSD digit planes of integer ``q``: (n_bits + 1, *q.shape) int8.
+
+    Plane ``p`` carries weight ``2^(n_bits - p)`` (most significant first),
+    so ``q == sum_p 2^(n_bits - p) * planes[p]`` exactly for
+    ``|q| < 2^n_bits``.  Signed inputs recode as ``sign(q) * CSD(|q|)`` —
+    still minimal-weight, digits in {-1, 0, +1}, no two adjacent nonzeros
+    (the NAF property).
+    """
+    q = jnp.asarray(q, jnp.int32)
+    m = jnp.abs(q)
+    t = 3 * m
+    # NAF digit at weight 2^j is bit_{j+1}(3m) - bit_{j+1}(m); plane p has
+    # j = n_bits - p, hence shift n_bits - p + 1.
+    shifts = n_bits + 1 - jnp.arange(n_bits + 1, dtype=jnp.int32)
+    shifts = shifts.reshape(shifts.shape + (1,) * q.ndim)
+    digits = ((t[None] >> shifts) & 1) - ((m[None] >> shifts) & 1)
+    return (digits * jnp.sign(q)[None]).astype(jnp.int8)
+
+
+def essential_digit_count(planes: jax.Array) -> jax.Array:
+    """Number of nonzero digits in a digit-plane tensor (i32 scalar)."""
+    return jnp.sum((jnp.asarray(planes, jnp.int32) != 0).astype(jnp.int32))
+
+
+def binary_digit_count(q: jax.Array, n_bits: int = 8) -> jax.Array:
+    """Nonzero digits of plain sign-magnitude binary (popcount of |q|).
+
+    This is what the dense-plane scan actually multiplies by something
+    nonzero — Pragmatic's essential-bit count; the scan still *issues*
+    ``n_bits * q.size`` digit slots.
+    """
+    m = jnp.abs(jnp.asarray(q, jnp.int32))
+    shifts = jnp.arange(n_bits, dtype=jnp.int32)
+    shifts = shifts.reshape(shifts.shape + (1,) * m.ndim)
+    return jnp.sum(((m[None] >> shifts) & 1).astype(jnp.int32))
+
+
+def csd_planes_nonzero(planes: jax.Array) -> jax.Array:
+    """How many of the P digit planes carry any nonzero digit (i32).
+
+    The plane-granular analogue of essential-digit processing: an all-zero
+    CSD plane needs no MXU pass at all (cf. the MSR static bound, which
+    proves this per weight tile instead of per activation plane).
+    """
+    P = planes.shape[0]
+    flat = jnp.asarray(planes, jnp.int32).reshape(P, -1)
+    return jnp.sum(jnp.any(flat != 0, axis=1).astype(jnp.int32))
+
+
+def csd_matmul(q: jax.Array, w_q: jax.Array, n_bits: int = 8
+               ) -> tuple[jax.Array, jax.Array]:
+    """Exact integer matmul over CSD planes: ``(q @ w_q, planes_nonzero)``.
+
+    ``q``: (M, K) int, ``|q| < 2^n_bits``; ``w_q``: (K, N) int.  Evaluates
+    ``sum_p 2^(n_bits-p) * (planes[p] @ w_q)`` in int32 — bit-equal to
+    ``q @ w_q`` (asserted in ``bench_kernel.py --msr-profile``; keep
+    ``2^n_bits * K * max|w_q|`` inside int32 range).  Also returns the
+    nonzero-plane count — the MXU passes an essential-digit engine issues
+    versus the dense scan's ``n_bits``.
+    """
+    planes = csd_recode(q, n_bits)
+    w_i = jnp.asarray(w_q, jnp.int32)
+    scales = jnp.int32(1) << (n_bits - jnp.arange(n_bits + 1,
+                                                  dtype=jnp.int32))
+
+    def body(acc, step):
+        plane, scale = step
+        return acc + scale * jnp.dot(plane.astype(jnp.int32), w_i), None
+
+    M, N = q.shape[0], w_q.shape[1]
+    acc, _ = jax.lax.scan(body, jnp.zeros((M, N), jnp.int32),
+                          (planes, scales))
+    return acc, csd_planes_nonzero(planes)

@@ -1,0 +1,118 @@
+"""Weight-side Most-Significant-Run (MSR) analysis for the DSLOT engine.
+
+SNIPPETS.md's Low-Cost-AI-Accelerator study defines the MSR of an int8
+weight as the run of identical leading bits (sign extension) in its
+two's-complement representation and measures that >= 99% of trained weights
+across MLP / LeNet / ResNet-18 / AlexNet carry a 4-bit MSR — i.e. their
+magnitude fits in the low 4 bits.  In digit-plane terms: the most
+significant digit planes of most weights are pure sign padding.
+
+This module provides the prepare-time half of the weight-side sparsity
+pipeline (ISSUE 7 / ROADMAP "Weight-side digit sparsity"):
+
+* ``msr_depths`` / ``msr_histogram`` — per-weight MSR depth of the
+  int-quantized weights plus the MSR-N cumulative fractions (the analogue
+  of the SNIPPETS table), used by ``bench_kernel.py --msr-profile``.
+* ``tile_plane_bound`` — the *exact* static per-(N-tile) plane upper bound
+  baked into ``DslotWeights.msr_bound`` by ``kernels.ops.dslot_prepare``.
+
+Exactness note (why the bound is {0, n_bits} and not the raw MSR depth):
+the DSLOT kernel digit-serializes the **activations**, not the weights —
+every digit plane multiplies the *full-precision* weight tile.  Truncating
+activation planes based on weight magnitude therefore changes the f32
+output, so a magnitude-derived partial bound (e.g. "this tile's weights
+all have MSR 4, run 4 planes") is NOT bit-exact and is reported here as
+profiling only.  The bounds that ARE output-exact are the degenerate
+endpoints of the MSR spectrum, detected on the raw stored weights:
+
+* a tile whose weight columns are **exactly zero** (MSR depth == n_bits at
+  any quantization — in particular every pure-N-padding tile) contributes
+  nothing in any mode: bound 0;
+* under ``relu=True`` with **unsigned** activation quantization (digits in
+  {0, 1}), a tile whose weights are all <= 0 can only accumulate <= 0, so
+  its ReLU output is identically zero: bound 0.
+
+Everything in between is the CSD/Booth enumeration prototype's territory
+(``core.csd``): sub-plane weight sparsity needs a digit-granular datapath,
+not a plane-granular one.  See ``docs/kernel.md`` ("Weight-side digit
+sparsity") for the crosswalk to Bit-Pragmatic / Laconic.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["msr_depths", "msr_histogram", "quantize_weights",
+           "tile_plane_bound"]
+
+
+def quantize_weights(w: jax.Array, n_bits: int = 8) -> jax.Array:
+    """Symmetric signed ``n_bits`` quantization of a weight tensor.
+
+    Profiling-only (the kernel consumes full-precision weights): maps
+    ``max|w|`` to ``2^(n_bits-1) - 1``.  Returns int32 values in
+    ``[-(2^(n_bits-1)-1), 2^(n_bits-1)-1]``.
+    """
+    qmax = float(2 ** (n_bits - 1) - 1)
+    amax = jnp.maximum(jnp.max(jnp.abs(w.astype(jnp.float32))), 1e-12)
+    return jnp.clip(jnp.round(w.astype(jnp.float32) / (amax / qmax)),
+                    -qmax, qmax).astype(jnp.int32)
+
+
+def msr_depths(w_q: jax.Array, n_bits: int = 8) -> jax.Array:
+    """Per-weight MSR depth of int-quantized weights (int32, same shape).
+
+    Depth = number of leading bits of the ``n_bits``-wide two's-complement
+    representation equal to the sign bit = ``n_bits - bitlength(|w_q|)``
+    (a weight with ``|w_q| < 2^(n_bits - r)`` has an ``r``-bit MSR; zero
+    has the full ``n_bits``).  SNIPPETS.md "MSR-N" = fraction of weights
+    with depth >= N.
+    """
+    m = jnp.abs(jnp.asarray(w_q, jnp.int32))
+    shifts = jnp.arange(n_bits, dtype=jnp.int32)
+    shifts = shifts.reshape(shifts.shape + (1,) * m.ndim)
+    bitlen = jnp.sum((m[None] >> shifts) > 0, axis=0, dtype=jnp.int32)
+    return n_bits - bitlen
+
+
+def msr_histogram(w: jax.Array, n_bits: int = 8) -> dict:
+    """MSR depth distribution of a weight tensor (quantized on the fly).
+
+    Returns ``{"n_bits", "depth_counts": [c_0..c_n_bits],
+    "msr_ge": {"3": f, "4": f, "5": f, "6": f}}`` — ``msr_ge["4"]`` is the
+    SNIPPETS table's MSR-4 column (>= 98.9% on trained nets).
+    """
+    depths = msr_depths(quantize_weights(w, n_bits), n_bits)
+    counts = jnp.bincount(depths.reshape(-1), length=n_bits + 1)
+    counts = [int(c) for c in jax.device_get(counts)]
+    total = max(1, sum(counts))
+    return {
+        "n_bits": n_bits,
+        "depth_counts": counts,
+        "msr_ge": {str(nn): sum(counts[nn:]) / total
+                   for nn in (3, 4, 5, 6) if nn <= n_bits},
+    }
+
+
+def tile_plane_bound(w_p: jax.Array, block_n: int, *, n_bits: int,
+                     relu: bool, signed: bool) -> jax.Array:
+    """Exact static plane upper bound per N-tile of padded/sorted weights.
+
+    ``w_p``: (Kp, Np) with ``Np % block_n == 0`` — the weights exactly as
+    ``dslot_prepare`` stores them (post sort, post padding), so tile
+    membership matches the kernel grid.  Returns an (Nt,) int32 table:
+    0 for tiles proven inert (see module docstring), ``n_bits`` otherwise.
+    Running extra planes beyond the bound is always exact, so consumers may
+    clamp it upward freely; the kernel takes
+    ``min(n_planes_rt, row_budget, msr_bound[j])``.
+    """
+    Kp, Np = w_p.shape
+    assert Np % block_n == 0, (Np, block_n)
+    tiles = w_p.astype(jnp.float32).reshape(Kp, Np // block_n, block_n)
+    inert = jnp.all(tiles == 0.0, axis=(0, 2))
+    if relu and not signed:
+        # unsigned activation digits are {0, 1}: an all-non-positive tile
+        # accumulates <= 0 and ReLU zeroes it — bound 0 is output-exact.
+        inert = jnp.logical_or(inert, jnp.all(tiles <= 0.0, axis=(0, 2)))
+    return jnp.where(inert, 0, n_bits).astype(jnp.int32)

@@ -81,7 +81,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 __all__ = ["dslot_matmul_pallas", "dslot_matmul_pallas_batched",
-           "DslotMatmulOut", "select_block_k", "q_storage_dtype"]
+           "DslotMatmulOut", "colsum_tables", "select_block_k",
+           "q_storage_dtype"]
 
 _VMEM_BUDGET_BYTES = 12 * 1024 * 1024  # leave headroom below v5e's ~16 MiB
 _LANE = 128                            # TPU lane width: K-chunk alignment
@@ -146,9 +147,28 @@ def select_block_k(K: int, block_m: int, block_n: int, w_itemsize: int,
     return max(_LANE, (bk // _LANE) * _LANE)
 
 
-def _kernel(npl_ref, bud_ref, q_ref, w_ref, sfx_ref, tot_ref, out_ref,
-            used_ref, acc_ref, term_ref, *, n_bits: int, n_planes: int,
-            n_kchunks: int, relu: bool):
+def colsum_tables(w: jax.Array, block_k: int) -> tuple[jax.Array, jax.Array]:
+    """|W| column-sum termination tables over the ``block_k``-chunked K axis.
+
+    ``w``: (Kp, N) padded weights with ``Kp % block_k == 0``.  Returns
+    ``(suffix_colsum (Kt, N), total_colsum (1, N))`` — per-chunk "what the
+    current plane has not seen yet" suffixes and the all-of-K total that the
+    kernel's remaining-contribution bound reads.  The ONE implementation
+    shared by ``ops.dslot_prepare`` (weight-stationary: computed once) and
+    the kernel's default path below (one-shot callers with no prepared
+    tables).
+    """
+    Kp, N = w.shape
+    assert Kp % block_k == 0, (Kp, block_k)
+    absw = jnp.abs(w.astype(jnp.float32))
+    chunk_colsum = absw.reshape(Kp // block_k, block_k, N).sum(axis=1)
+    total_colsum = chunk_colsum.sum(axis=0, keepdims=True)       # (1, N)
+    return total_colsum - jnp.cumsum(chunk_colsum, axis=0), total_colsum
+
+
+def _kernel(npl_ref, bnd_ref, bud_ref, q_ref, w_ref, sfx_ref, tot_ref,
+            out_ref, used_ref, acc_ref, term_ref, *, n_bits: int,
+            n_planes: int, n_kchunks: int, relu: bool):
     d = pl.program_id(2)
     c = pl.program_id(3)
 
@@ -161,8 +181,14 @@ def _kernel(npl_ref, bud_ref, q_ref, w_ref, sfx_ref, tot_ref, out_ref,
     # Runtime precision: planes at d >= npl are skipped entirely (their MXU
     # pass AND their digit extraction are predicated off), so precision is a
     # per-call argument — changing it never retraces or re-lowers the kernel.
+    # The static per-N-tile MSR bound (SMEM scalar per j, baked at
+    # dslot_prepare time from weight-side analysis — core.msr) caps the
+    # plane count the same way: the effective plane budget of this tile is
+    # min(n_planes_rt, row_budget, msr_bound[j]), so weight-inert tiles
+    # never extract digits or issue MXU passes at all.
     npl = npl_ref[0, 0]
-    terminated = jnp.logical_or(term_ref[0] > 0, d >= npl)
+    terminated = jnp.logical_or(jnp.logical_or(term_ref[0] > 0, d >= npl),
+                                d >= bnd_ref[0, 0])
 
     @pl.when(jnp.logical_not(terminated))
     def _accumulate():
@@ -228,6 +254,7 @@ def dslot_matmul_pallas(q: jax.Array, w: jax.Array, *, n_bits: int = 8,
                         row_budget: jax.Array | None = None,
                         suffix_colsum: jax.Array | None = None,
                         total_colsum: jax.Array | None = None,
+                        plane_bound: jax.Array | None = None,
                         interpret: bool = True) -> DslotMatmulOut:
     """Run the digit-serial matmul kernel with fused digit encoding.
 
@@ -254,7 +281,13 @@ def dslot_matmul_pallas(q: jax.Array, w: jax.Array, *, n_bits: int = 8,
     suffix_colsum / total_colsum: the |W| column-sum termination tables
              ((Kt, N) / (1, N) over the bk-padded K), precomputed once by
              ``ops.dslot_prepare`` for weight-stationary serving.  None
-             recomputes them here (the one-shot path).
+             recomputes them here via ``colsum_tables`` (the one-shot path).
+    plane_bound: optional STATIC-per-weights plane upper bound per N-tile
+             ((N/block_n,) i32, from ``DslotWeights.msr_bound``): tile j
+             runs at most ``plane_bound[j]`` planes — weight-side sparsity
+             baked at prepare time (``core.msr.tile_plane_bound`` emits
+             only output-exact bounds).  Rides in SMEM like the runtime
+             precision scalar; None means no weight-side cap.
     M % block_m == 0 and N % block_n == 0 (callers pad — see ``ops.py``).
     """
     M, K = q.shape
@@ -280,18 +313,19 @@ def dslot_matmul_pallas(q: jax.Array, w: jax.Array, *, n_bits: int = 8,
     Kt = Kp // bk
 
     if suffix_colsum is None or total_colsum is None:
-        # |W| column-sums for the termination bound: per-chunk suffix (what
-        # the current plane has not seen yet) and the all-of-K total.
-        absw = jnp.abs(w.astype(jnp.float32))
-        chunk_colsum = absw.reshape(Kt, bk, N).sum(axis=1)      # (Kt, N)
-        total_colsum = chunk_colsum.sum(axis=0, keepdims=True)  # (1, N)
-        suffix_colsum = total_colsum - jnp.cumsum(chunk_colsum, axis=0)
+        suffix_colsum, total_colsum = colsum_tables(w, bk)
     assert suffix_colsum.shape == (Kt, N), (suffix_colsum.shape, Kt, N)
     assert total_colsum.shape == (1, N), (total_colsum.shape, N)
 
     if n_planes_rt is None:
         n_planes_rt = jnp.asarray(D, jnp.int32)
     npl = jnp.asarray(n_planes_rt, jnp.int32).reshape(1, 1)
+    if plane_bound is None:
+        bnd = jnp.full((1, N // block_n), D, jnp.int32)
+    else:
+        assert plane_bound.shape == (N // block_n,), \
+            (plane_bound.shape, N, block_n)
+        bnd = jnp.asarray(plane_bound, jnp.int32).reshape(1, -1)
     if row_budget is None:
         bud = jnp.full((1, M), npl[0, 0], jnp.int32)
     else:
@@ -306,6 +340,8 @@ def dslot_matmul_pallas(q: jax.Array, w: jax.Array, *, n_bits: int = 8,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1), lambda i, j, d, c: (0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1), lambda i, j, d, c: (0, j),
                          memory_space=pltpu.SMEM),
             pl.BlockSpec((1, block_m), lambda i, j, d, c: (0, i),
                          memory_space=pltpu.SMEM),
@@ -327,7 +363,7 @@ def dslot_matmul_pallas(q: jax.Array, w: jax.Array, *, n_bits: int = 8,
             pltpu.SMEM((1,), jnp.int32),                   # termination flag
         ],
         interpret=interpret,
-    )(npl, bud, q, w, suffix_colsum, total_colsum)
+    )(npl, bnd, bud, q, w, suffix_colsum, total_colsum)
     return DslotMatmulOut(out=out, planes_used=used)
 
 
@@ -341,6 +377,7 @@ def dslot_matmul_pallas_batched(q: jax.Array, w: jax.Array, *,
                                 row_budget: jax.Array | None = None,
                                 suffix_colsum: jax.Array | None = None,
                                 total_colsum: jax.Array | None = None,
+                                plane_bound: jax.Array | None = None,
                                 interpret: bool = True) -> DslotMatmulOut:
     """Batched entry point: q (B, M, K) sharing one weight matrix.
 
@@ -349,8 +386,9 @@ def dslot_matmul_pallas_batched(q: jax.Array, w: jax.Array, *,
     termination are identical to B independent kernel launches, but the grid
     stays one sequential sweep.  The full unbatched surface passes through:
     ``n_planes_rt`` (runtime scalar precision), ``row_budget`` ((B,)
-    per-request or (B, M) per-row budgets, expanded to the folded rows), and
-    the prepared ``suffix_colsum``/``total_colsum`` termination tables — so
+    per-request or (B, M) per-row budgets, expanded to the folded rows), the
+    prepared ``suffix_colsum``/``total_colsum`` termination tables, and the
+    static per-N-tile ``plane_bound`` (weight-side, batch-invariant) — so
     batched serving callers reuse ``dslot_prepare``'s tables instead of
     recomputing |W| column-sums per call.  Returns out (B, M, N) and
     planes_used (B, M/bm, N/bn).
@@ -370,7 +408,8 @@ def dslot_matmul_pallas_batched(q: jax.Array, w: jax.Array, *,
                             block_k=block_k, n_planes_rt=n_planes_rt,
                             row_budget=row_budget,
                             suffix_colsum=suffix_colsum,
-                            total_colsum=total_colsum, interpret=interpret)
+                            total_colsum=total_colsum,
+                            plane_bound=plane_bound, interpret=interpret)
     N = r.out.shape[-1]
     return DslotMatmulOut(
         out=r.out.reshape(B, M, N),

@@ -58,8 +58,10 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .dslot_matmul import (_pad_to, dslot_matmul_pallas, q_storage_dtype,
-                           select_block_k)
+from repro.core.msr import tile_plane_bound
+
+from .dslot_matmul import (_pad_to, colsum_tables, dslot_matmul_pallas,
+                           q_storage_dtype, select_block_k)
 from .ref import sd_digit_plane
 
 __all__ = ["DslotStats", "DslotWeights", "dslot_matmul", "dslot_prepare",
@@ -79,8 +81,16 @@ class DslotStats(NamedTuple):
     planes_used: jax.Array      # (Mt, Nt) int32 — MXU passes per output tile
     n_planes: int               # plane budget the call was traced with
     skipped_frac: jax.Array     # scalar — fraction of plane-passes skipped
+                                # (includes weight-side bounded planes: the
+                                # bound caps planes_used, so activation- and
+                                # weight-side savings compound here)
     row_planes_used: jax.Array | None = None  # (M,) f32 — effective planes
                                 # per output row (serving: per-slot account)
+    planes_bounded: jax.Array | None = None  # (Mt, Nt) int32 — planes never
+                                # ISSUED because the static weight-side MSR
+                                # bound capped the tile below its granted
+                                # budget; disjoint from the activation-side
+                                # early-termination planes_used accounting
 
 
 @jax.tree_util.register_pytree_node_class
@@ -98,6 +108,9 @@ class DslotWeights:
     inv_perm: jax.Array | None    # (N,) i32 undo of column sort, or None
     x_scale: jax.Array | None     # () f32 calibrated activation step, or
                                   # None -> dynamic per-call max (fallback)
+    msr_bound: jax.Array | None = None  # (Nt,) i32 static per-N-tile plane
+                                  # upper bound from weight-side MSR
+                                  # analysis (core.msr), or None = no cap
     # -- static geometry / config (pytree aux data) --
     n_bits: int = 8
     relu: bool = True
@@ -111,7 +124,7 @@ class DslotWeights:
 
     def tree_flatten(self):
         children = (self.w, self.suffix_colsum, self.total_colsum,
-                    self.inv_perm, self.x_scale)
+                    self.inv_perm, self.x_scale, self.msr_bound)
         aux = (self.n_bits, self.relu, self.signed, self.block_m,
                self.block_n, self.block_k, self.backend, self.d_in,
                self.d_out)
@@ -160,12 +173,22 @@ def dslot_prepare(w: jax.Array, *, n_bits: int = 8, relu: bool = True,
                   signed: bool = False, sort_columns: bool = False,
                   block_m: int = 128, block_n: int = 128,
                   block_k: int | None = None, backend: str = "auto",
-                  x_scale: jax.Array | None = None) -> DslotWeights:
+                  x_scale: jax.Array | None = None,
+                  msr_bound: bool = True) -> DslotWeights:
     """One-time weight lowering: sort, pad, pick ``block_k``, build the
-    termination tables.  Call once per layer; reuse across every request.
+    termination tables and the weight-side MSR plane bound.  Call once per
+    layer; reuse across every request.
 
     ``w``: (K, N) float32/bfloat16.  For a stacked weight (L, K, N) use
     ``jax.vmap(lambda wl: dslot_prepare(wl, ...))`` — all children map.
+
+    ``msr_bound=True`` profiles the padded/sorted weight tiles
+    (``core.msr.tile_plane_bound``) and bakes a static per-N-tile plane
+    upper bound into the prepared state: tiles proven output-inert from the
+    weight side alone (exactly-zero columns — including every N-padding
+    tile — and, under unsigned+ReLU, all-non-positive tiles) get bound 0
+    and are never issued by any backend.  Only output-exact bounds are
+    emitted, so results are bit-identical to ``msr_bound=False``.
     """
     global _PREPARE_CALLS
     _PREPARE_CALLS += 1
@@ -183,19 +206,16 @@ def dslot_prepare(w: jax.Array, *, n_bits: int = 8, relu: bool = True,
                                    q_storage_dtype(n_bits, signed).itemsize)
     w_p = _pad_to(w, block_n, axis=1)
     w_p = _pad_to(w_p, bk, axis=0)
-    Kp, Np = w_p.shape
-    Kt = Kp // bk
 
-    absw = jnp.abs(w_p.astype(jnp.float32))
-    chunk_colsum = absw.reshape(Kt, bk, Np).sum(axis=1)          # (Kt, Np)
-    total_colsum = chunk_colsum.sum(axis=0, keepdims=True)       # (1, Np)
-    suffix_colsum = total_colsum - jnp.cumsum(chunk_colsum, axis=0)
+    suffix_colsum, total_colsum = colsum_tables(w_p, bk)
+    bound = tile_plane_bound(w_p, block_n, n_bits=n_bits, relu=relu,
+                             signed=signed) if msr_bound else None
 
     return DslotWeights(
         w=w_p, suffix_colsum=suffix_colsum, total_colsum=total_colsum,
-        inv_perm=inv_perm, x_scale=x_scale, n_bits=n_bits, relu=relu,
-        signed=signed, block_m=block_m, block_n=block_n, block_k=bk,
-        backend=backend, d_in=K, d_out=N)
+        inv_perm=inv_perm, x_scale=x_scale, msr_bound=bound, n_bits=n_bits,
+        relu=relu, signed=signed, block_m=block_m, block_n=block_n,
+        block_k=bk, backend=backend, d_in=K, d_out=N)
 
 
 # ------------------------------------------------------------- execution
@@ -203,7 +223,7 @@ def dslot_prepare(w: jax.Array, *, n_bits: int = 8, relu: bool = True,
 def _jnp_path(q: jax.Array, w: jax.Array, n_bits: int, n_planes: int,
               relu: bool, block_m: int, block_n: int, bk: int,
               suffix: jax.Array, total: jax.Array, npl: jax.Array,
-              row_budget: jax.Array):
+              row_budget: jax.Array, tile_bound: jax.Array):
     """Reference evaluation + termination accounting, plane-free.
 
     Computes every plane (no skipping — this is CPU) but derives the exact
@@ -220,7 +240,12 @@ def _jnp_path(q: jax.Array, w: jax.Array, n_bits: int, n_planes: int,
     contribute nothing and ``planes_used`` is clamped to it — the same
     semantics as the kernel's predicated passes.  ``row_budget`` ((M,) i32)
     zeroes each row's digits beyond its own budget — identical to the
-    kernel's SMEM per-row budget vector.
+    kernel's SMEM per-row budget vector.  ``tile_bound`` ((Nt,) i32) is the
+    static weight-side MSR plane bound: columns of tile j accumulate
+    nothing at d >= tile_bound[j] and the tile's planes_used is capped by
+    it — the mirror of the kernel's per-j SMEM bound scalar (a frozen tile
+    whose stale termination check fires in the replay is indistinguishable
+    after the cap, same as the npl clamp below).
 
     q (M, Kp) integer pre-padded; w (Kp, N); suffix (Kt, N) and total (N,)
     are the prepared |W| column-sum bound tables; n_planes is the static
@@ -249,6 +274,9 @@ def _jnp_path(q: jax.Array, w: jax.Array, n_bits: int, n_planes: int,
                 + ((scales - tail)[:, None, None]
                    * total[None, None, :])).reshape(D * Kt, N)
 
+    bound_cols = jnp.repeat(tile_bound.astype(jnp.int32), block_n,
+                            total_repeat_length=N)              # (N,)
+
     def body(acc, step):
         d, c, scale, rem = step
         qc = jax.lax.dynamic_index_in_dim(q_chunks, c, keepdims=False)
@@ -257,8 +285,11 @@ def _jnp_path(q: jax.Array, w: jax.Array, n_bits: int, n_planes: int,
         digit = sd_digit_plane(qc, n_bits, d).astype(jnp.float32) \
             * (row_budget > d).astype(jnp.float32)[:, None]
         wc = jax.lax.dynamic_index_in_dim(w_chunks, c, keepdims=False)
-        acc = acc + scale * jnp.dot(digit, wc,
-                                    preferred_element_type=jnp.float32)
+        # weight-side MSR bound: columns of a tile whose static plane bound
+        # is exhausted freeze — the kernel's per-j SMEM bound predicate
+        contrib = scale * jnp.dot(digit, wc,
+                                  preferred_element_type=jnp.float32)
+        acc = acc + contrib * (bound_cols > d).astype(jnp.float32)[None, :]
         bound = acc + rem[None, :]
         dead = jnp.all(bound.reshape(Mt, block_m, Nt, block_n) < 0.0,
                        axis=(1, 3))                             # (Mt, Nt)
@@ -279,6 +310,9 @@ def _jnp_path(q: jax.Array, w: jax.Array, n_bits: int, n_planes: int,
         used = jnp.where(ever, first // Kt + 1, D).astype(jnp.int32)
     else:
         used = jnp.full((Mt, Nt), D, jnp.int32)
+    # a tile never runs past its weight-side bound (the kernel only counts
+    # planes it actually enters); the npl clamp handles stale fires beyond
+    used = jnp.minimum(used, tile_bound.astype(jnp.int32)[None, :])
     return out, jnp.minimum(used, npl.astype(jnp.int32))
 
 
@@ -325,19 +359,23 @@ def _execute_core(prepared: DslotWeights, x: jax.Array, npl: jax.Array,
     bud_p = jnp.full((Mp,), npl_scalar, jnp.int32) if row_budget is None \
         else jnp.pad(row_budget.astype(jnp.int32), (0, Mp - M))
 
+    Nt = cfg.w.shape[1] // cfg.block_n
+    bnd = jnp.full((Nt,), D, jnp.int32) if cfg.msr_bound is None \
+        else jnp.minimum(cfg.msr_bound.astype(jnp.int32), D)
+
     if cfg.backend == "pallas":
         out_p, used = dslot_matmul_pallas(
             q_p, cfg.w, n_bits=cfg.n_bits, n_planes=D, relu=cfg.relu,
             block_m=cfg.block_m, block_n=cfg.block_n, block_k=cfg.block_k,
             n_planes_rt=npl_scalar, row_budget=bud_p,
             suffix_colsum=cfg.suffix_colsum, total_colsum=cfg.total_colsum,
-            interpret=jax.default_backend() != "tpu")
+            plane_bound=bnd, interpret=jax.default_backend() != "tpu")
         used = jnp.minimum(used, npl_scalar.astype(jnp.int32))
     else:
         out_p, used = _jnp_path(q_p, cfg.w, cfg.n_bits, D, cfg.relu,
                                 cfg.block_m, cfg.block_n, cfg.block_k,
                                 cfg.suffix_colsum, cfg.total_colsum[0],
-                                npl_scalar, bud_p)
+                                npl_scalar, bud_p, bnd)
 
     out = out_p[:M, :cfg.d_out] * step
     if cfg.inv_perm is not None:
@@ -354,8 +392,16 @@ def _execute_core(prepared: DslotWeights, x: jax.Array, npl: jax.Array,
             jnp.mean(budget_f), 1.0)
     else:
         skipped = 1.0 - jnp.mean(used.astype(jnp.float32)) / budget_f
+    # weight-side never-issued planes: the static MSR bound capped tile j
+    # below the call's granted budget — the same for every M-tile/row, so
+    # it broadcasts; skipped_frac above already compounds with it (the
+    # bound caps planes_used), this field attributes the static share.
+    bounded = jnp.broadcast_to(
+        jnp.maximum(npl_scalar.astype(jnp.int32) - bnd, 0)[None, :],
+        used.shape)
     return out, DslotStats(planes_used=used, n_planes=D,
-                           skipped_frac=skipped, row_planes_used=rows_used)
+                           skipped_frac=skipped, row_planes_used=rows_used,
+                           planes_bounded=bounded)
 
 
 @jax.jit
@@ -383,6 +429,22 @@ def dslot_execute(prepared: DslotWeights, x: jax.Array, *,
 @functools.partial(jax.jit, static_argnames=(
     "n_bits", "n_planes", "relu", "block_m", "block_n", "block_k", "backend",
     "sort_columns", "signed"))
+def _dslot_matmul_fused(x: jax.Array, w: jax.Array, *, n_bits: int = 8,
+                        n_planes: int | None = None, relu: bool = True,
+                        block_m: int = 128, block_n: int = 128,
+                        block_k: int | None = None,
+                        backend: str = "auto", sort_columns: bool = False,
+                        signed: bool = False
+                        ) -> tuple[jax.Array, DslotStats]:
+    D = min(n_planes or n_bits, n_bits)
+    prepared = dslot_prepare(
+        w, n_bits=n_bits, relu=relu, signed=signed,
+        sort_columns=sort_columns, block_m=block_m, block_n=block_n,
+        block_k=block_k, backend=backend)
+    return _execute_core(prepared, x, jnp.asarray(D, jnp.int32),
+                         static_planes=D)
+
+
 def dslot_matmul(x: jax.Array, w: jax.Array, *, n_bits: int = 8,
                  n_planes: int | None = None, relu: bool = True,
                  block_m: int = 128, block_n: int = 128,
@@ -394,13 +456,28 @@ def dslot_matmul(x: jax.Array, w: jax.Array, *, n_bits: int = 8,
 
     Kept for benchmarks and ad-hoc calls; layers and serving use the split
     ``dslot_prepare``/``dslot_execute`` so weight lowering is amortized.
-    ``n_planes`` here is STATIC (the plane tensor is sliced, the kernel grid
-    shrinks); use ``dslot_execute`` for runtime precision.
+    ``n_planes`` here is STATIC (the kernel grid shrinks); use
+    ``dslot_execute`` for runtime precision.
+
+    Weight-side grid trim: since ``n_planes`` is static here, a concrete
+    ``w`` whose global MSR plane bound is below ``n_bits`` (every column
+    output-inert — the bound is a per-column property, invariant under the
+    prepare-time sort/pad) shrinks the static plane axis itself, not just
+    the per-tile predicate (clamped to one plane: the grid cannot be
+    empty, and planes beyond a tile's bound are exact no-ops).  Traced
+    callers (``w`` under jit) skip the eager check and rely on the
+    per-tile SMEM bound inside the kernel.
     """
     D = min(n_planes or n_bits, n_bits)
-    prepared = dslot_prepare(
-        w, n_bits=n_bits, relu=relu, signed=signed,
-        sort_columns=sort_columns, block_m=block_m, block_n=block_n,
-        block_k=block_k, backend=backend)
-    return _execute_core(prepared, x, jnp.asarray(D, jnp.int32),
-                         static_planes=D)
+    if not isinstance(w, jax.core.Tracer):
+        import numpy as np
+        wn = np.asarray(jax.device_get(w))
+        inert = (wn == 0.0).all(axis=0)
+        if relu and not signed:
+            inert |= (wn <= 0.0).all(axis=0)
+        if bool(inert.all()):
+            D = 1
+    return _dslot_matmul_fused(
+        x, w, n_bits=n_bits, n_planes=D, relu=relu, block_m=block_m,
+        block_n=block_n, block_k=block_k, backend=backend,
+        sort_columns=sort_columns, signed=signed)

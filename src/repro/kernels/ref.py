@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from repro.core.digits import fixed_to_sd
 
 __all__ = ["make_planes", "sd_digit_plane", "dslot_matmul_ref",
-           "plane_value_ref"]
+           "plane_value_ref", "csd_matmul_ref"]
 
 
 def make_planes(a_q: jax.Array, n_bits: int, n_planes: int | None = None
@@ -77,6 +77,31 @@ def dslot_matmul_ref(planes: jax.Array, w: jax.Array, n_bits: int,
     def body(d, acc):
         scale = jnp.exp2(jnp.asarray(n_bits - 1 - d, jnp.float32))
         return acc + scale * jnp.dot(planes[d].astype(jnp.float32), w,
+                                     preferred_element_type=jnp.float32)
+
+    acc = jax.lax.fori_loop(0, D, body, jnp.zeros((M, w.shape[1]), jnp.float32))
+    return jnp.maximum(acc, 0.0) if relu else acc
+
+
+def csd_matmul_ref(planes: jax.Array, w: jax.Array, n_bits: int,
+                   relu: bool = False) -> jax.Array:
+    """Oracle for the CSD/Booth enumeration prototype (``core.csd``).
+
+    Same MSDF plane-by-plane evaluation as ``dslot_matmul_ref`` but over
+    CSD digit planes: plane ``p`` of ``core.csd.csd_recode`` carries weight
+    ``2^(n_bits - p)`` (one position higher than binary — CSD of an n-bit
+    magnitude can carry into ``2^n_bits``), and there are ``n_bits + 1``
+    planes.  With integer-valued ``w`` every step is exact in f32, so this
+    must equal ``q @ w`` bit-for-bit — the bench's exactness gate.
+
+    planes: (n_bits + 1, M, K) int8;  w: (K, N) float32.
+    """
+    D, M, K = planes.shape
+    w = w.astype(jnp.float32)
+
+    def body(p, acc):
+        scale = jnp.exp2(jnp.asarray(n_bits - p, jnp.float32))
+        return acc + scale * jnp.dot(planes[p].astype(jnp.float32), w,
                                      preferred_element_type=jnp.float32)
 
     acc = jax.lax.fori_loop(0, D, body, jnp.zeros((M, w.shape[1]), jnp.float32))

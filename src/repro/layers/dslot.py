@@ -21,11 +21,12 @@ layers, now built on the **prepare/execute split** (``kernels.ops``):
   row-masking pass outside the kernel (see ``kernels/ops.py``).
 
 Per-call statistics (``planes_used``, ``skipped_frac``, per-row effective
-planes) surface both as return values and through the
-``repro.models.stats`` side channel (keys ``{name}.skipped_frac`` /
-``{name}.planes_used_mean`` / ``{name}.row_planes_used``), so serving and
-benchmark entry points can report the paper's energy-saving proxy per layer
-and per request.
+planes, weight-side ``planes_bounded``) surface both as return values and
+through the ``repro.models.stats`` side channel (keys
+``{name}.skipped_frac`` / ``{name}.planes_used_mean`` /
+``{name}.row_planes_used`` / ``{name}.planes_bounded_mean``), so serving
+and benchmark entry points can report the paper's energy-saving proxy per
+layer and per request.
 
 ``DslotConv2d`` lowers convolution through ``core.conv.im2col`` (valid or
 same padding) so conv SOPs hit exactly the same kernel datapath as dense
@@ -56,12 +57,15 @@ class DslotLayerStats(NamedTuple):
     n_planes: int
     skipped_frac: jax.Array      # scalar f32 — fraction of planes skipped
     row_planes_used: jax.Array | None = None  # (rows,) f32 effective planes
+    planes_bounded: jax.Array | None = None  # (Mt, Nt) int32 — planes never
+                                 # issued: static weight-side MSR bound
 
     @classmethod
     def of(cls, name: str, st: DslotStats) -> "DslotLayerStats":
         return cls(name=name, planes_used=st.planes_used,
                    n_planes=st.n_planes, skipped_frac=st.skipped_frac,
-                   row_planes_used=st.row_planes_used)
+                   row_planes_used=st.row_planes_used,
+                   planes_bounded=st.planes_bounded)
 
 
 def _record(name: str, st: DslotStats) -> None:
@@ -70,6 +74,9 @@ def _record(name: str, st: DslotStats) -> None:
                          jnp.mean(st.planes_used.astype(jnp.float32)))
     if st.row_planes_used is not None:
         stats_channel.record(f"{name}.row_planes_used", st.row_planes_used)
+    if st.planes_bounded is not None:
+        stats_channel.record(f"{name}.planes_bounded_mean",
+                             jnp.mean(st.planes_bounded.astype(jnp.float32)))
 
 
 def _resolve_precision(name: str, explicit, static_default):

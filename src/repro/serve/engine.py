@@ -80,6 +80,7 @@ from repro.serve.result import GenerateResult
 from repro.serve.slo import STANDARD, TIERS, SloController, SloSignals
 
 _ROWKEY = "mlp_up_dslot.row_planes_used"
+_BNDKEY = "mlp_up_dslot.planes_bounded_mean"
 
 # one DeprecationWarning per legacy surface per process — enough to nudge a
 # migration without drowning a driving loop in repeats
@@ -115,6 +116,16 @@ def _collapse_rows(sink: dict, batch: int) -> jax.Array | None:
     if not vals:
         return None
     return jnp.mean(jnp.stack(vals), axis=0)
+
+
+def _collapse_bounded(sink: dict) -> jax.Array | None:
+    """Mean weight-side never-issued planes per tile across the step's DSLOT
+    MLP calls (scalar — the static MSR bound is request-independent)."""
+    vals = [jnp.mean(jnp.asarray(v, jnp.float32))
+            for v in sink.get(_BNDKEY, [])]
+    if not vals:
+        return None
+    return jnp.mean(jnp.stack(vals))
 
 
 def generate(model: Model, params, batch: dict, max_new_tokens: int,
@@ -161,7 +172,10 @@ def generate(model: Model, params, batch: dict, max_new_tokens: int,
                 with stats_channel.collect() as sink:
                     lg, state = model.decode_step(params, state, tok[:, None])
                 rows = _collapse_rows(sink, B)
+                bnd = _collapse_bounded(sink)
                 st = {} if rows is None else {"rows": rows}
+                if bnd is not None:
+                    st["bounded"] = bnd
             else:
                 lg, state = model.decode_step(params, state, tok[:, None])
                 st = {}
@@ -186,8 +200,10 @@ def generate(model: Model, params, batch: dict, max_new_tokens: int,
             granted = budget = float(model.cfg.dslot.n_planes
                                      or model.cfg.dslot.n_bits)
         skipped = 1.0 - used / budget
+    bounded = jnp.mean(sts["bounded"]) if "bounded" in sts else None
     result = GenerateResult(tokens=toks, n_planes=granted,
                             planes_used_mean=used, skipped_frac=skipped,
+                            planes_bounded_mean=bounded,
                             steps=max_new_tokens, phase=DONE)
     if return_stats is True:
         return toks, result.stats
@@ -292,6 +308,7 @@ class ServeEngine:
         self.next_tok = np.zeros(self.n_slots, np.int32)
         self.last_budget: np.ndarray | None = None  # budgets of last decode
         self._acc_planes = np.zeros(self.n_slots, np.float64)
+        self._acc_bounded = np.zeros(self.n_slots, np.float64)
         self._acc_steps = np.zeros(self.n_slots, np.int64)
         self._steps = 0
         self._ttft_obs: list[int] = []     # TTFTs landed since last signal
@@ -308,7 +325,11 @@ class ServeEngine:
             with stats_channel.collect() as sink, precision_scope(npl):
                 lg, st2 = model.decode_step(p, st, t)
             rows = _collapse_rows(sink, self.n_slots)
-            return lg, st2, {} if rows is None else {"rows": rows}
+            bnd = _collapse_bounded(sink)
+            aux = {} if rows is None else {"rows": rows}
+            if bnd is not None:
+                aux["bounded"] = bnd
+            return lg, st2, aux
 
         self._decode = jax.jit(_decode)
 
@@ -482,6 +503,7 @@ class ServeEngine:
             self.slot_req[i] = task.req
             task.req.phase = DECODING
             self._acc_planes[i] = 0.0
+            self._acc_bounded[i] = 0.0
             self._acc_steps[i] = 0
             # first token through the engine's sample fn (greedy by default),
             # matching what ``generate`` does with its prefill logits
@@ -512,6 +534,8 @@ class ServeEngine:
         nxt = np.asarray(jax.device_get(self.sample(logits)))
         rows = np.asarray(jax.device_get(aux["rows"])) \
             if "rows" in aux else None
+        bounded = float(jax.device_get(aux["bounded"])) \
+            if "bounded" in aux else None
         self._last_rows_mean = None if rows is None else float(rows.mean())
         finished = []
         for i, req in enumerate(self.slot_req):
@@ -529,6 +553,8 @@ class ServeEngine:
             self.next_tok[i] = nxt[i]
             if rows is not None:
                 self._acc_planes[i] += float(rows[i])
+                if bounded is not None:
+                    self._acc_bounded[i] += bounded
                 self._acc_steps[i] += 1
             if len(req.out) >= req.max_new:
                 req.done = True
@@ -539,17 +565,18 @@ class ServeEngine:
         return finished
 
     def _result_of(self, req: Request, granted=None, used=None,
-                   skipped=None) -> GenerateResult:
+                   skipped=None, bounded=None) -> GenerateResult:
         return GenerateResult(
             tokens=list(req.out), n_planes=granted,
             planes_used_mean=used, skipped_frac=skipped,
+            planes_bounded_mean=bounded,
             ttft_steps=req.ttft_steps,
             steps=None if req.enqueue_step is None
             else self._steps - req.enqueue_step,
             phase=req.phase, uid=req.uid, tier=req.tier)
 
     def _finish_stats(self, i: int, req: Request) -> None:
-        granted = used = skipped = None
+        granted = used = skipped = bounded = None
         if self.dslot and self._acc_steps[i] > 0:
             granted = req.n_planes if req.n_planes is not None \
                 else self.n_bits
@@ -558,19 +585,26 @@ class ServeEngine:
                 # the granted one (e.g. reserved pins full precision)
                 granted = max(int(granted), self.slo.floor(req.tier))
             used = self._acc_planes[i] / self._acc_steps[i]
+            # skipped_frac counts every granted-but-not-executed plane:
+            # activation-side early termination AND the weight-side static
+            # MSR bound (which caps planes_used inside the kernel), so the
+            # two savings compound here; planes_bounded_mean attributes the
+            # static weight-side share on its own.
             skipped = 1.0 - float(used) / float(granted)
+            bounded = self._acc_bounded[i] / self._acc_steps[i]
             fb = PolicyFeedback(n_planes=int(granted),
                                 planes_used_mean=float(used),
                                 skipped_frac=skipped, tier=req.tier)
             req.dslot_stats = {"n_planes": fb.n_planes,
                                "planes_used_mean": fb.planes_used_mean,
-                               "skipped_frac": fb.skipped_frac}
+                               "skipped_frac": fb.skipped_frac,
+                               "planes_bounded_mean": float(bounded)}
             if self.policy is not None:
                 self.policy.observe(fb)
             if self.slo is not None:
                 self.slo.observe(fb)
         req.result = self._result_of(req, granted=granted, used=used,
-                                     skipped=skipped)
+                                     skipped=skipped, bounded=bounded)
 
 
 def _merge_slot(pool_state: dict, one_state: dict, slot: int) -> dict:

@@ -36,7 +36,14 @@ class GenerateResult:
         per-request (B,) array, or None when the digit-serial path is off).
     planes_used_mean: effective digit planes executed per output row —
         the paper's energy proxy (None when DSLOT is off).
-    skipped_frac: fraction of the granted plane budget early-terminated.
+    skipped_frac: fraction of the granted plane budget not executed —
+        activation-side early termination plus the weight-side static MSR
+        bound (the two compound; see planes_bounded_mean for the static
+        share alone).
+    planes_bounded_mean: mean digit planes per output tile never ISSUED
+        because the prepare-time weight-side MSR bound capped the tile
+        (request-independent, so a scalar on both paths; None when DSLOT
+        is off or the prepared weights carry no bound).
     ttft_steps: engine steps from enqueue to first token (engine path).
     steps: engine steps from enqueue to finish (engine path) or the decode
         length (batch path).
@@ -48,6 +55,7 @@ class GenerateResult:
     n_planes: Any = None
     planes_used_mean: Any = None
     skipped_frac: Any = None
+    planes_bounded_mean: Any = None
     ttft_steps: int | None = None
     steps: int | None = None
     phase: str = "done"

@@ -1,0 +1,91 @@
+"""CSD/Booth nonzero-digit enumeration prototype (``core.csd``).
+
+Pins the recoding's value-exactness over the full quantization range at
+every width, the canonical-form properties (digits in {-1,0,+1}, no two
+adjacent nonzeros, minimal weight vs binary), and the integer-domain
+matmul equality against both a plain ``q @ w`` and the MSDF plane oracle
+``kernels.ref.csd_matmul_ref`` — the bit-exactness contract the
+``bench_kernel.py --msr-profile`` head-to-head gates on.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.csd import (binary_digit_count, csd_matmul,
+                            csd_planes_nonzero, csd_recode,
+                            essential_digit_count)
+from repro.kernels.ref import csd_matmul_ref, make_planes
+
+from _hyp import given, settings, st
+
+
+def _reconstruct(planes, n_bits):
+    scales = 2 ** (n_bits - np.arange(n_bits + 1))
+    return (np.asarray(planes, np.int64) * scales.reshape(
+        (-1,) + (1,) * (planes.ndim - 1))).sum(axis=0)
+
+
+def test_csd_exact_full_range_every_width():
+    for n_bits in range(2, 9):
+        q = jnp.arange(-(2 ** n_bits - 1), 2 ** n_bits, dtype=jnp.int32)
+        planes = csd_recode(q, n_bits)
+        assert planes.shape == (n_bits + 1, q.shape[0])
+        np.testing.assert_array_equal(_reconstruct(planes, n_bits),
+                                      np.asarray(q))
+        p = np.asarray(planes)
+        assert set(np.unique(p)) <= {-1, 0, 1}
+        nz = p != 0
+        assert not (nz[1:] & nz[:-1]).any(), f"adjacent nonzeros @ {n_bits}"
+
+
+@settings(max_examples=16, deadline=None)
+@given(n_bits=st.integers(2, 8), seed=st.integers(0, 2**16))
+def test_csd_minimal_weight_vs_binary(n_bits, seed):
+    """CSD is the minimal-weight signed-digit form: never more nonzero
+    digits than plain binary, strictly fewer in expectation."""
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.integers(-(2 ** n_bits - 1), 2 ** n_bits,
+                                 size=(64,)), jnp.int32)
+    planes = csd_recode(q, n_bits)
+    assert int(essential_digit_count(planes)) <= \
+        int(binary_digit_count(q, n_bits))
+
+
+def test_csd_matmul_integer_exact():
+    rng = np.random.default_rng(9)
+    q = jnp.asarray(rng.integers(-255, 256, size=(16, 24)), jnp.int32)
+    w_q = jnp.asarray(rng.integers(-127, 128, size=(24, 8)), jnp.int32)
+    out, nz_planes = csd_matmul(q, w_q, 8)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(q) @ np.asarray(w_q))
+    assert 0 < int(nz_planes) <= 9
+
+
+def test_csd_matmul_ref_matches_integer_product():
+    """The kernels-side oracle (f32 MSDF plane evaluation) is exact on
+    integer-valued weights and agrees with the core integer path."""
+    rng = np.random.default_rng(4)
+    q = jnp.asarray(rng.integers(0, 256, size=(8, 16)), jnp.int32)
+    w_q = rng.integers(-15, 16, size=(16, 6))
+    planes = csd_recode(q, 8)
+    y_ref = csd_matmul_ref(planes, jnp.asarray(w_q, jnp.float32), 8)
+    y_int, _ = csd_matmul(q, jnp.asarray(w_q, jnp.int32), 8)
+    np.testing.assert_array_equal(np.asarray(y_ref),
+                                  np.asarray(y_int).astype(np.float32))
+
+
+def test_csd_sparser_than_dense_planes():
+    """Work accounting on a realistic activation profile: essential CSD
+    digits < nonzero binary digits < dense digit slots the plane scan
+    issues; all-zero inputs need zero planes."""
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(np.clip(np.round(np.abs(rng.normal(
+        size=(32, 32))) * 40), 0, 255), jnp.int32)
+    csd = csd_recode(q, 8)
+    dense = make_planes(q, 8)
+    essential = int(essential_digit_count(csd))
+    binary = int(essential_digit_count(dense))
+    assert essential <= binary < 8 * q.size
+    assert int(binary_digit_count(q, 8)) == binary
+    assert int(csd_planes_nonzero(csd_recode(jnp.zeros((4, 4),
+                                             jnp.int32), 8))) == 0

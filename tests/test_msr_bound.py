@@ -1,0 +1,194 @@
+"""Weight-side MSR static plane bound: exactness, trimming, backend mirror.
+
+The bound (``DslotWeights.msr_bound``, from ``core.msr.tile_plane_bound``)
+is a pure work-saving: ``dslot_prepare`` only emits output-exact per-tile
+caps (exactly-zero tiles in every mode; all-non-positive tiles under
+unsigned+ReLU), so execution with the bound must be bit-identical to
+execution without it at every precision — the property test sweeps
+``(n_bits, n_planes, signed, relu)``.  The deterministic tests pin the
+pallas kernel (SMEM per-j bound scalar) against the jnp replay, assert the
+bound actually trims ``planes_used`` on near-zero weight tiles, and pin
+the mechanism itself with an injected partial bound table (any (Nt,)
+values — the exact-only policy lives in prepare, not in the kernels).
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.msr import (msr_depths, msr_histogram, quantize_weights,
+                            tile_plane_bound)
+from repro.kernels.ops import dslot_execute, dslot_matmul, dslot_prepare
+
+from _hyp import given, settings, st
+
+
+def _weights_with_inert_tiles(rng, K, N):
+    """Weights with exactly-zero and all-non-positive column runs."""
+    w = rng.normal(size=(K, N)).astype(np.float32)
+    w[:, N // 4: N // 2] = 0.0
+    w[:, 3 * N // 4:] = -np.abs(w[:, 3 * N // 4:])
+    return w
+
+
+@settings(max_examples=24, deadline=None)
+@given(n_bits=st.integers(2, 8), rel_planes=st.integers(1, 8),
+       signed=st.booleans(), relu=st.booleans(), seed=st.integers(0, 2**16))
+def test_bound_bit_exact_every_mode(n_bits, rel_planes, signed, relu, seed):
+    """Outputs with the static bound == without, at every (n_bits,
+    n_planes, signed/unsigned, relu) combination — the exactness contract
+    of ``dslot_prepare(msr_bound=True)``."""
+    n_planes = min(rel_planes, n_bits)
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(6, 16)).astype(np.float32)
+    if not signed:
+        x = np.abs(x)
+    w = jnp.asarray(_weights_with_inert_tiles(rng, 16, 8))
+    kw = dict(n_bits=n_bits, relu=relu, signed=signed, block_m=2,
+              block_n=2, backend="jnp")
+    yb, sb = dslot_execute(dslot_prepare(w, **kw), jnp.asarray(x),
+                           n_planes=n_planes)
+    yu, su = dslot_execute(dslot_prepare(w, msr_bound=False, **kw),
+                           jnp.asarray(x), n_planes=n_planes)
+    np.testing.assert_array_equal(np.asarray(yb), np.asarray(yu))
+    # the bound can only reduce issued planes, never add
+    assert int(jnp.sum(sb.planes_used)) <= int(jnp.sum(su.planes_used))
+    assert int(jnp.sum(su.planes_bounded)) == 0
+
+
+def test_bound_bit_exact_exhaustive_combos():
+    """Deterministic exhaustive sweep of the same contract (runs even where
+    hypothesis is unavailable): every (n_bits, n_planes, signed, relu)."""
+    rng = np.random.default_rng(0)
+    x_base = rng.normal(size=(6, 16)).astype(np.float32)
+    w = jnp.asarray(_weights_with_inert_tiles(rng, 16, 8))
+    for n_bits in (2, 4, 8):
+        for n_planes in sorted({1, n_bits // 2, n_bits} - {0}):
+            for signed in (False, True):
+                for relu in (False, True):
+                    x = jnp.asarray(x_base if signed else np.abs(x_base))
+                    kw = dict(n_bits=n_bits, relu=relu, signed=signed,
+                              block_m=2, block_n=2, backend="jnp")
+                    yb, sb = dslot_execute(dslot_prepare(w, **kw), x,
+                                           n_planes=n_planes)
+                    yu, _ = dslot_execute(
+                        dslot_prepare(w, msr_bound=False, **kw), x,
+                        n_planes=n_planes)
+                    np.testing.assert_array_equal(
+                        np.asarray(yb), np.asarray(yu),
+                        err_msg=f"{n_bits=} {n_planes=} {signed=} {relu=}")
+                    assert int(jnp.sum(sb.planes_bounded)) > 0
+
+
+def test_pallas_jnp_mirror_with_bound():
+    """Same inputs, both backends, bound active: identical outputs AND
+    identical per-tile planes_used / planes_bounded accounting."""
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(np.abs(rng.normal(size=(8, 16))).astype(np.float32))
+    w = jnp.asarray(_weights_with_inert_tiles(rng, 16, 8))
+    kw = dict(n_bits=8, relu=True, signed=False, block_m=4, block_n=2)
+    pj = dslot_prepare(w, backend="jnp", **kw)
+    pp = dslot_prepare(w, backend="pallas", **kw)
+    np.testing.assert_array_equal(np.asarray(pj.msr_bound),
+                                  np.asarray(pp.msr_bound))
+    for npl in (8, 5, jnp.asarray([1, 8, 2, 8, 3, 8, 4, 6], jnp.int32)):
+        yj, sj = dslot_execute(pj, x, n_planes=npl)
+        yp, sp = dslot_execute(pp, x, n_planes=npl)
+        np.testing.assert_array_equal(np.asarray(yj), np.asarray(yp))
+        np.testing.assert_array_equal(np.asarray(sj.planes_used),
+                                      np.asarray(sp.planes_used))
+        np.testing.assert_array_equal(np.asarray(sj.planes_bounded),
+                                      np.asarray(sp.planes_bounded))
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_bound_trims_planes_on_near_zero_tiles(backend):
+    """Near-zero weight tiles: without the bound the non-relu path runs all
+    planes; with it, exactly-zero tiles are never issued at all."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(np.abs(rng.normal(size=(4, 16))).astype(np.float32))
+    w = rng.normal(size=(16, 8)).astype(np.float32)
+    w[:, 2:6] = 0.0                               # tiles 1 and 2 at bn=2
+    kw = dict(n_bits=8, relu=False, signed=False, block_m=4, block_n=2,
+              backend=backend)
+    pb = dslot_prepare(jnp.asarray(w), **kw)
+    pu = dslot_prepare(jnp.asarray(w), msr_bound=False, **kw)
+    assert list(np.asarray(pb.msr_bound)) == [8, 0, 0, 8]
+    yb, sb = dslot_execute(pb, x)
+    yu, su = dslot_execute(pu, x)
+    np.testing.assert_array_equal(np.asarray(yb), np.asarray(yu))
+    assert np.asarray(sb.planes_used)[:, 1:3].max() == 0
+    assert np.asarray(su.planes_used).min() == 8   # relu off: all planes run
+    assert np.asarray(sb.planes_bounded)[:, 1:3].min() == 8
+    # skipped_frac accounts the weight-side savings (compounding contract)
+    assert float(sb.skipped_frac) > float(su.skipped_frac)
+
+
+def test_injected_partial_bound_mechanism():
+    """The kernels honour ANY (Nt,) bound table (mechanism), even partial
+    caps prepare's exact-only policy would never emit: per-tile planes_used
+    == min(bound, granted) on a non-relu run, pallas == jnp."""
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(np.abs(rng.normal(size=(4, 16))).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(16, 8)).astype(np.float32))
+    table = jnp.asarray([0, 3, 5, 8], jnp.int32)
+    outs = []
+    for backend in ("jnp", "pallas"):
+        p = dslot_prepare(w, n_bits=8, relu=False, block_m=4, block_n=2,
+                          backend=backend)
+        p = dataclasses.replace(p, msr_bound=table)
+        y, st_ = dslot_execute(p, x)
+        assert np.asarray(st_.planes_used).tolist() == [[0, 3, 5, 8]]
+        assert np.asarray(st_.planes_bounded).tolist() == [[8, 5, 3, 0]]
+        outs.append(np.asarray(y))
+    np.testing.assert_array_equal(outs[0], outs[1])
+
+
+def test_fused_path_grid_trim_on_global_bound():
+    """The fused one-shot path trims its STATIC plane axis when every
+    column is weight-side inert (clamped to one plane), and stays at full
+    depth otherwise."""
+    x = jnp.asarray(np.abs(np.random.default_rng(0).normal(
+        size=(4, 16))).astype(np.float32))
+    y0, st0 = dslot_matmul(x, jnp.zeros((16, 8)), block_m=4, block_n=2,
+                           backend="jnp")
+    assert st0.n_planes == 1
+    assert float(jnp.abs(y0).max()) == 0.0
+    w = jnp.asarray(np.random.default_rng(1).normal(
+        size=(16, 8)).astype(np.float32))
+    _, st1 = dslot_matmul(x, w, block_m=4, block_n=2, backend="jnp")
+    assert st1.n_planes == 8
+
+
+def test_tile_plane_bound_rules():
+    """Exact-only policy: zero tiles bound 0 always; non-positive tiles
+    bound 0 only under unsigned+ReLU; everything else full depth."""
+    rng = np.random.default_rng(5)
+    w = np.zeros((8, 8), np.float32)
+    w[:, 0:2] = rng.normal(size=(8, 2))
+    w[:, 4:6] = -np.abs(rng.normal(size=(8, 2)))
+    w = jnp.asarray(w)                             # tiles: mixed, 0, -, 0
+    b = tile_plane_bound(w, 2, n_bits=8, relu=True, signed=False)
+    assert list(np.asarray(b)) == [8, 0, 0, 0]
+    for relu, signed in ((True, True), (False, False), (False, True)):
+        b = tile_plane_bound(w, 2, n_bits=8, relu=relu, signed=signed)
+        assert list(np.asarray(b)) == [8, 0, 8, 0], (relu, signed)
+
+
+def test_msr_depths_and_histogram():
+    """MSR depth = n_bits - bitlength(|w_q|) (SNIPPETS definition) and the
+    MSR-N fractions are a valid cumulative distribution."""
+    d = msr_depths(jnp.asarray([0, 1, -1, 7, 8, 127, -127], jnp.int32), 8)
+    assert list(np.asarray(d)) == [8, 7, 7, 5, 4, 1, 1]
+    w = jnp.asarray(np.random.default_rng(2).normal(
+        size=(32, 32)).astype(np.float32) * 0.05)
+    h = msr_histogram(w, 8)
+    assert sum(h["depth_counts"]) == 32 * 32
+    ge = [h["msr_ge"][k] for k in ("3", "4", "5", "6")]
+    assert all(0.0 <= f <= 1.0 for f in ge)
+    assert ge == sorted(ge, reverse=True)          # cumulative: MSR-3 >= MSR-4
+    # quantize_weights maps max|w| to the qmax bucket (depth 1)
+    q = quantize_weights(w, 8)
+    assert int(jnp.max(jnp.abs(q))) == 127

@@ -39,9 +39,9 @@ KERNELS_ALL = {
     "DslotMatmulOut", "DslotStats", "DslotWeights", "dslot_matmul",
     "dslot_prepare", "dslot_execute", "calibrate_scale",
     "prepare_call_count", "dslot_matmul_pallas",
-    "dslot_matmul_pallas_batched", "select_block_k", "q_storage_dtype",
-    "quantize_activations", "dslot_matmul_ref", "make_planes",
-    "sd_digit_plane",
+    "dslot_matmul_pallas_batched", "colsum_tables", "select_block_k",
+    "q_storage_dtype", "quantize_activations", "dslot_matmul_ref",
+    "csd_matmul_ref", "make_planes", "sd_digit_plane",
 }
 
 
@@ -89,7 +89,7 @@ def test_serve_config_fields_pinned():
 def test_generate_result_fields_pinned():
     assert {f.name for f in GenerateResult.__dataclass_fields__.values()} == {
         "tokens", "n_planes", "planes_used_mean", "skipped_frac",
-        "ttft_steps", "steps", "phase", "uid", "tier"}
+        "planes_bounded_mean", "ttft_steps", "steps", "phase", "uid", "tier"}
 
 
 # ------------------------------------------------------- deprecation shims
