@@ -15,6 +15,15 @@ This implementation keeps the capacity-slot layout of ``apply_moe``: after
 the (T, K) -> (E, C, D) dispatch buffer is built locally, the E axis is
 exchanged so each device holds its experts' slots for ALL source devices,
 runs the FFN, and the inverse a2a returns outputs to token owners.
+
+Per-expert plane budgets (``expert_planes``): the DSLOT digit-serial idea
+applied at expert granularity — each expert's input activations are
+truncated to that expert's most significant ``expert_planes[e]`` digit
+planes (MSDF order) before its FFN runs, so cold/degradable experts spend
+fewer digit planes than hot ones.  The budget vector shards over ``axis``
+with the expert weights (each device truncates only its own experts,
+after the first a2a).  Budgets >= ``n_bits`` are EXACT no-ops, preserving
+the dense-forward equivalence; budgets below truncate deterministically.
 """
 
 from __future__ import annotations
@@ -28,16 +37,40 @@ from repro.models.mlp import _ACTS
 from repro.models.moe import moe_capacity
 
 
-def apply_moe_ep(p, x, cfg, mesh: Mesh, axis: str = "model"):
+def _truncate_planes(xb, planes, n_bits):
+    """Keep each local expert's top ``planes[e]`` MSDF digit planes of its
+    (C, D) input slice.  ``planes >= n_bits`` rows pass through untouched
+    (bit-exact): the where() below selects the raw input, so quantization
+    round-off never leaks into full-budget experts."""
+    qmax = float(2 ** (n_bits - 1) - 1)
+    amax = jnp.maximum(jnp.max(jnp.abs(xb), axis=(1, 2)), 1e-12)  # (E/ep,)
+    step = (amax / qmax)[:, None, None]
+    q = jnp.clip(jnp.round(xb / step), -qmax, qmax).astype(jnp.int32)
+    shift = jnp.clip(n_bits - planes, 0, n_bits).astype(jnp.int32)
+    kept = jnp.right_shift(jnp.abs(q), shift[:, None, None])
+    kept = jnp.left_shift(kept, shift[:, None, None])
+    xq = (jnp.sign(q) * kept).astype(xb.dtype) * step
+    return jnp.where((planes < n_bits)[:, None, None], xq, xb)
+
+
+def apply_moe_ep(p, x, cfg, mesh: Mesh, axis: str = "model",
+                 expert_planes=None, n_bits: int = 8):
     """Expert-parallel MoE forward.  x: (B, S, D) sharded P((pod,data)...)
     on batch; experts sharded over ``axis``.  Requires E % mesh[axis] == 0.
-    Returns (y, aux) like ``apply_moe``."""
+    Returns (y, aux) like ``apply_moe``.
+
+    ``expert_planes``: optional (E,) i32 per-expert digit-plane budget
+    (module docstring) — entries >= ``n_bits`` are exact no-ops.
+    """
     E, K = cfg.n_experts, cfg.top_k
     ep = mesh.shape[axis]
     assert E % ep == 0, (E, ep)
     act = _ACTS[cfg.act]
+    planes_all = (jnp.full((E,), n_bits, jnp.int32) if expert_planes is None
+                  else jnp.asarray(expert_planes, jnp.int32))
+    assert planes_all.shape == (E,), planes_all.shape
 
-    def body(xl, router, up, gate, down):
+    def body(xl, router, up, gate, down, planes):
         # xl: (Bl, S, D) tokens local to this device along batch;
         # up/gate/down: (E/ep, D, F) — this device's experts.
         Bl, S, D = xl.shape
@@ -74,6 +107,10 @@ def apply_moe_ep(p, x, cfg, mesh: Mesh, axis: str = "model"):
                                 tiled=False)                 # (ep, E/ep, C, D)
         xb = jnp.moveaxis(xb, 0, 1).reshape(E // ep, ep * C, D)
 
+        # per-expert digit-plane budget: truncate this device's experts'
+        # inputs to their granted MSDF planes (exact no-op at full budget)
+        xb = _truncate_planes(xb, planes, n_bits)
+
         h = jnp.einsum("ecd,edf->ecf", xb, up)
         if cfg.glu:
             h = act(jnp.einsum("ecd,edf->ecf", xb, gate)) * h
@@ -97,13 +134,13 @@ def apply_moe_ep(p, x, cfg, mesh: Mesh, axis: str = "model"):
     # outputs are replicated across the model axis by construction (every
     # model rank holds the same tokens); the static vma checker cannot prove
     # data-dependent replication, so it is disabled.
+    in_specs = (P(bspec), P(), P(axis), P(axis), P(axis), P(axis))
     try:
-        sm = shard_map(body, mesh=mesh,
-                       in_specs=(P(bspec), P(), P(axis), P(axis), P(axis)),
+        sm = shard_map(body, mesh=mesh, in_specs=in_specs,
                        out_specs=(P(bspec), P(axis)), check_vma=False)
     except TypeError:                                  # older kwarg name
-        sm = shard_map(body, mesh=mesh,
-                       in_specs=(P(bspec), P(), P(axis), P(axis), P(axis)),
+        sm = shard_map(body, mesh=mesh, in_specs=in_specs,
                        out_specs=(P(bspec), P(axis)), check_rep=False)
-    y, aux = sm(x, p["router"], p["up"], p.get("gate", p["up"]), p["down"])
+    y, aux = sm(x, p["router"], p["up"], p.get("gate", p["up"]), p["down"],
+                planes_all)
     return y, jnp.mean(aux)

@@ -47,6 +47,21 @@ permutation — exactly the paper's stationary-weight assumption) clusters
 ReLU-dead neurons into contiguous tiles, which measurably raises the
 skipped-pass fraction.  The inverse permutation is applied to the output, so
 results are unchanged.
+
+Tensor parallelism (``dslot_prepare(mesh=..., tp_axis=...)``): the prepared
+state shards along the OUTPUT (N) axis at tile granularity across the mesh's
+``tp_axis`` — the software analogue of replicating the paper's PE array.
+Early termination is a per-N-tile decision and the |W| colsum termination
+tables and MSR plane bounds are per-column/per-tile, so every shard runs the
+SAME kernel on its own column slice with its own termination tables and no
+cross-device coordination; outputs and per-tile ``planes_used`` concatenate
+back (``shard_map`` with the activations replicated), and the global
+``DslotStats`` accounting is computed from the reassembled arrays exactly as
+in the single-device path — results and statistics are bit-identical to
+``mesh=None`` (pinned by ``tests/test_tensor_parallel.py``).  When the tile
+count does not divide the shard count, extra all-zero N-tiles (plane bound
+0 — exact no-ops, the ``core.msr`` mechanism) pad the shard layout and are
+sliced off after the gather.  See ``docs/distributed.md``.
 """
 
 from __future__ import annotations
@@ -57,6 +72,9 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
 
 from repro.core.msr import tile_plane_bound
 
@@ -121,18 +139,26 @@ class DslotWeights:
     backend: str = "jnp"          # resolved: "pallas" | "jnp"
     d_in: int = 0                 # K before padding
     d_out: int = 0                # N before padding
+    mesh: Mesh | None = None      # tensor-parallel device mesh, or None =
+                                  # single-device execution
+    tp_axis: str = "model"        # mesh axis the N (output) tiles shard over
 
     def tree_flatten(self):
         children = (self.w, self.suffix_colsum, self.total_colsum,
                     self.inv_perm, self.x_scale, self.msr_bound)
         aux = (self.n_bits, self.relu, self.signed, self.block_m,
                self.block_n, self.block_k, self.backend, self.d_in,
-               self.d_out)
+               self.d_out, self.mesh, self.tp_axis)
         return children, aux
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(*children, *aux)
+
+    @property
+    def tp_shards(self) -> int:
+        """Tensor-parallel shard count (1 when unsharded)."""
+        return 1 if self.mesh is None else int(self.mesh.shape[self.tp_axis])
 
     def with_scale(self, x_scale) -> "DslotWeights":
         """Attach a calibrated activation scale (see ``calibrate_scale``)."""
@@ -174,7 +200,8 @@ def dslot_prepare(w: jax.Array, *, n_bits: int = 8, relu: bool = True,
                   block_m: int = 128, block_n: int = 128,
                   block_k: int | None = None, backend: str = "auto",
                   x_scale: jax.Array | None = None,
-                  msr_bound: bool = True) -> DslotWeights:
+                  msr_bound: bool = True, mesh: Mesh | None = None,
+                  tp_axis: str = "model") -> DslotWeights:
     """One-time weight lowering: sort, pad, pick ``block_k``, build the
     termination tables and the weight-side MSR plane bound.  Call once per
     layer; reuse across every request.
@@ -189,11 +216,20 @@ def dslot_prepare(w: jax.Array, *, n_bits: int = 8, relu: bool = True,
     tile — and, under unsigned+ReLU, all-non-positive tiles) get bound 0
     and are never issued by any backend.  Only output-exact bounds are
     emitted, so results are bit-identical to ``msr_bound=False``.
+
+    ``mesh``/``tp_axis`` make every subsequent ``dslot_execute`` run
+    tensor-parallel: N tiles shard across ``mesh.shape[tp_axis]`` devices
+    under ``shard_map``, each shard terminating against its own slice of
+    the colsum tables and MSR bounds (see the module docstring).  Results
+    are bit-identical to ``mesh=None``.
     """
     global _PREPARE_CALLS
     _PREPARE_CALLS += 1
     if backend == "auto":
         backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if mesh is not None and tp_axis not in mesh.axis_names:
+        raise ValueError(
+            f"tp_axis {tp_axis!r} not in mesh axes {mesh.axis_names}")
     K, N = w.shape
 
     inv_perm = None
@@ -215,7 +251,8 @@ def dslot_prepare(w: jax.Array, *, n_bits: int = 8, relu: bool = True,
         w=w_p, suffix_colsum=suffix_colsum, total_colsum=total_colsum,
         inv_perm=inv_perm, x_scale=x_scale, msr_bound=bound, n_bits=n_bits,
         relu=relu, signed=signed, block_m=block_m, block_n=block_n,
-        block_k=bk, backend=backend, d_in=K, d_out=N)
+        block_k=bk, backend=backend, d_in=K, d_out=N, mesh=mesh,
+        tp_axis=tp_axis)
 
 
 # ------------------------------------------------------------- execution
@@ -316,6 +353,76 @@ def _jnp_path(q: jax.Array, w: jax.Array, n_bits: int, n_planes: int,
     return out, jnp.minimum(used, npl.astype(jnp.int32))
 
 
+def _run_backend(cfg: DslotWeights, q_p: jax.Array, w: jax.Array,
+                 suffix: jax.Array, total: jax.Array, npl_scalar: jax.Array,
+                 bud_p: jax.Array, bnd: jax.Array, D: int
+                 ) -> tuple[jax.Array, jax.Array]:
+    """One backend invocation on (a shard of) the prepared weights.
+
+    ``w``/``suffix``/``total``/``bnd`` may be the full prepared arrays or a
+    device-local N slice of them — both backends are column-independent, so
+    the same code serves the single-device path and each shard_map body.
+    Returns padded ``(out (Mp, N), planes_used (Mt, Nt))``.
+    """
+    if cfg.backend == "pallas":
+        out_p, used = dslot_matmul_pallas(
+            q_p, w, n_bits=cfg.n_bits, n_planes=D, relu=cfg.relu,
+            block_m=cfg.block_m, block_n=cfg.block_n, block_k=cfg.block_k,
+            n_planes_rt=npl_scalar, row_budget=bud_p,
+            suffix_colsum=suffix, total_colsum=total,
+            plane_bound=bnd, interpret=jax.default_backend() != "tpu")
+        return out_p, jnp.minimum(used, npl_scalar.astype(jnp.int32))
+    return _jnp_path(q_p, w, cfg.n_bits, D, cfg.relu,
+                     cfg.block_m, cfg.block_n, cfg.block_k,
+                     suffix, total[0], npl_scalar, bud_p, bnd)
+
+
+def _sharded_exec(cfg: DslotWeights, q_p: jax.Array, npl_scalar: jax.Array,
+                  bud_p: jax.Array, bnd: jax.Array, D: int
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Tensor-parallel execute: N tiles shard over ``cfg.mesh[cfg.tp_axis]``.
+
+    Activations (and the per-row budget / runtime precision scalar) are
+    replicated; the prepared weight columns, colsum termination tables and
+    per-tile MSR bounds split along N at tile granularity, so each device
+    runs the identical kernel on its slice with its own termination state.
+    When ``Nt`` does not divide the shard count, the layout is padded with
+    all-zero tiles carrying plane bound 0 — exact no-ops by the ``core.msr``
+    mechanism — and the pad is sliced off after the out_specs gather.
+    Bit-identical to the unsharded path (both backends are column-
+    independent); per-shard ``planes_used`` concatenates into the same
+    global (Mt, Nt) table the stats reduction already consumes.
+    """
+    mesh, axis = cfg.mesh, cfg.tp_axis
+    shards = int(mesh.shape[axis])
+    Np = cfg.w.shape[1]
+    Nt = Np // cfg.block_n
+    Nt_pad = -(-Nt // shards) * shards
+    extra = (Nt_pad - Nt) * cfg.block_n
+    w_s = jnp.pad(cfg.w, [(0, 0), (0, extra)])
+    sfx_s = jnp.pad(cfg.suffix_colsum, [(0, 0), (0, extra)])
+    tot_s = jnp.pad(cfg.total_colsum, [(0, 0), (0, extra)])
+    bnd_s = jnp.pad(bnd, (0, Nt_pad - Nt))      # pad tiles: bound 0 = inert
+
+    def body(w_l, sfx_l, tot_l, bnd_l, q_l, bud_l, npl_l):
+        return _run_backend(cfg, q_l, w_l, sfx_l, tot_l, npl_l, bud_l,
+                            bnd_l, D)
+
+    in_specs = (P(None, axis), P(None, axis), P(None, axis), P(axis),
+                P(), P(), P())
+    out_specs = (P(None, axis), P(None, axis))
+    # the pallas backend has no replication rule, so the static vma/rep
+    # checker is disabled (outputs are genuinely axis-sharded anyway)
+    try:
+        sm = shard_map(body, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_vma=False)
+    except TypeError:                                  # older kwarg name
+        sm = shard_map(body, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_rep=False)
+    out_p, used = sm(w_s, sfx_s, tot_s, bnd_s, q_p, bud_p, npl_scalar)
+    return out_p[:, :Np], used[:, :Nt]
+
+
 def _execute_core(prepared: DslotWeights, x: jax.Array, npl: jax.Array,
                   static_planes: int | None = None
                   ) -> tuple[jax.Array, DslotStats]:
@@ -363,19 +470,12 @@ def _execute_core(prepared: DslotWeights, x: jax.Array, npl: jax.Array,
     bnd = jnp.full((Nt,), D, jnp.int32) if cfg.msr_bound is None \
         else jnp.minimum(cfg.msr_bound.astype(jnp.int32), D)
 
-    if cfg.backend == "pallas":
-        out_p, used = dslot_matmul_pallas(
-            q_p, cfg.w, n_bits=cfg.n_bits, n_planes=D, relu=cfg.relu,
-            block_m=cfg.block_m, block_n=cfg.block_n, block_k=cfg.block_k,
-            n_planes_rt=npl_scalar, row_budget=bud_p,
-            suffix_colsum=cfg.suffix_colsum, total_colsum=cfg.total_colsum,
-            plane_bound=bnd, interpret=jax.default_backend() != "tpu")
-        used = jnp.minimum(used, npl_scalar.astype(jnp.int32))
+    if cfg.mesh is not None:
+        out_p, used = _sharded_exec(cfg, q_p, npl_scalar, bud_p, bnd, D)
     else:
-        out_p, used = _jnp_path(q_p, cfg.w, cfg.n_bits, D, cfg.relu,
-                                cfg.block_m, cfg.block_n, cfg.block_k,
-                                cfg.suffix_colsum, cfg.total_colsum[0],
-                                npl_scalar, bud_p, bnd)
+        out_p, used = _run_backend(cfg, q_p, cfg.w, cfg.suffix_colsum,
+                                   cfg.total_colsum, npl_scalar, bud_p,
+                                   bnd, D)
 
     out = out_p[:M, :cfg.d_out] * step
     if cfg.inv_perm is not None:

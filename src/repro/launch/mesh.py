@@ -17,6 +17,17 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_test_mesh(n_devices: int | None = None, model: int = 2):
-    """Small mesh for in-process tests (requires host-device override)."""
+    """Small (data, model) mesh for in-process tests (requires the
+    host-device override, e.g.
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+
+    Raises ``ValueError`` instead of silently building a zero-extent mesh
+    when fewer than ``model`` devices are available.
+    """
     n = n_devices or len(jax.devices())
+    if model < 1 or n // model < 1:
+        raise ValueError(
+            f"make_test_mesh needs at least model={model} devices, have "
+            f"{n}; run under XLA_FLAGS=--xla_force_host_platform_device_"
+            f"count=N (before jax initializes) or lower `model`")
     return jax.make_mesh((n // model, model), ("data", "model"))

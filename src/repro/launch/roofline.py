@@ -104,6 +104,35 @@ def analyze_cell(rec: dict) -> dict:
     }
 
 
+def predict_tp_scaling(m: int, k: int, n: int, shards: int, *,
+                       n_planes: int = 8, bytes_per_el: int = 4,
+                       peak_flops: float = PEAK_FLOPS,
+                       hbm_bw: float = HBM_BW,
+                       link_bw: float = LINK_BW) -> dict:
+    """Roofline-model prediction for one N-sharded digit-serial matmul.
+
+    The DSLOT tensor-parallel layout (``kernels/ops.py``) splits the N axis
+    ``shards`` ways: compute and weight traffic divide by ``shards``; the
+    activations are replicated (free at dispatch), and the only collective
+    is the out_specs all-gather of each shard's (M, N/s) output slice —
+    each device contributes ``(s-1)/s`` of the (M, N) result over the link.
+    Returns the per-term seconds and the predicted speedup vs 1 shard
+    (``t1 / ts`` with the same model).  This is a MODEL — measured curves
+    land next to it in ``BENCH_distributed.json`` so drift is visible.
+    """
+    def terms(s: int) -> float:
+        flops = 2.0 * m * k * n * n_planes / 8.0 / s   # plane passes ~ D/8
+        compute_s = flops / peak_flops
+        mem = (k * n / s + m * k) * bytes_per_el
+        memory_s = mem / hbm_bw
+        # ring all-gather of the (M, N) output: (s-1) hops of M*N/s bytes
+        coll_s = (s - 1) * m * (n / s) * bytes_per_el / link_bw
+        return compute_s + memory_s + coll_s
+    t1, ts = terms(1), terms(shards)
+    return {"shards": shards, "t_model_s": ts,
+            "predicted_speedup": t1 / max(ts, 1e-30)}
+
+
 def suggestion(row: dict) -> str:
     d = row["dominant"]
     if d == "compute":

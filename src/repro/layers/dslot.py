@@ -122,6 +122,8 @@ class DslotDense:
     block_n: int = 128
     block_k: int | None = None       # None = auto VMEM-budget selection
     use_pallas: bool = False
+    mesh: object | None = None       # tensor-parallel mesh (N-axis shards)
+    tp_axis: str = "model"
 
     # ------------------------------------------------------------ lifecycle
 
@@ -137,7 +139,8 @@ class DslotDense:
             relu=self.relu, signed=self.signed,
             sort_columns=self.sort_columns, block_m=self.block_m,
             block_n=self.block_n, block_k=self.block_k,
-            backend="pallas" if self.use_pallas else "jnp")
+            backend="pallas" if self.use_pallas else "jnp",
+            mesh=self.mesh, tp_axis=self.tp_axis)
         return {**params, "dslot": prepared}
 
     def calibrate(self, params: dict, x_sample: jax.Array) -> dict:
@@ -197,6 +200,8 @@ class DslotConv2d:
     block_n: int = 128
     block_k: int | None = None
     use_pallas: bool = False
+    mesh: object | None = None       # tensor-parallel mesh (N-axis shards)
+    tp_axis: str = "model"
 
     # ------------------------------------------------------------ lifecycle
 
@@ -216,7 +221,8 @@ class DslotConv2d:
             n_bits=self.n_bits, relu=self.relu, signed=self.signed,
             sort_columns=self.sort_columns, block_m=self.block_m,
             block_n=self.block_n, block_k=self.block_k,
-            backend="pallas" if self.use_pallas else "jnp")
+            backend="pallas" if self.use_pallas else "jnp",
+            mesh=self.mesh, tp_axis=self.tp_axis)
         return {**params, "dslot": prepared}
 
     def calibrate(self, params: dict, x_sample: jax.Array) -> dict:

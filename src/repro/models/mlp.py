@@ -84,7 +84,7 @@ def mlp_uses_dslot(cfg) -> bool:
     return bool(cfg.dslot.enabled and cfg.act == "relu" and not cfg.glu)
 
 
-def prepare_mlp_dslot(params, cfg):
+def prepare_mlp_dslot(params, cfg, mesh=None, tp_axis="model"):
     """Attach the one-time DSLOT lowering to every MLP up-projection in a
     model params tree.
 
@@ -94,6 +94,11 @@ def prepare_mlp_dslot(params, cfg):
     (leading group axis, ndim 3) are prepared per-layer via ``vmap``, so the
     prepared tables slice correctly inside ``lax.scan`` over layers.
     Returns the params unchanged when the dslot path does not apply.
+
+    ``mesh``/``tp_axis`` bake tensor parallelism into the prepared state:
+    every digit-serial up-projection then executes N-sharded over the mesh
+    (``kernels/ops.py`` module docs) — bit-identical outputs, one
+    ``shard_map`` per layer inside whatever jit the caller wraps.
     """
     if not mlp_uses_dslot(cfg):
         return params
@@ -107,7 +112,8 @@ def prepare_mlp_dslot(params, cfg):
             w.astype(jnp.float32), n_bits=d.n_bits, relu=True, signed=True,
             sort_columns=d.sort_columns, block_m=d.block_m, block_n=d.block_n,
             block_k=d.block_k,
-            backend="pallas" if d.use_pallas else "jnp", x_scale=x_scale)
+            backend="pallas" if d.use_pallas else "jnp", x_scale=x_scale,
+            mesh=mesh, tp_axis=tp_axis)
 
     def walk(node):
         if isinstance(node, dict):

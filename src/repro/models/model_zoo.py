@@ -63,13 +63,21 @@ class Model:
     def param_count(self, params) -> int:
         return sum(x.size for x in jax.tree.leaves(params))
 
-    def prepare_dslot(self, params) -> Params:
+    def prepare_dslot(self, params, mesh=None, tp_axis="model") -> Params:
         """One-time DSLOT weight lowering for serving (no-op unless the
         config's digit-serial MLP path applies).  Returns params with
         prepared ``DslotWeights`` attached to every MLP up-projection, so
-        per-request execution never re-encodes weight tables."""
+        per-request execution never re-encodes weight tables.
+
+        ``mesh``/``tp_axis`` make every prepared layer tensor-parallel:
+        N-axis weight/termination-table shards under ``shard_map``, with
+        the dense (non-digit-serial) projections constrained through
+        ``models/pspec.py`` when the caller installs the same mesh via
+        ``pspec.set_mesh`` (the serving engine does both from
+        ``ServeConfig.mesh``)."""
         from .mlp import prepare_mlp_dslot
-        return prepare_mlp_dslot(params, self.cfg)
+        return prepare_mlp_dslot(params, self.cfg, mesh=mesh,
+                                 tp_axis=tp_axis)
 
     @property
     def supports_ragged_batches(self) -> bool:

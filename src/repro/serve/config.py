@@ -66,6 +66,14 @@ class ServeConfig:
     slo: SLO control-loop config (``repro.serve.slo.SloConfig``).  ``None``
         (default) disables load-driven plane shedding; a config builds one
         ``SloController`` owned by the engine.
+    mesh: tensor-parallel device mesh (``jax.sharding.Mesh``, e.g. from
+        ``repro.launch.mesh.make_test_mesh``).  The engine prepares the
+        DSLOT weights N-sharded over ``mesh[tp_axis]`` and installs the
+        mesh as the ``models/pspec.py`` constraint mesh, so every pooled
+        decode step and batched admission lane issues ONE jitted sharded
+        forward.  Token streams are bit-identical to ``mesh=None``
+        (``tests/test_tensor_parallel.py``); see ``docs/distributed.md``.
+    tp_axis: the mesh axis name the DSLOT N tiles shard over.
     """
     n_slots: int = 4
     max_len: int = 512
@@ -76,3 +84,5 @@ class ServeConfig:
     sample: Callable | None = None
     precision_policy: Any = None
     slo: SloConfig | None = None
+    mesh: Any = None
+    tp_axis: str = "model"

@@ -292,9 +292,19 @@ class ServeEngine:
         self.cfg = cfg or ServeConfig()
         self.model = model
         self.dslot = mlp_uses_dslot(model.cfg)
+        if self.cfg.mesh is not None:
+            # tensor-parallel serving: the DSLOT layers shard via the mesh
+            # baked into their prepared state below; the dense projections
+            # pick up GSPMD constraints through the pspec registry — both
+            # inside the SAME per-step jit, so one engine step still issues
+            # exactly one (sharded) forward.
+            from repro.models import pspec
+            pspec.set_mesh(self.cfg.mesh)
         # one-time weight-stationary lowering: every decode step executes
         # against cached digit-plane tables (no per-call re-encode)
-        self.params = model.prepare_dslot(params) if self.dslot else params
+        self.params = model.prepare_dslot(
+            params, mesh=self.cfg.mesh,
+            tp_axis=self.cfg.tp_axis) if self.dslot else params
         self.n_slots = self.cfg.n_slots
         self.max_len = self.cfg.max_len
         self.sample = self.cfg.sample or greedy_sample

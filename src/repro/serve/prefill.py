@@ -18,6 +18,13 @@ decode state, at its own ragged offset, padded to the fixed chunk width,
 with per-lane position vectors and per-lane DSLOT plane budgets
 (``Model.extend(..., lengths=...)``).
 
+Tensor parallelism needs no pipeline-side code: the engine hands this
+pipeline params whose ``DslotWeights`` already carry the serving mesh
+(``ServeConfig.mesh`` -> ``Model.prepare_dslot``), so every jitted lane
+forward — like every pooled decode step — runs N-sharded under the same
+``shard_map``, one sharded forward per engine step
+(``docs/distributed.md``).
+
 Lifecycle of a request::
 
     try_add --> PENDING ----> PREFILLING ----------> DECODING --> DONE

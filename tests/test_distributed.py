@@ -166,6 +166,51 @@ def test_expert_parallel_equivalence():
 
 
 @pytest.mark.slow
+def test_expert_parallel_2way_model_mesh_and_plane_budgets():
+    # EP under a small 2-way model mesh (built through make_test_mesh, the
+    # same helper the TP serving path uses), plus the per-expert digit-
+    # plane budget surface: full budgets are an exact no-op (bitwise equal
+    # to the budget-less call), truncated budgets change the output but
+    # stay finite and within quantization distance of the dense forward.
+    run_dist("""
+        import numpy as np, jax, jax.numpy as jnp, dataclasses
+        from repro.configs.granite_moe_1b_a400m import CONFIG
+        from repro.models.moe import apply_moe, init_moe
+        from repro.distributed.expert_parallel import apply_moe_ep
+        from repro.launch.mesh import make_test_mesh
+
+        cfg = dataclasses.replace(CONFIG.reduced(), n_experts=8, top_k=2)
+        p = init_moe(cfg, jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model),
+                              jnp.float32) * 0.5
+        mesh = make_test_mesh(n_devices=2, model=2)
+
+        y_ref, aux_ref = apply_moe(p, x, cfg)
+        y_ep, aux_ep = apply_moe_ep(p, x, cfg, mesh)
+        np.testing.assert_allclose(np.asarray(y_ep), np.asarray(y_ref),
+                                   atol=2e-3)
+        assert abs(float(aux_ep) - float(aux_ref)) < 1e-3
+
+        # full per-expert budgets: exact no-op vs the budget-less call
+        full = jnp.full((cfg.n_experts,), 8, jnp.int32)
+        y_full, _ = apply_moe_ep(p, x, cfg, mesh, expert_planes=full)
+        np.testing.assert_array_equal(np.asarray(y_full), np.asarray(y_ep))
+
+        # truncated budgets: deterministic, finite, near the dense forward,
+        # and actually different from the full-precision output
+        lo = jnp.asarray([3, 8, 4, 8, 3, 8, 4, 8], jnp.int32)
+        y_lo, _ = apply_moe_ep(p, x, cfg, mesh, expert_planes=lo)
+        y_lo2, _ = apply_moe_ep(p, x, cfg, mesh, expert_planes=lo)
+        assert np.isfinite(np.asarray(y_lo)).all()
+        np.testing.assert_array_equal(np.asarray(y_lo), np.asarray(y_lo2))
+        assert not np.array_equal(np.asarray(y_lo), np.asarray(y_ep))
+        np.testing.assert_allclose(np.asarray(y_lo), np.asarray(y_ref),
+                                   atol=0.25)
+        print("EP 2-way + budgets OK")
+    """)
+
+
+@pytest.mark.slow
 def test_resilient_training_with_elastic_restart():
     run_dist("""
         import numpy as np, jax, jax.numpy as jnp, tempfile

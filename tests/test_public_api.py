@@ -83,7 +83,36 @@ def test_generate_signature_pinned():
 def test_serve_config_fields_pinned():
     assert {f.name for f in ServeConfig.__dataclass_fields__.values()} == {
         "n_slots", "max_len", "prefill_chunk", "chunks_per_step",
-        "max_queue", "jit_prefill", "sample", "precision_policy", "slo"}
+        "max_queue", "jit_prefill", "sample", "precision_policy", "slo",
+        "mesh", "tp_axis"}
+    assert ServeConfig().mesh is None and ServeConfig().tp_axis == "model"
+
+
+def test_sharding_surface_pinned():
+    # the tensor-parallel surface: mesh/tp_axis keywords on the prepare
+    # entry points, the shard-count property, and the EP budget keywords —
+    # all keyword-only / defaulted so single-device callers never change.
+    from repro.distributed.expert_parallel import apply_moe_ep
+    from repro.kernels.ops import DslotWeights, dslot_prepare
+    from repro.models.model_zoo import Model
+
+    prep = inspect.signature(dslot_prepare).parameters
+    assert {"mesh", "tp_axis"} <= set(prep)
+    assert prep["mesh"].default is None
+    assert prep["tp_axis"].default == "model"
+    assert prep["mesh"].kind is inspect.Parameter.KEYWORD_ONLY
+
+    pd = inspect.signature(Model.prepare_dslot).parameters
+    assert list(pd) == ["self", "params", "mesh", "tp_axis"]
+    assert pd["mesh"].default is None
+
+    ep = inspect.signature(apply_moe_ep).parameters
+    assert {"expert_planes", "n_bits"} <= set(ep)
+    assert ep["expert_planes"].default is None and ep["n_bits"].default == 8
+
+    assert {"mesh", "tp_axis"} <= set(
+        f.name for f in DslotWeights.__dataclass_fields__.values())
+    assert DslotWeights.tp_shards.fget is not None      # property exists
 
 
 def test_generate_result_fields_pinned():
