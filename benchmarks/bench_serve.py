@@ -44,6 +44,16 @@ device-gets the sampled tokens, so ``perf_counter`` around it is honest):
   reserved slots NEVER decode below their plane floor, and every tier's
   level is restored to its ceiling after the queue drains.
 
+* CHAOS (``"chaos"`` key, PR 9): the hardened engine under a deterministic
+  ``FaultPlan`` — a burst with an injected NaN (quarantine), a plan-driven
+  cancel storm, and a transient lane failure, all in one run.  Gated
+  (bit-exact / steps domain): no crash, invariants hold after EVERY tick,
+  exactly the poisoned request quarantined, survivors' token streams
+  bit-identical to the same run with no fault plan, recovery within an
+  analytic bound of the fault-free drain.  ``--chaos-only`` runs just this
+  scenario (the CI chaos lane), adding a ``"chaos_mesh"`` mirror on a
+  2-shard tensor-parallel engine when >= 2 devices are visible.
+
 Emits ``BENCH_serve.json``.  CPU numbers from the tiny reduced config are a
 scheduling proxy, not TPU performance; the *ratios* (stall vs full prefill,
 batched vs sequential burst) are the contract.
@@ -51,12 +61,13 @@ batched vs sequential burst) are the contract.
 Standalone CLI (used by the CI smoke job):
     python benchmarks/bench_serve.py [--smoke] [--json BENCH_serve.json]
         [--prompt-len N] [--chunk N] [--slots N] [--burst N]
-        [--burst-lanes N]
+        [--burst-lanes N] [--chaos-only]
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import statistics
 import time
@@ -243,8 +254,6 @@ def run_overload(prompt_len: int, chunk: int, n_slots: int, max_new: int,
     All gates are in the deterministic ENGINE-STEPS domain (wall-clock
     p95s on shared CI runners are noise; the step schedule is exact).
     """
-    import dataclasses
-
     from repro.configs.base import DslotConfig
 
     cfg = dataclasses.replace(
@@ -342,6 +351,145 @@ def run_overload(prompt_len: int, chunk: int, n_slots: int, max_new: int,
     }
 
 
+def run_chaos(prompt_len: int, chunk: int, n_slots: int, max_new: int,
+              smoke: bool, mesh=None) -> dict:
+    """Chaos scenario on the calibrated DSLOT model: a burst with an
+    injected NaN (quarantine), a plan-driven cancel storm, and a transient
+    lane failure — all from ONE deterministic ``FaultPlan``.
+
+    Gates (all steps-domain / bit-exact, CI-safe):
+
+    * ``no_crash`` — every ``step()`` returned (nothing raised) and the
+      engine drained;
+    * ``invariants_every_step`` — ``audit_engine`` returned [] after every
+      single tick, faulted ones included;
+    * ``quarantine_fired`` — exactly the poisoned request was evicted with
+      ``phase == "quarantined"``;
+    * ``cancel_storm_clean`` — every plan-cancelled request terminal, and
+      the queue fully accounted for;
+    * ``survivors_token_identical`` — every surviving request's stream is
+      BIT-identical to the same engine run with no fault plan at all (the
+      isolation + transactional-retry contract, end to end);
+    * ``recovered_within_bound`` — the faulted drain finished within the
+      analytic bound of the fault-free drain plus the injected stall steps.
+    """
+    from repro.configs.base import DslotConfig
+    from repro.serve import FaultPlan, Fault, QUARANTINED, audit_engine
+
+    cfg = dataclasses.replace(
+        ARCHS["olmo-1b"].reduced(), act="relu", glu=False,
+        dslot=DslotConfig(enabled=True, block_m=16, block_n=32, block_k=16,
+                          act_scale=0.05))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(3))
+    rng = np.random.default_rng(3)
+    max_len = prompt_len + max_new + 8
+    n_burst = 2 * n_slots
+    victim_uid, storm_uids = 2, (3, 4)
+    plan = FaultPlan(faults=(
+        Fault(kind="lane_exception", step=1, count=1),     # transient
+        Fault(kind="nan_logits", step=6, uid=victim_uid),  # poison
+        Fault(kind="cancel", step=4, uid=storm_uids[0]),   # storm
+        Fault(kind="cancel", step=4, uid=storm_uids[1]),
+        Fault(kind="slow_step", step=2, value=0.001),
+    ))
+    prompts = [_mk_prompt(rng, prompt_len, cfg.vocab_size)
+               for _ in range(n_burst)]
+
+    def drive(faults):
+        if mesh is not None:
+            from repro.models import pspec
+            pspec.set_mesh(None)           # engine installs the mesh itself
+        eng = ServeEngine(model, params, ServeConfig(
+            n_slots=n_slots, max_len=max_len, prefill_chunk=chunk,
+            chunks_per_step=2, faults=faults, default_deadline_steps=200,
+            mesh=mesh))
+        reqs = [Request(uid=i + 1, prompt=p, max_new=max_new)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            if not eng.try_add(r):
+                raise RuntimeError(f"chaos enqueue rejected uid {r.uid}")
+        steps, invariants_ok, crashed = 0, True, False
+        try:
+            while not all(r.done for r in reqs):
+                eng.step()
+                steps += 1
+                if audit_engine(eng):
+                    invariants_ok = False
+                if steps > 2000:
+                    raise RuntimeError("chaos drain wedged")
+        except Exception:
+            crashed = True
+        return eng, reqs, steps, invariants_ok, crashed
+
+    ref_eng, ref_reqs, ref_steps, ref_inv, ref_crash = drive(None)
+    eng, reqs, steps, invariants_ok, crashed = drive(plan)
+
+    evicted = {victim_uid, *storm_uids}
+    survivors = [r for r in reqs if r.uid not in evicted]
+    ident = all(
+        list(r.out) == list(ref.out)
+        for r, ref in zip(reqs, ref_reqs) if r.uid not in evicted)
+    victim = next(r for r in reqs if r.uid == victim_uid)
+    stormed = [r for r in reqs if r.uid in storm_uids]
+    # bound: the faulted drain saves the evicted requests' decode work but
+    # pays the injected stall; it must land within the fault-free drain
+    # plus slack for the retry + slow + quarantine steps
+    recovery_bound = ref_steps + 8
+    gates = {
+        "no_crash": not crashed and not ref_crash,
+        "invariants_every_step": invariants_ok and ref_inv,
+        "quarantine_fired":
+            victim.phase == QUARANTINED
+            and [u for _, u in eng.quarantined] == [victim_uid],
+        "cancel_storm_clean":
+            all(r.done and r.phase == "cancelled" for r in stormed)
+            and eng.queue_depth == 0,
+        "lane_failure_absorbed":
+            any(site == "admission" for _, site, _ in eng.errors),
+        "survivors_token_identical":
+            ident and all(r.phase == "done" and len(r.out) == max_new
+                          for r in survivors),
+        "recovered_within_bound": steps <= recovery_bound,
+    }
+    return {
+        "config": {"arch": "olmo-1b.reduced+dslot", "n_burst": n_burst,
+                   "n_slots": n_slots, "prompt_len": prompt_len,
+                   "prefill_chunk": chunk, "max_new": max_new,
+                   "smoke": smoke,
+                   "mesh": None if mesh is None else dict(mesh.shape)},
+        "plan": [{"kind": f.kind, "step": f.step, "slot": f.slot,
+                  "uid": f.uid, "count": f.count, "value": f.value}
+                 for f in plan.faults],
+        "fired": eng.injector.summary()["fired"],
+        "drain_steps": steps,
+        "reference_drain_steps": ref_steps,
+        "recovery_bound_steps": recovery_bound,
+        "errors_absorbed": len(eng.errors),
+        "quarantined": eng.quarantined,
+        "timeouts": eng.timeouts,
+        "gates": gates,
+        "ok": all(gates.values()),
+    }
+
+
+def run_chaos_mesh(prompt_len: int, chunk: int, n_slots: int, max_new: int,
+                   smoke: bool) -> dict | None:
+    """The same chaos gates on a 2-shard tensor-parallel engine — skipped
+    (returns None) when fewer than 2 devices are visible.  The CI chaos
+    lane forces 2 host devices via XLA_FLAGS."""
+    if len(jax.devices()) < 2:
+        return None
+    from repro.launch.mesh import make_test_mesh
+    from repro.models import pspec
+
+    try:
+        return run_chaos(prompt_len, chunk, n_slots, max_new, smoke,
+                         mesh=make_test_mesh(n_devices=2, model=2))
+    finally:
+        pspec.set_mesh(None)
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--smoke", action="store_true",
@@ -355,6 +503,8 @@ def main():
                     help="burst size (default 4 smoke / 8)")
     ap.add_argument("--burst-lanes", type=int, default=4,
                     help="chunks_per_step for the batched burst drain")
+    ap.add_argument("--chaos-only", action="store_true",
+                    help="run only the chaos scenario (the CI chaos lane)")
     args = ap.parse_args()
     prompt_len = args.prompt_len if args.prompt_len is not None \
         else (48 if args.smoke else 192)
@@ -362,6 +512,32 @@ def main():
         else (8 if args.smoke else 16)
     n_burst = args.burst if args.burst is not None \
         else (4 if args.smoke else 8)
+
+    if args.chaos_only:
+        out = {"chaos": run_chaos(3 * chunk, chunk, args.slots,
+                                  args.max_new, args.smoke)}
+        mesh_out = run_chaos_mesh(3 * chunk, chunk, args.slots,
+                                  args.max_new, args.smoke)
+        if mesh_out is not None:
+            out["chaos_mesh"] = mesh_out
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=2)
+        for key in ("chaos", "chaos_mesh"):
+            if key not in out:
+                print(f"{key}: skipped (needs >= 2 devices)")
+                continue
+            c = out[key]
+            print(f"{key}: drained in {c['drain_steps']} steps "
+                  f"(ref {c['reference_drain_steps']}, bound "
+                  f"{c['recovery_bound_steps']}); "
+                  f"{c['errors_absorbed']} errors absorbed, "
+                  f"quarantined {c['quarantined']}")
+            for gate, okv in c["gates"].items():
+                print(f"  gate {gate}: {'OK' if okv else 'FAIL'}")
+        print(f"wrote {args.json}")
+        if not all(out[k]["ok"] for k in out):
+            raise SystemExit(1)
+        return
 
     cfg = ARCHS["olmo-1b"].reduced()
     model = build_model(cfg)
@@ -373,6 +549,8 @@ def main():
                              args.burst_lanes, args.smoke)
     out["overload"] = run_overload(3 * chunk, chunk, args.slots,
                                    args.max_new, 2, args.smoke)
+    out["chaos"] = run_chaos(3 * chunk, chunk, args.slots, args.max_new,
+                             args.smoke)
     with open(args.json, "w") as f:
         json.dump(out, f, indent=2)
     print(f"full-prompt prefill     {out['prefill_full_ms']:9.2f} ms")
@@ -414,12 +592,21 @@ def main():
           f"{c['restore_events']} restores; levels {c['levels']}")
     for gate, okv in o["gates"].items():
         print(f"  gate {gate}: {'OK' if okv else 'FAIL'}")
+    ch = out["chaos"]
+    print(f"chaos: drained in {ch['drain_steps']} steps "
+          f"(ref {ch['reference_drain_steps']}, bound "
+          f"{ch['recovery_bound_steps']}); {ch['errors_absorbed']} errors "
+          f"absorbed, quarantined {ch['quarantined']}")
+    for gate, okv in ch["gates"].items():
+        print(f"  gate {gate}: {'OK' if okv else 'FAIL'}")
     print(f"wrote {args.json}")
     if not out["stall_below_full_prefill"]:
         raise SystemExit(1)
     if not b["batched_stall_leq_sequential"]:
         raise SystemExit(1)
     if not o["ok"]:
+        raise SystemExit(1)
+    if not ch["ok"]:
         raise SystemExit(1)
 
 

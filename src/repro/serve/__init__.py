@@ -1,24 +1,37 @@
 """Serving layer: slot-pool engine + chunked-prefill admission pipeline +
-SLO-driven precision elasticity.
+SLO-driven precision elasticity + a hardened failure surface.
 
 Public surface (pinned by ``tests/test_public_api.py``):
 
 * ``ServeEngine(model, params, cfg: ServeConfig)`` / ``generate`` — the two
   serving paths, both yielding :class:`GenerateResult`.
 * ``ServeConfig`` — every engine knob beyond ``(model, params)``.
-* ``Request`` — one in-flight generation (QoS ``tier``, streaming
-  ``on_token`` / ``token_steps``, terminal ``result``).
+* ``Request`` — one in-flight generation (QoS ``tier``, per-request
+  ``deadline_steps``, streaming ``on_token`` / ``token_steps``, terminal
+  ``result``).
 * ``SloConfig`` / ``SloController`` / ``TierSpec`` + tier names — the SLO
   plane-shedding control loop (``repro.serve.slo``).
+* ``Fault`` / ``FaultPlan`` / ``FaultInjector`` / ``TransientFault`` — the
+  deterministic fault-injection plane (``repro.serve.faults``), and
+  ``audit_engine`` / ``check_invariants`` / ``InvariantViolation`` — the
+  crash-consistency oracle (``repro.serve.health``).
+* Lifecycle phases: PENDING -> PREFILLING -> DECODING -> DONE, with the
+  terminal evictions CANCELLED / TIMEOUT / QUARANTINED / FAILED.
 
 See ``docs/serving.md`` for the slot lifecycle, the admission/decode
-overlap design, and the SLO/QoS control loop.
+overlap design, the SLO/QoS control loop, and "Failure modes and
+recovery" for the hardening contracts.
 """
 
 from repro.serve.config import ServeConfig
 from repro.serve.engine import Request, ServeEngine, generate
-from repro.serve.prefill import (CANCELLED, DECODING, DONE, PENDING,
-                                 PREFILLING, PrefillPipeline, PrefillTask)
+from repro.serve.faults import (FAULT_KINDS, Fault, FaultInjector, FaultPlan,
+                                TransientFault)
+from repro.serve.health import (InvariantViolation, audit_engine,
+                                check_invariants)
+from repro.serve.prefill import (CANCELLED, DECODING, DONE, FAILED, PENDING,
+                                 PREFILLING, QUARANTINED, TIMEOUT,
+                                 PrefillPipeline, PrefillTask)
 from repro.serve.result import GenerateResult
 from repro.serve.slo import (DEGRADABLE, RESERVED, STANDARD, TIERS,
                              SloConfig, SloController, SloSignals, TierSpec,
@@ -27,6 +40,10 @@ from repro.serve.slo import (DEGRADABLE, RESERVED, STANDARD, TIERS,
 __all__ = ["ServeConfig", "Request", "ServeEngine", "generate",
            "GenerateResult",
            "PrefillPipeline", "PrefillTask", "PENDING", "PREFILLING",
-           "DECODING", "DONE", "CANCELLED",
+           "DECODING", "DONE", "CANCELLED", "TIMEOUT", "QUARANTINED",
+           "FAILED",
+           "Fault", "FaultPlan", "FaultInjector", "TransientFault",
+           "FAULT_KINDS",
+           "InvariantViolation", "audit_engine", "check_invariants",
            "SloConfig", "SloController", "SloSignals", "TierSpec",
            "default_tiers", "RESERVED", "STANDARD", "DEGRADABLE", "TIERS"]

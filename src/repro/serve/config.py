@@ -74,6 +74,30 @@ class ServeConfig:
         forward.  Token streams are bit-identical to ``mesh=None``
         (``tests/test_tensor_parallel.py``); see ``docs/distributed.md``.
     tp_axis: the mesh axis name the DSLOT N tiles shard over.
+    default_deadline_steps: deadline (engine steps from enqueue) applied to
+        requests that set no ``Request.deadline_steps`` of their own.  A
+        request that has not finished within its deadline is EVICTED
+        wherever it is — queued, mid-prefill, or decoding — with
+        ``phase == "timeout"`` and a ``GenerateResult`` carrying whatever
+        it produced; its slot and lane free the same step.  ``None``
+        (default) disables engine-wide deadlines.
+    max_step_retries: bounded retry budget for transient failures INSIDE
+        one ``step()``: an exception from the admission tick or the pooled
+        decode forward is retried up to this many times before the step
+        gives that phase up (admission: the in-flight tasks are failed so a
+        poisoned prompt cannot wedge the lane forever; decode: the pool
+        stalls one step with state untouched).  ``step()`` never raises
+        either way — see ``docs/serving.md``, "Failure modes and recovery".
+    quarantine_nonfinite: detect non-finite (NaN/Inf) logit rows after
+        every pooled decode step and QUARANTINE exactly the poisoned slot
+        (``phase == "quarantined"``, slot freed, result attached).
+        Surviving co-batched requests keep their exact token streams — the
+        same isolation bar as cancel-mid-batch.  On by default; the check
+        is one fused ``isfinite`` reduce inside the jitted step.
+    faults: a ``repro.serve.faults.FaultPlan`` consulted at the engine's
+        fault hook points — the deterministic fault-injection plane used by
+        the chaos tests and ``bench_serve.py --chaos``.  ``None`` (default)
+        injects nothing and skips every hook.
     """
     n_slots: int = 4
     max_len: int = 512
@@ -86,3 +110,7 @@ class ServeConfig:
     slo: SloConfig | None = None
     mesh: Any = None
     tp_axis: str = "model"
+    default_deadline_steps: int | None = None
+    max_step_retries: int = 2
+    quarantine_nonfinite: bool = True
+    faults: Any = None

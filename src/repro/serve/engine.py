@@ -43,6 +43,22 @@ split into chunks — ``try_add`` REJECTS budgeted multi-chunk admissions on
 an uncalibrated model instead of silently drifting; see ``kernels/ops.py``
 and ``docs/serving.md``).
 
+Hardening (``docs/serving.md``, "Failure modes and recovery"): ``step()``
+NEVER raises.  Exceptions from admission or decode forwards are absorbed
+with bounded retry (``ServeConfig.max_step_retries``) and logged to
+``ServeEngine.errors``; state commits are transactional, so a failed step
+leaves queue/slots/lanes exactly where they were and
+``ServeEngine.check_invariants()`` (``serve/health.py``) passes after every
+tick.  Non-finite logit rows quarantine exactly the poisoned slot
+(``phase == "quarantined"``) — surviving co-batched requests keep their
+bit-exact token streams, the same isolation bar as cancel-mid-batch.
+Per-request deadlines (``Request.deadline_steps`` /
+``ServeConfig.default_deadline_steps``) evict overdue requests wherever
+they are (``phase == "timeout"``) and feed the SLO controller as pressure.
+``drain()``/``close()`` give a graceful shutdown path, and the whole
+failure surface is exercisable on demand through the deterministic fault
+plane in ``serve/faults.py`` (``ServeConfig.faults``).
+
 DSLOT serving mode (``cfg.dslot.enabled`` + ReLU MLPs): the engine prepares
 the model's weight-stationary plane tables ONCE at construction
 (``Model.prepare_dslot``), every request carries its own digit-plane budget
@@ -60,6 +76,7 @@ level each step — shedding planes under burst, restoring them under slack
 from __future__ import annotations
 
 import dataclasses
+import time
 import warnings
 from dataclasses import dataclass, field
 from typing import Callable, Iterator
@@ -74,8 +91,10 @@ from repro.models.mlp import mlp_uses_dslot
 from repro.models.model_zoo import Model
 from repro.runtime import PolicyFeedback, precision_scope
 from repro.serve.config import ServeConfig
-from repro.serve.prefill import (CANCELLED, DECODING, DONE, PREFILLING,
-                                 PrefillPipeline)
+from repro.serve.faults import FaultInjector
+from repro.serve.prefill import (CANCELLED, DECODING, DONE, FAILED,
+                                 PREFILLING, QUARANTINED, TIMEOUT,
+                                 PrefillPipeline, _batch_axes)
 from repro.serve.result import GenerateResult
 from repro.serve.slo import STANDARD, TIERS, SloController, SloSignals
 
@@ -220,6 +239,9 @@ class Request:
     n_planes: int | None = None        # per-request DSLOT precision (None =
                                        # policy-assigned or full n_bits)
     tier: str = STANDARD               # QoS tier (repro.serve.slo.TIERS)
+    deadline_steps: int | None = None  # engine steps from enqueue before
+                                       # timeout eviction (None = engine's
+                                       # ServeConfig.default_deadline_steps)
     on_token: Callable | None = None   # streaming: called (req, token, step)
                                        # the step each token is emitted
     out: list = field(default_factory=list)
@@ -323,13 +345,24 @@ class ServeEngine:
         self._steps = 0
         self._ttft_obs: list[int] = []     # TTFTs landed since last signal
         self._last_rows_mean: float | None = None
+        # hardening state: the fault log (step, site, repr(exc)) of every
+        # absorbed exception, the quarantine/timeout eviction records, and
+        # the optional deterministic fault-injection plane
+        self.errors: list[tuple[int, str, str]] = []
+        self.quarantined: list[tuple[int, int]] = []   # (step, uid)
+        self.timeouts: list[tuple[int, int]] = []      # (step, uid)
+        self.injector: FaultInjector | None = \
+            None if self.cfg.faults is None else FaultInjector(self.cfg.faults)
+        self._closed = False
+        self._state_axes = None            # lazy: KV-corruption fault hook
         self.pipeline = PrefillPipeline(
             model=model, params=self.params, max_len=self.max_len,
             chunk=self.cfg.prefill_chunk,
             chunks_per_step=self.cfg.chunks_per_step,
             max_queue=self.cfg.max_queue,
             jit_chunks=self.cfg.jit_prefill,
-            dslot=self.dslot, calibrated=self.calibrated)
+            dslot=self.dslot, calibrated=self.calibrated,
+            injector=self.injector)
 
         def _decode(p, st, t, npl):
             with stats_channel.collect() as sink, precision_scope(npl):
@@ -339,6 +372,9 @@ class ServeEngine:
             aux = {} if rows is None else {"rows": rows}
             if bnd is not None:
                 aux["bounded"] = bnd
+            # per-slot non-finite detection, fused into the step (one
+            # reduce) — the quarantine guard reads it on the host
+            aux["finite"] = jnp.all(jnp.isfinite(lg), axis=-1)
             return lg, st2, aux
 
         self._decode = jax.jit(_decode)
@@ -359,14 +395,17 @@ class ServeEngine:
         admission queue is full (``ServeConfig.max_queue``) — retry later.
 
         Requests that can NEVER run are rejected immediately with
-        ``ValueError``: an empty prompt, a non-positive generation budget,
-        ``len(prompt) + max_new > max_len`` (the KV ring would wrap and
-        silently corrupt the sequence mid-decode), an unknown QoS tier, or
-        — in DSLOT mode — a per-request plane budget whose prompt would be
-        split into multiple chunks on a model with NO calibrated activation
-        scale (per-call-max quantization is not chunk-invariant, so the
-        chunked prefill would silently diverge from a one-shot prefill of
-        the same prompt; pin ``DslotConfig.act_scale``).
+        ``ValueError``: an empty prompt, a non-1-D or non-integer-dtype
+        prompt, token ids outside ``[0, vocab_size)`` (either would poison
+        the shared embedding gather / KV ring for co-batched requests), a
+        non-positive generation budget, ``len(prompt) + max_new > max_len``
+        (the KV ring would wrap and silently corrupt the sequence
+        mid-decode), an unknown QoS tier, or — in DSLOT mode — a
+        per-request plane budget whose prompt would be split into multiple
+        chunks on a model with NO calibrated activation scale (per-call-max
+        quantization is not chunk-invariant, so the chunked prefill would
+        silently diverge from a one-shot prefill of the same prompt; pin
+        ``DslotConfig.act_scale``).
 
         Policy-assigned precision (DSLOT mode) is granted here, at enqueue:
         a scalar policy (``Fixed``, ``AdaptiveBudget``) grants this
@@ -375,9 +414,30 @@ class ServeEngine:
         DSLOT consumer (the MLP up-projection, falling back to the
         schedule's ``"*"`` default).
         """
+        if self._closed:
+            raise RuntimeError("ServeEngine is closed")
+        prompt = np.asarray(req.prompt)
+        if prompt.ndim != 1:
+            raise ValueError(
+                f"request {req.uid}: prompt must be 1-D, got shape "
+                f"{prompt.shape}")
+        if not np.issubdtype(prompt.dtype, np.integer):
+            raise ValueError(
+                f"request {req.uid}: prompt dtype {prompt.dtype} is not an "
+                f"integer type — token ids must be integers (a float "
+                f"prompt would be silently truncated into the shared ring)")
+        req.prompt = prompt
         P = int(len(req.prompt))
         if P < 1:
             raise ValueError(f"request {req.uid}: empty prompt")
+        vocab = int(self.model.cfg.vocab_size)
+        lo, hi = int(prompt.min()), int(prompt.max())
+        if lo < 0 or hi >= vocab:
+            raise ValueError(
+                f"request {req.uid}: token ids must be in [0, {vocab}), "
+                f"got range [{lo}, {hi}] — an out-of-vocab id reads "
+                f"garbage through the embedding gather and poisons the "
+                f"shared decode state")
         if req.max_new < 1:
             raise ValueError(
                 f"request {req.uid}: max_new must be >= 1, got {req.max_new}")
@@ -428,21 +488,31 @@ class ServeEngine:
         ``while not req.done`` driving loops exit.  A cancelled request
         is never returned from ``step()``.
         """
+        return self._evict(uid, CANCELLED) is not None
+
+    def _evict(self, uid: int, phase: str) -> Request | None:
+        """Terminate a request wherever it lives (queue, prefill lane, or
+        decode slot) with the given terminal phase, freeing its slot and
+        lane, and attach its ``GenerateResult``.  The shared machinery
+        behind ``cancel`` (CANCELLED), deadline eviction (TIMEOUT),
+        poisoned-slot isolation (QUARANTINED) and admission-failure
+        eviction (FAILED)."""
         found = next((r for r in list(self.pipeline.queue)
                       + [t.req for t in self.pipeline.active]
                       if r.uid == uid), None)
         if self.pipeline.cancel(uid):
             if found is not None:
+                found.phase = phase
                 found.result = self._result_of(found)
-            return True
+            return found
         for i, req in enumerate(self.slot_req):
             if req is not None and req.uid == uid:
-                req.phase = CANCELLED
+                req.phase = phase
                 req.done = True
                 req.result = self._result_of(req)
                 self.slot_req[i] = None
-                return True
-        return False
+                return req
+        return None
 
     def stream(self, req: Request) -> Iterator[int]:
         """Generator handle over a request's token stream.
@@ -452,18 +522,28 @@ class ServeEngine:
         it lands — the pull-based twin of the ``Request.on_token`` push
         callback.  Other slots keep decoding underneath; interleave
         ``stream`` handles freely with direct ``step()`` calls.
+
+        A consumer that stops iterating (``break``, garbage collection,
+        explicit ``close()``) CANCELS the request: the ``finally`` below
+        runs on ``GeneratorExit``, so an abandoned stream frees its slot
+        and lane instead of stranding them forever (the pre-hardening
+        leak).
         """
         if req.phase == "new" and not self.try_add(req):
             raise RuntimeError(
                 f"request {req.uid}: admission queue full")
         sent = 0
-        while True:
-            while sent < len(req.out):
-                yield req.out[sent]
-                sent += 1
-            if req.done:
-                return
-            self.step()
+        try:
+            while True:
+                while sent < len(req.out):
+                    yield req.out[sent]
+                    sent += 1
+                if req.done:
+                    return
+                self.step()
+        finally:
+            if not req.done:
+                self.cancel(req.uid)
 
     @property
     def queue_depth(self) -> int:
@@ -519,12 +599,101 @@ class ServeEngine:
             # matching what ``generate`` does with its prefill logits
             self.next_tok[i] = int(jax.device_get(self.sample(task.logits)[0]))
 
+    def _evict_timeouts(self) -> int:
+        """Deadline sweep: evict every request past its deadline — queued,
+        mid-prefill, or decoding — with ``phase == "timeout"``.  Runs
+        BEFORE the admission tick so an already-overdue queued request
+        never claims a lane.  Returns the eviction count (fed to the SLO
+        controller as pressure)."""
+        default = self.cfg.default_deadline_steps
+        expired = []
+        for req in (list(self.pipeline.queue)
+                    + [t.req for t in self.pipeline.active]
+                    + [r for r in self.slot_req if r is not None]):
+            dl = req.deadline_steps if req.deadline_steps is not None \
+                else default
+            if dl is None or req.enqueue_step is None:
+                continue
+            if self._steps - req.enqueue_step > dl:
+                expired.append(req.uid)
+        n = 0
+        for uid in expired:
+            if self._evict(uid, TIMEOUT) is not None:
+                self.timeouts.append((self._steps, uid))
+                n += 1
+        return n
+
+    def _fault_slot(self, fault) -> int | None:
+        """Resolve a fault's target to a pool slot.  ``uid`` targets wait
+        (return None, keeping the fault pending) until the request is
+        actually decoding; ``slot`` targets fire as planned."""
+        if fault.uid is not None:
+            for i, r in enumerate(self.slot_req):
+                if r is not None and r.uid == fault.uid:
+                    return i
+            return None
+        if fault.slot is not None and 0 <= fault.slot < self.n_slots:
+            return fault.slot
+        return None
+
+    def _corrupt_slot(self, state, slot: int):
+        """Scribble NaN over one slot's floating-point rows of the decode
+        state (KV ring) — the ``kv_corrupt`` fault hook.  Int leaves (ring
+        positions) are left intact, so the corruption models a bad VALUE
+        write, not broken indexing; the quarantine guard catches the NaN
+        logits it produces on the very next decode step."""
+        if self._state_axes is None:
+            self._state_axes = _batch_axes(self.model, self.max_len)
+
+        def scribble(leaf, ax):
+            if ax < 0 or not jnp.issubdtype(leaf.dtype, jnp.floating):
+                return leaf
+            idx = (slice(None),) * ax + (slice(slot, slot + 1),)
+            return leaf.at[idx].set(jnp.nan)
+
+        return jax.tree.map(scribble, state, self._state_axes)
+
     def step(self) -> list[Request]:
-        """One engine step: admission chunk(s), SLO control, then advance
-        all live slots by one token.  Returns finished requests."""
+        """One engine step: deadline sweep, admission chunk(s), SLO
+        control, then advance all live slots by one token.  Returns
+        finished requests.
+
+        NEVER raises (a closed engine excepted): exceptions from admission
+        or decode work are retried up to ``ServeConfig.max_step_retries``
+        times within the step and logged to ``self.errors``.  Admission
+        that fails every retry evicts its in-flight tasks with
+        ``phase == "failed"`` (a deterministically poisoned prompt must not
+        wedge the lanes forever); a decode that fails every retry stalls
+        the pool one step with state untouched — both leave the engine in a
+        state where ``check_invariants()`` passes and the next ``step()``
+        proceeds.
+        """
+        if self._closed:
+            raise RuntimeError("ServeEngine is closed")
         self._steps += 1
+        inj = self.injector
+        if inj is not None:
+            inj.begin_step(self._steps)
+            for f in inj.slow_steps():            # artificial latency
+                time.sleep(f.value or 0.0)
+            for uid in inj.cancels():             # replayable cancel storms
+                self.cancel(uid)
+        timed_out = self._evict_timeouts()
         f0 = self.pipeline.forwards
-        self._admission_tick()
+        for _ in range(self.cfg.max_step_retries + 1):
+            try:
+                if inj is not None:
+                    inj.raise_if("admission_tick")
+                self._admission_tick()
+                break
+            except Exception as e:  # noqa: BLE001 — absorb, log, retry
+                self.errors.append((self._steps, "admission", repr(e)))
+        else:
+            # every retry failed: fail the in-flight admissions so the
+            # lanes recover next step (the queue is untouched — see the
+            # step() docstring)
+            for task in list(self.pipeline.active):
+                self._evict(task.req.uid, FAILED)
         if self.slo is not None:
             # load signals: queue AFTER this step's admissions, the TTFTs
             # that landed since the last update, and last decode's planes
@@ -532,15 +701,40 @@ class ServeEngine:
                 queue_depth=self.queue_depth,
                 ttft_steps=self._ttft_obs,
                 decode_stalled=self.pipeline.forwards > f0,
-                planes_used_mean=self._last_rows_mean))
+                planes_used_mean=self._last_rows_mean,
+                timed_out=timed_out))
             self._ttft_obs = []
         if all(r is None for r in self.slot_req):
             return []
         toks = jnp.asarray(self.next_tok[:, None])
         budgets = self._budget_vector()
+        decoded = None
+        for _ in range(self.cfg.max_step_retries + 1):
+            try:
+                if inj is not None:
+                    inj.raise_if("decode_forward")
+                decoded = self._decode(self.params, self.state, toks, budgets)
+                break
+            except Exception as e:  # noqa: BLE001
+                self.errors.append((self._steps, "decode", repr(e)))
+        if decoded is None:
+            # decode failed every retry: state/tokens/accounting untouched,
+            # the pool stalls exactly one step and retries next step
+            return []
+        logits, state2, aux = decoded
         self.last_budget = np.asarray(jax.device_get(budgets))
-        logits, self.state, aux = self._decode(
-            self.params, self.state, toks, budgets)
+        poisoned = False
+        if inj is not None:
+            logits, poisoned = inj.poison_logits(logits, self._fault_slot)
+        fin = None
+        if self.cfg.quarantine_nonfinite:
+            fin = np.asarray(jax.device_get(
+                jnp.all(jnp.isfinite(logits), axis=-1) if poisoned
+                else aux["finite"]))
+        self.state = state2
+        if inj is not None:
+            for slot in inj.kv_corruptions(self._fault_slot):
+                self.state = self._corrupt_slot(self.state, slot)
         nxt = np.asarray(jax.device_get(self.sample(logits)))
         rows = np.asarray(jax.device_get(aux["rows"])) \
             if "rows" in aux else None
@@ -550,6 +744,18 @@ class ServeEngine:
         finished = []
         for i, req in enumerate(self.slot_req):
             if req is None:
+                continue
+            if fin is not None and not fin[i]:
+                # quarantine BEFORE emitting: the poisoned logits never
+                # reach the stream.  Only this slot is touched — rows are
+                # computationally independent (per-sequence rings, row-wise
+                # MLP/norm), so survivors' tokens stay bit-identical to a
+                # run that never admitted the poisoned request.
+                self.quarantined.append((self._steps, req.uid))
+                req.phase = QUARANTINED
+                req.done = True
+                req.result = self._result_of(req)
+                self.slot_req[i] = None
                 continue
             tok = int(self.next_tok[i])
             req.out.append(tok)
@@ -573,6 +779,75 @@ class ServeEngine:
                 finished.append(req)
                 self.slot_req[i] = None
         return finished
+
+    # -------------------------------------------------------- shutdown
+
+    @property
+    def closed(self) -> bool:
+        """True once :meth:`close` has sealed the engine."""
+        return self._closed
+
+    def live_requests(self) -> list[Request]:
+        """Every request the engine still owes work: queued, mid-prefill,
+        and decoding."""
+        return (list(self.pipeline.queue)
+                + [t.req for t in self.pipeline.active]
+                + [r for r in self.slot_req if r is not None])
+
+    def drain(self, max_steps: int | None = None) -> list[Request]:
+        """Graceful shutdown, phase 1: step until every admitted request
+        reaches a terminal state (finished, timed out, quarantined, or
+        cancelled), admitting nothing new yourself.  Returns the requests
+        that finished NATURALLY during the drain (evictions are on
+        ``req.result`` / the engine's ``timeouts``/``quarantined`` logs).
+
+        ``max_steps`` bounds the drain; ``None`` derives a worst-case
+        sequential bound from the live work (every prompt's chunks plus its
+        full generation budget) — exceeding it means the engine lost
+        liveness, which IS worth raising about (``RuntimeError``), unlike
+        anything inside ``step()``.
+        """
+        if self._closed:
+            return []
+        if max_steps is None:
+            chunk = self.pipeline.chunk or self.max_len
+            max_steps = 16 + sum(
+                -(-len(r.prompt) // max(1, chunk)) + r.max_new
+                for r in self.live_requests())
+        finished: list[Request] = []
+        for _ in range(max_steps):
+            if not self.live_requests():
+                return finished
+            finished.extend(self.step())
+        if self.live_requests():
+            raise RuntimeError(
+                f"drain did not converge in {max_steps} steps; still live: "
+                f"{[r.uid for r in self.live_requests()]}")
+        return finished
+
+    def close(self) -> list[Request]:
+        """Graceful shutdown, phase 2 (or immediate shutdown on its own):
+        cancel everything still in flight — queued, prefilling, decoding —
+        attaching each request's ``GenerateResult`` with whatever it
+        produced, then seal the engine: ``try_add`` and ``step`` raise
+        ``RuntimeError`` afterwards.  Idempotent.  Returns the requests
+        cancelled by this call; ``drain()`` first for a shutdown that
+        finishes in-flight work instead of cutting it."""
+        if self._closed:
+            return []
+        cancelled = []
+        for req in self.live_requests():
+            if self._evict(req.uid, CANCELLED) is not None:
+                cancelled.append(req)
+        self._closed = True
+        return cancelled
+
+    def check_invariants(self) -> None:
+        """Audit slot/queue/lane/ring accounting; raises
+        ``repro.serve.health.InvariantViolation`` on corruption.  The chaos
+        suites call this after every step."""
+        from repro.serve.health import check_invariants
+        check_invariants(self)
 
     def _result_of(self, req: Request, granted=None, used=None,
                    skipped=None, bounded=None) -> GenerateResult:

@@ -79,6 +79,7 @@ if TYPE_CHECKING:                                    # pragma: no cover
     from repro.serve.engine import Request
 
 __all__ = ["PENDING", "PREFILLING", "DECODING", "DONE", "CANCELLED",
+           "TIMEOUT", "QUARANTINED", "FAILED",
            "PrefillTask", "PrefillPipeline"]
 
 # Request lifecycle phases (``Request.phase``).
@@ -87,6 +88,11 @@ PREFILLING = "prefilling"    # slot reserved, prompt chunks in flight
 DECODING = "decoding"        # merged into the pool, advancing every step
 DONE = "done"                # finished, slot released
 CANCELLED = "cancelled"      # abandoned at any earlier phase
+# Terminal eviction phases (engine hardening — ``docs/serving.md``):
+TIMEOUT = "timeout"          # deadline expired before finish; evicted
+QUARANTINED = "quarantined"  # non-finite logits detected; slot isolated
+FAILED = "failed"            # admission work kept raising past the retry
+                             # budget; evicted so the lane can recover
 
 
 @dataclass
@@ -172,6 +178,9 @@ class PrefillPipeline:
     active: list = field(default_factory=list)   # in-flight PrefillTasks
     forwards: int = 0                            # model forwards run (a
                                                  # batched tick counts 1)
+    injector: Any = None         # repro.serve.faults.FaultInjector — the
+                                 # engine installs its own; consulted just
+                                 # before every lane forward
 
     def __post_init__(self):
         if self.model.cfg.attn_type == "swa" and self.chunk:
@@ -355,6 +364,12 @@ class PrefillPipeline:
             toks[t.lane, :n] = t.req.prompt[t.offset:end]
             lens[t.lane] = n
             npl[t.lane] = self._resolve_precision(t.req)
+        if self.injector is not None:
+            # fault hook: a raise here leaves the tick transactional — no
+            # task offset moved, the lane state untouched (the forward is a
+            # functional update), so the engine's retry re-runs this exact
+            # chunk against this exact state.
+            self.injector.raise_if("lane_forward")
         logits, self._lane_state = self._extend_lanes(
             self.params, self._lane_state, jnp.asarray(toks),
             jnp.asarray(lens), jnp.asarray(npl))
@@ -408,6 +423,8 @@ class PrefillPipeline:
         end = min(task.offset + c, P)
         tokens = jnp.asarray(req.prompt[None, task.offset:end])
         npl = self._chunk_precision(req)
+        if self.injector is not None:
+            self.injector.raise_if("lane_forward")  # see batched tick
         if task.offset == 0:
             task.logits, task.state = self._prefill_chunk(
                 self.params, tokens, npl)

@@ -47,8 +47,11 @@ class GenerateResult:
     ttft_steps: engine steps from enqueue to first token (engine path).
     steps: engine steps from enqueue to finish (engine path) or the decode
         length (batch path).
-    phase: terminal lifecycle phase ("done", or "cancelled" on the engine
-        path).
+    phase: terminal lifecycle phase — "done" on the batch path; the engine
+        additionally evicts with "cancelled", "timeout" (deadline expired),
+        "quarantined" (non-finite logits isolated) or "failed" (admission
+        kept raising past the retry budget) — see ``docs/serving.md``,
+        "Failure modes and recovery".
     uid / tier: request identity and QoS tier (engine path only).
     """
     tokens: Any

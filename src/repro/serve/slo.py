@@ -29,8 +29,11 @@ Control law (plain python, runs OUTSIDE jit between steps, like the
 
 * *pressure* when the queue is deeper than ``queue_high_water`` OR the
   rolling-window p95 TTFT (engine-steps domain) exceeds
-  ``target_ttft_steps``;
-* *slack* when the queue is empty and the window p95 is within target;
+  ``target_ttft_steps`` OR any request was deadline-evicted this step
+  (``SloSignals.timed_out`` — a missed deadline is direct overload
+  evidence, so it feeds shed decisions immediately);
+* *slack* when the queue is empty, the window p95 is within target, and
+  nothing timed out;
 * **hysteresis**: shedding requires ``shed_patience`` consecutive pressure
   steps, restoring requires ``restore_patience`` consecutive slack steps,
   and any neutral step resets both counters — so budgets cannot oscillate
@@ -127,6 +130,10 @@ class SloSignals:
     ttft_steps: list[int] = dataclasses.field(default_factory=list)
     decode_stalled: bool = False           # step carried admission work
     planes_used_mean: float | None = None  # pooled per-row planes this step
+    timed_out: int = 0                     # deadline evictions this step —
+                                           # missed deadlines are the most
+                                           # direct overload evidence there
+                                           # is, so any count is pressure
 
 
 class SloController:
@@ -198,8 +205,9 @@ class SloController:
         p95 = self.ttft_p95()
         ttft_hot = p95 is not None and p95 > self.cfg.target_ttft_steps
         ttft_ok = p95 is None or p95 <= self.cfg.target_ttft_steps
-        pressure = sig.queue_depth > self.cfg.queue_high_water or ttft_hot
-        slack = sig.queue_depth == 0 and ttft_ok
+        pressure = (sig.queue_depth > self.cfg.queue_high_water or ttft_hot
+                    or sig.timed_out > 0)
+        slack = sig.queue_depth == 0 and ttft_ok and sig.timed_out == 0
         if pressure:
             self._hot += 1
             self._cool = 0

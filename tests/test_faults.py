@@ -1,0 +1,584 @@
+"""Fault-injection plane + engine hardening contracts.
+
+The bar throughout is the PR 9 hardening contract (``docs/serving.md``,
+"Failure modes and recovery"):
+
+* ``step()`` never raises — injected exceptions are absorbed with bounded
+  retry and the engine's accounting (``check_invariants``) holds after
+  EVERY step, including the faulted ones;
+* isolation is exact — a poisoned request's quarantine leaves surviving
+  co-batched requests' token streams **bit-identical** to a run where the
+  victim was never admitted (the same bar the cancel-mid-batch tests set);
+* recovery is exact — a transient failure that heals within the retry
+  budget leaves every token stream identical to a fault-free run.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from _hyp import given, settings, st  # hypothesis or skip-shim
+from repro.configs.registry import ARCHS
+from repro.models.model_zoo import build_model
+from repro.serve import (CANCELLED, DONE, FAILED, QUARANTINED, TIMEOUT,
+                         Fault, FaultInjector, FaultPlan, Request,
+                         ServeConfig, ServeEngine, TransientFault,
+                         audit_engine, check_invariants, generate)
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = ARCHS["olmo-1b"].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(3))
+    return cfg, model, params
+
+
+def _prompt(n, seed=0):
+    return np.random.RandomState(seed).randint(0, 256, size=n).astype(np.int32)
+
+
+_SOLO_CACHE: dict = {}
+
+
+def _solo(model, params, n, seed, max_new):
+    """Token stream of a solo ``generate`` run (cached per module)."""
+    key = (n, seed, max_new)
+    if key not in _SOLO_CACHE:
+        p = _prompt(n, seed=seed)
+        _SOLO_CACHE[key] = list(np.asarray(generate(
+            model, params, {"tokens": jnp.asarray(p[None])}, max_new
+        ).tokens[0]))
+    return _SOLO_CACHE[key]
+
+
+def _drive(eng, reqs, max_steps=200, invariants=True):
+    """Step until every request is terminal, auditing after every step."""
+    for _ in range(max_steps):
+        eng.step()
+        if invariants:
+            check_invariants(eng)
+        if all(r.done for r in reqs):
+            return
+    raise AssertionError(f"requests not terminal in {max_steps} steps: "
+                         f"{[(r.uid, r.phase) for r in reqs]}")
+
+
+# ------------------------------------------------------------- the plan
+
+def test_plan_replayable():
+    """Same seed, same plan — the determinism the chaos property leans on."""
+    a = FaultPlan.random(7, n_faults=6, max_step=20, uids=(1, 2, 3))
+    b = FaultPlan.random(7, n_faults=6, max_step=20, uids=(1, 2, 3))
+    assert a == b and len(a) == 6 and a.seed == 7
+    c = FaultPlan.random(8, n_faults=6, max_step=20, uids=(1, 2, 3))
+    assert a != c
+
+
+def test_plan_validates_kind():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        Fault(kind="meteor_strike", step=1)
+
+
+def test_injector_counts_and_records():
+    """Exception faults raise ``count`` times then heal; every firing lands
+    in the replay record."""
+    plan = FaultPlan(faults=(Fault(kind="lane_exception", step=2, count=2),))
+    inj = FaultInjector(plan)
+    inj.begin_step(1)
+    inj.raise_if("lane_forward")              # step 1: not yet armed
+    inj.begin_step(2)
+    with pytest.raises(TransientFault):
+        inj.raise_if("lane_forward")
+    with pytest.raises(TransientFault):
+        inj.raise_if("lane_forward")
+    inj.raise_if("lane_forward")              # count exhausted: healed
+    assert inj.exhausted
+    assert [k for _, k, _ in inj.fired] == ["lane_exception"] * 2
+    assert inj.summary()["planned"] == 1
+
+
+def test_uid_fault_stays_pending_until_resolvable():
+    """A uid-targeted fault must not fire (or be dropped) while its target
+    is not yet decoding."""
+    plan = FaultPlan(faults=(Fault(kind="nan_logits", step=1, uid=42),))
+    inj = FaultInjector(plan)
+    inj.begin_step(3)
+    lg = jnp.zeros((2, 8))
+    out, poisoned = inj.poison_logits(lg, lambda f: None)   # unresolvable
+    assert not poisoned and not inj.exhausted
+    out, poisoned = inj.poison_logits(lg, lambda f: 1)      # now in slot 1
+    assert poisoned and inj.exhausted
+    assert bool(jnp.all(jnp.isnan(out[1]))) and bool(jnp.all(out[0] == 0))
+
+
+# --------------------------------------------------- quarantine isolation
+
+@pytest.mark.parametrize("kind", ["nan_logits", "inf_logits"])
+def test_quarantine_survivor_bit_identity(lm, kind):
+    """Poisoning one slot's logits quarantines exactly that request; the
+    co-batched survivor's tokens are bit-identical to a solo run (i.e. to a
+    pool where the victim never existed)."""
+    _, model, params = lm
+    plan = FaultPlan(faults=(Fault(kind=kind, step=5, uid=2),))
+    eng = ServeEngine(model, params, ServeConfig(
+        n_slots=2, max_len=64, prefill_chunk=8, faults=plan))
+    surv = Request(uid=1, prompt=_prompt(6, 1), max_new=8)
+    victim = Request(uid=2, prompt=_prompt(6, 2), max_new=8)
+    assert eng.try_add(surv) and eng.try_add(victim)
+    _drive(eng, [surv, victim])
+    assert victim.phase == QUARANTINED and victim.done
+    assert victim.result is not None and victim.result.phase == QUARANTINED
+    assert eng.quarantined == [(5, 2)]
+    # poisoned logits never reached the victim's stream: tokens stop at the
+    # last CLEAN step (the fault fired at step 5; admission took 1 step)
+    assert len(victim.out) < 8
+    assert surv.phase == DONE
+    assert surv.out == _solo(model, params, 6, 1, 8)
+    # the freed slot is immediately reusable and exact
+    r3 = Request(uid=3, prompt=_prompt(5, 3), max_new=4)
+    assert eng.try_add(r3)
+    _drive(eng, [r3])
+    assert r3.out == _solo(model, params, 5, 3, 4)
+
+
+def test_kv_corrupt_quarantines_via_detection(lm):
+    """A corrupted KV write is not directly observable — it surfaces as
+    non-finite logits on a later step, and the quarantine guard catches it
+    there.  The engine never crashes and accounting stays clean."""
+    _, model, params = lm
+    plan = FaultPlan(faults=(Fault(kind="kv_corrupt", step=4, uid=1),))
+    eng = ServeEngine(model, params, ServeConfig(
+        n_slots=2, max_len=64, prefill_chunk=8, faults=plan))
+    victim = Request(uid=1, prompt=_prompt(6, 7), max_new=20)
+    surv = Request(uid=2, prompt=_prompt(6, 8), max_new=8)
+    assert eng.try_add(victim) and eng.try_add(surv)
+    _drive(eng, [victim, surv])
+    assert victim.phase == QUARANTINED
+    assert [u for _, u in eng.quarantined] == [1]
+    assert surv.out == _solo(model, params, 6, 8, 8)
+
+
+def test_quarantine_disabled_is_off(lm):
+    """``quarantine_nonfinite=False`` turns the guard off: the poisoned
+    request keeps emitting (garbage) tokens instead of being evicted —
+    proving the detection path is the thing doing the work."""
+    _, model, params = lm
+    plan = FaultPlan(faults=(Fault(kind="nan_logits", step=4, uid=1),))
+    eng = ServeEngine(model, params, ServeConfig(
+        n_slots=1, max_len=64, prefill_chunk=8, faults=plan,
+        quarantine_nonfinite=False))
+    r = Request(uid=1, prompt=_prompt(6, 9), max_new=6)
+    assert eng.try_add(r)
+    _drive(eng, [r])
+    assert r.phase == DONE and len(r.out) == 6
+    assert eng.quarantined == []
+
+
+# ------------------------------------------------- transient failures
+
+def test_lane_exception_recovery_token_exact(lm):
+    """A transient lane-forward failure within the retry budget recovers
+    with EXACT tokens: the tick is transactional, so the retry re-runs the
+    same chunk against the same state."""
+    _, model, params = lm
+    plan = FaultPlan(faults=(Fault(kind="lane_exception", step=1, count=1),))
+    eng = ServeEngine(model, params, ServeConfig(
+        n_slots=1, max_len=64, prefill_chunk=8, faults=plan))
+    r = Request(uid=1, prompt=_prompt(12, 4), max_new=5)
+    assert eng.try_add(r)
+    _drive(eng, [r])
+    assert r.out == _solo(model, params, 12, 4, 5)
+    assert eng.errors and eng.errors[0][1] == "admission"
+    assert "TransientFault" in eng.errors[0][2]
+
+
+def test_decode_exception_stalls_then_recovers_exact(lm):
+    """A decode forward failing past the retry budget stalls the pool for
+    exactly that step (state untouched) and the stream stays token-exact."""
+    _, model, params = lm
+    plan = FaultPlan(faults=(Fault(kind="decode_exception", step=3,
+                                   count=2),))
+    eng = ServeEngine(model, params, ServeConfig(
+        n_slots=1, max_len=64, prefill_chunk=8, faults=plan,
+        max_step_retries=1))
+    r = Request(uid=1, prompt=_prompt(6, 30), max_new=6)
+    assert eng.try_add(r)
+    _drive(eng, [r])
+    assert r.out == _solo(model, params, 6, 30, 6)
+    assert len(eng.errors) == 2                      # 1 retry + exhaustion
+    # the stalled step emitted nothing: token cadence has a 1-step gap
+    assert 3 not in r.token_steps
+
+
+def test_admission_exhaustion_fails_inflight_only(lm):
+    """Admission raising past every retry evicts the in-flight tasks as
+    FAILED so the lanes recover; the engine keeps serving afterwards."""
+    _, model, params = lm
+    plan = FaultPlan(faults=(Fault(kind="admission_exception", step=2,
+                                   count=99),))
+    eng = ServeEngine(model, params, ServeConfig(
+        n_slots=1, max_len=64, prefill_chunk=4, faults=plan,
+        max_step_retries=1))
+    r = Request(uid=1, prompt=_prompt(12, 31), max_new=4)
+    assert eng.try_add(r)
+    _drive(eng, [r], max_steps=20)
+    assert r.phase == FAILED and r.done and r.result.phase == FAILED
+    # the injector healed after its 99-count window never re-arms new
+    # steps?  No: count=99 keeps raising — every later step retries
+    # admission, fails, but the pool itself still works: once the plan is
+    # REPLACED by a healed engine, serving is normal.  Here just assert the
+    # faulted engine's accounting stayed clean throughout (done in _drive)
+    # and the queue did not wedge.
+    assert eng.queue_depth == 0
+
+
+def test_step_never_raises_under_any_single_fault(lm):
+    """Every exception-kind fault, injected alone: step() never raises and
+    invariants hold every tick."""
+    _, model, params = lm
+    for kind in ("lane_exception", "admission_exception",
+                 "decode_exception"):
+        plan = FaultPlan(faults=(Fault(kind=kind, step=2, count=1),))
+        eng = ServeEngine(model, params, ServeConfig(
+            n_slots=1, max_len=64, prefill_chunk=8, faults=plan))
+        r = Request(uid=1, prompt=_prompt(10, 40), max_new=4)
+        assert eng.try_add(r)
+        _drive(eng, [r])
+        assert r.out == _solo(model, params, 10, 40, 4), kind
+
+
+# --------------------------------------------------------- deadlines
+
+def test_default_deadline_times_out_and_frees_slot(lm):
+    _, model, params = lm
+    eng = ServeEngine(model, params, ServeConfig(
+        n_slots=1, max_len=64, prefill_chunk=8, default_deadline_steps=3))
+    r = Request(uid=1, prompt=_prompt(4, 5), max_new=50)
+    assert eng.try_add(r)
+    _drive(eng, [r], max_steps=10)
+    assert r.phase == TIMEOUT and r.done
+    assert r.result is not None and r.result.phase == TIMEOUT
+    assert r.result.tokens == r.out          # partial output preserved
+    assert eng.timeouts == [(4, 1)]          # first step past the deadline
+    # slot is reusable and exact
+    r2 = Request(uid=2, prompt=_prompt(4, 6), max_new=3)
+    assert eng.try_add(r2)
+    _drive(eng, [r2])
+    assert r2.out == _solo(model, params, 4, 6, 3)
+
+
+def test_request_deadline_overrides_default(lm):
+    """Per-request ``deadline_steps`` wins over the engine default, in both
+    directions (tighter and looser)."""
+    _, model, params = lm
+    eng = ServeEngine(model, params, ServeConfig(
+        n_slots=2, max_len=64, prefill_chunk=8, default_deadline_steps=100))
+    tight = Request(uid=1, prompt=_prompt(4, 11), max_new=50,
+                    deadline_steps=2)
+    loose = Request(uid=2, prompt=_prompt(4, 12), max_new=4)
+    assert eng.try_add(tight) and eng.try_add(loose)
+    _drive(eng, [tight, loose], max_steps=20)
+    assert tight.phase == TIMEOUT
+    assert loose.phase == DONE
+    assert loose.out == _solo(model, params, 4, 12, 4)
+
+
+def test_queued_request_can_time_out(lm):
+    """Deadlines bind from ENQUEUE, not from admission: a request starved
+    in the queue times out without ever touching a slot."""
+    _, model, params = lm
+    eng = ServeEngine(model, params, ServeConfig(
+        n_slots=1, max_len=64, prefill_chunk=8))
+    hog = Request(uid=1, prompt=_prompt(4, 13), max_new=30)
+    starved = Request(uid=2, prompt=_prompt(4, 14), max_new=4,
+                      deadline_steps=3)
+    assert eng.try_add(hog) and eng.try_add(starved)
+    for _ in range(8):
+        eng.step()
+        check_invariants(eng)
+    assert starved.phase == TIMEOUT and starved.out == []
+    assert not hog.done                       # the hog keeps decoding
+
+
+def test_no_deadline_means_no_timeout(lm):
+    _, model, params = lm
+    eng = ServeEngine(model, params, ServeConfig(
+        n_slots=1, max_len=128, prefill_chunk=8))
+    r = Request(uid=1, prompt=_prompt(4, 15), max_new=40)
+    assert eng.try_add(r)
+    _drive(eng, [r], max_steps=60)
+    assert r.phase == DONE and len(r.out) == 40 and eng.timeouts == []
+
+
+# ----------------------------------------------------- drain / close
+
+def test_drain_finishes_everything(lm):
+    _, model, params = lm
+    eng = ServeEngine(model, params, ServeConfig(
+        n_slots=2, max_len=64, prefill_chunk=8))
+    rs = [Request(uid=i, prompt=_prompt(6, 50 + i), max_new=4)
+          for i in range(4)]
+    for r in rs:
+        assert eng.try_add(r)
+    fin = eng.drain()
+    assert sorted(r.uid for r in fin) == [0, 1, 2, 3]
+    assert all(r.out == _solo(model, params, 6, 50 + r.uid, 4) for r in rs)
+    assert eng.live_requests() == []
+    check_invariants(eng)
+
+
+def test_drain_bound_raises_on_lost_liveness(lm):
+    """An engine that cannot make progress (admission permanently raising)
+    blows the drain bound with a RuntimeError instead of spinning."""
+    _, model, params = lm
+    plan = FaultPlan(faults=(Fault(kind="admission_exception", step=1,
+                                   count=10**6),))
+    eng = ServeEngine(model, params, ServeConfig(
+        n_slots=1, max_len=64, prefill_chunk=8, faults=plan))
+    # queued request: admission never succeeds, so it never terminates
+    r = Request(uid=1, prompt=_prompt(6, 60), max_new=4)
+    assert eng.try_add(r)
+    with pytest.raises(RuntimeError, match="drain did not converge"):
+        eng.drain(max_steps=6)
+
+
+def test_close_cancels_and_seals(lm):
+    _, model, params = lm
+    eng = ServeEngine(model, params, ServeConfig(
+        n_slots=1, max_len=64, prefill_chunk=4))
+    decoding = Request(uid=1, prompt=_prompt(4, 61), max_new=30)
+    prefilling = Request(uid=2, prompt=_prompt(12, 62), max_new=4)
+    queued = Request(uid=3, prompt=_prompt(4, 63), max_new=4)
+    for r in (decoding, prefilling, queued):
+        assert eng.try_add(r)
+    eng.step()                      # uid 1 admitted + decoding
+    eng.step()                      # uid 2 starts prefilling
+    cancelled = eng.close()
+    assert sorted(r.uid for r in cancelled) == [1, 2, 3]
+    assert all(r.done and r.phase == CANCELLED and r.result is not None
+               for r in (decoding, prefilling, queued))
+    assert eng.closed and eng.close() == []        # idempotent
+    with pytest.raises(RuntimeError, match="closed"):
+        eng.step()
+    with pytest.raises(RuntimeError, match="closed"):
+        eng.try_add(Request(uid=9, prompt=_prompt(4), max_new=2))
+    check_invariants(eng)           # closed engine holds no work
+
+
+def test_drain_then_close_is_clean_shutdown(lm):
+    _, model, params = lm
+    eng = ServeEngine(model, params, ServeConfig(
+        n_slots=2, max_len=64, prefill_chunk=8))
+    rs = [Request(uid=i, prompt=_prompt(5, 70 + i), max_new=3)
+          for i in range(3)]
+    for r in rs:
+        assert eng.try_add(r)
+    eng.drain()
+    assert eng.close() == []        # nothing left to cut
+    assert eng.closed
+
+
+# ------------------------------------------- satellite: stream abandon
+
+def test_abandoned_stream_cancels_request(lm):
+    """Breaking out of / closing a ``stream`` generator cancels the
+    request — slot and lane free instead of leaking forever."""
+    _, model, params = lm
+    eng = ServeEngine(model, params, ServeConfig(
+        n_slots=1, max_len=64, prefill_chunk=8))
+    r = Request(uid=1, prompt=_prompt(4, 20), max_new=10)
+    it = eng.stream(r)
+    assert isinstance(next(it), int)
+    it.close()                                # GeneratorExit path
+    assert r.done and r.phase == CANCELLED
+    check_invariants(eng)
+    # pool fully reusable, next stream exact
+    r2 = Request(uid=2, prompt=_prompt(4, 21), max_new=3)
+    assert list(eng.stream(r2)) == _solo(model, params, 4, 21, 3)
+
+
+def test_stream_break_mid_iteration(lm):
+    _, model, params = lm
+    eng = ServeEngine(model, params, ServeConfig(
+        n_slots=1, max_len=64, prefill_chunk=8))
+    r = Request(uid=1, prompt=_prompt(4, 22), max_new=10)
+    got = []
+    for tok in eng.stream(r):
+        got.append(tok)
+        if len(got) == 2:
+            break                              # abandon via break + gc
+    del tok
+    assert r.done and r.phase == CANCELLED and len(r.out) >= 2
+    assert eng.live_requests() == []
+
+
+def test_finished_stream_not_cancelled(lm):
+    """A stream consumed to completion finishes DONE, not CANCELLED."""
+    _, model, params = lm
+    eng = ServeEngine(model, params, ServeConfig(
+        n_slots=1, max_len=64, prefill_chunk=8))
+    r = Request(uid=1, prompt=_prompt(4, 23), max_new=4)
+    toks = list(eng.stream(r))
+    assert r.phase == DONE and toks == _solo(model, params, 4, 23, 4)
+
+
+# --------------------------------------- satellite: try_add validation
+
+def test_try_add_rejects_garbage_prompts(lm):
+    _, model, params = lm
+    eng = ServeEngine(model, params, ServeConfig(n_slots=1, max_len=32))
+    vocab = model.cfg.vocab_size
+    cases = {
+        "float dtype": np.array([1.5, 2.5]),
+        "2-D": np.array([[1, 2]]),
+        "negative id": np.array([-1, 2]),
+        "out of vocab": np.array([1, vocab]),
+        "empty": np.array([], np.int32),
+    }
+    for label, bad in cases.items():
+        with pytest.raises(ValueError):
+            eng.try_add(Request(uid=99, prompt=bad, max_new=2))
+    # list prompts still work (coerced to ndarray)
+    r = Request(uid=1, prompt=[1, 2, 3], max_new=2)
+    assert eng.try_add(r)
+    assert isinstance(r.prompt, np.ndarray)
+    _drive(eng, [r])
+    assert r.phase == DONE
+
+
+def test_rejected_request_leaves_engine_clean(lm):
+    """A ValueError'd request must not occupy queue accounting."""
+    _, model, params = lm
+    eng = ServeEngine(model, params, ServeConfig(n_slots=1, max_len=32))
+    with pytest.raises(ValueError):
+        eng.try_add(Request(uid=1, prompt=np.array([-5]), max_new=2))
+    assert eng.queue_depth == 0
+    check_invariants(eng)
+
+
+# ------------------------- satellite: queue overflow + cancel storms
+
+def test_queue_overflow_preserves_fifo(lm):
+    """Rejected ``try_add``s (queue full) must not perturb the FIFO order
+    of already-accepted admissions."""
+    _, model, params = lm
+    eng = ServeEngine(model, params, ServeConfig(
+        n_slots=1, max_len=64, prefill_chunk=8, max_queue=3))
+    accepted = [Request(uid=i, prompt=_prompt(4, 80 + i), max_new=2)
+                for i in range(3)]
+    for r in accepted:
+        assert eng.try_add(r)
+    for i in range(3, 8):            # overflow storm: all bounce
+        assert not eng.try_add(
+            Request(uid=i, prompt=_prompt(4, 80 + i), max_new=2))
+    check_invariants(eng)
+    order = []
+    for r in accepted:
+        r.on_token = lambda rq, tok, step, _o=order: \
+            _o.append(rq.uid) if len(rq.out) == 1 else None
+    _drive(eng, accepted)
+    assert order == [0, 1, 2]        # strict arrival order on 1 slot
+    # queue drained: a bounced uid can come back and run
+    late = Request(uid=9, prompt=_prompt(4, 89), max_new=2)
+    assert eng.try_add(late)
+    _drive(eng, [late])
+    assert late.phase == DONE
+
+
+def test_cancel_storm_leaves_engine_reusable(lm):
+    """Cancelling EVERY queued + in-flight request leaves queue_depth == 0
+    and the lanes/slots immediately reusable."""
+    _, model, params = lm
+    eng = ServeEngine(model, params, ServeConfig(
+        n_slots=2, max_len=64, prefill_chunk=4))
+    rs = [Request(uid=i, prompt=_prompt(10, 90 + i), max_new=4)
+          for i in range(5)]
+    for r in rs:
+        assert eng.try_add(r)
+    eng.step()                       # some reach lanes / slots
+    for r in rs:
+        eng.cancel(r.uid)
+    assert eng.queue_depth == 0
+    assert all(r.done and r.phase == CANCELLED for r in rs)
+    assert eng.live_requests() == []
+    check_invariants(eng)
+    fresh = Request(uid=50, prompt=_prompt(6, 99), max_new=3)
+    assert eng.try_add(fresh)
+    _drive(eng, [fresh])
+    assert fresh.out == _solo(model, params, 6, 99, 3)
+
+
+def test_plan_driven_cancel_storm(lm):
+    """Cancel faults fire from the plan — a storm is replayable data."""
+    _, model, params = lm
+    plan = FaultPlan(faults=tuple(
+        Fault(kind="cancel", step=3, uid=u) for u in (1, 2, 3)))
+    eng = ServeEngine(model, params, ServeConfig(
+        n_slots=2, max_len=64, prefill_chunk=8, faults=plan))
+    rs = [Request(uid=i, prompt=_prompt(5, 100 + i), max_new=8)
+          for i in (1, 2, 3)]
+    for r in rs:
+        assert eng.try_add(r)
+    _drive(eng, rs, max_steps=20)
+    assert all(r.phase == CANCELLED for r in rs)
+    assert {t for _, k, t in eng.injector.fired if k == "cancel"} \
+        == {1, 2, 3}
+
+
+def test_slow_step_fires(lm):
+    _, model, params = lm
+    plan = FaultPlan(faults=(Fault(kind="slow_step", step=2, value=0.01),))
+    eng = ServeEngine(model, params, ServeConfig(
+        n_slots=1, max_len=64, prefill_chunk=8, faults=plan))
+    r = Request(uid=1, prompt=_prompt(4, 110), max_new=3)
+    assert eng.try_add(r)
+    _drive(eng, [r])
+    assert ("slow_step" in {k for _, k, _ in eng.injector.fired})
+    assert r.out == _solo(model, params, 4, 110, 3)
+
+
+# ------------------------------------------------- seeded chaos property
+
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10**6))
+def test_chaos_property(lm, seed):
+    """A seeded random storm over every fault kind: the engine never
+    raises, invariants hold after every step, every request terminates in
+    a legal phase, and any request the storm did NOT touch matches its solo
+    tokens exactly."""
+    _, model, params = lm
+    uids = (1, 2, 3)
+    plan = FaultPlan.random(seed, n_faults=5, max_step=16, n_slots=2,
+                            uids=uids,
+                            kinds=("nan_logits", "inf_logits", "kv_corrupt",
+                                   "lane_exception", "decode_exception",
+                                   "cancel", "slow_step"))
+    eng = ServeEngine(model, params, ServeConfig(
+        n_slots=2, max_len=64, prefill_chunk=8, faults=plan,
+        default_deadline_steps=64))
+    rs = [Request(uid=u, prompt=_prompt(6, 200 + u), max_new=6)
+          for u in uids]
+    for r in rs:
+        assert eng.try_add(r)
+    for _ in range(80):
+        eng.step()
+        assert audit_engine(eng) == []
+        if all(r.done for r in rs):
+            break
+    legal = {DONE, CANCELLED, TIMEOUT, QUARANTINED, FAILED}
+    assert all(r.done and r.phase in legal for r in rs)
+    touched = {t for _, k, t in eng.injector.fired
+               if k in ("nan_logits", "inf_logits", "kv_corrupt", "cancel")}
+    # slot-targeted logit/kv faults can hit anyone; only claim exactness
+    # when the storm contained no slot-targeted corruption at all
+    slot_targeted = any(
+        f.uid is None and f.kind in ("nan_logits", "inf_logits",
+                                     "kv_corrupt")
+        for f in plan.faults)
+    if not slot_targeted:
+        for r in rs:
+            if r.uid not in touched and r.phase == DONE:
+                assert r.out == _solo(model, params, 6, 200 + r.uid, 6), \
+                    f"untouched uid {r.uid} diverged under {plan}"

@@ -26,6 +26,9 @@ SERVE_ALL = {
     "ServeConfig", "Request", "ServeEngine", "generate", "GenerateResult",
     "PrefillPipeline", "PrefillTask",
     "PENDING", "PREFILLING", "DECODING", "DONE", "CANCELLED",
+    "TIMEOUT", "QUARANTINED", "FAILED",
+    "Fault", "FaultPlan", "FaultInjector", "TransientFault", "FAULT_KINDS",
+    "InvariantViolation", "audit_engine", "check_invariants",
     "SloConfig", "SloController", "SloSignals", "TierSpec", "default_tiers",
     "RESERVED", "STANDARD", "DEGRADABLE", "TIERS",
 }
@@ -84,8 +87,51 @@ def test_serve_config_fields_pinned():
     assert {f.name for f in ServeConfig.__dataclass_fields__.values()} == {
         "n_slots", "max_len", "prefill_chunk", "chunks_per_step",
         "max_queue", "jit_prefill", "sample", "precision_policy", "slo",
-        "mesh", "tp_axis"}
+        "mesh", "tp_axis",
+        "default_deadline_steps", "max_step_retries",
+        "quarantine_nonfinite", "faults"}
     assert ServeConfig().mesh is None and ServeConfig().tp_axis == "model"
+    # hardening defaults: no deadline, quarantine ON, no fault plan
+    cfg = ServeConfig()
+    assert cfg.default_deadline_steps is None
+    assert cfg.max_step_retries == 2
+    assert cfg.quarantine_nonfinite is True
+    assert cfg.faults is None
+
+
+def test_hardening_surface_pinned():
+    """The PR 9 failure surface: deadlines, fault plane, shutdown, and the
+    terminal phase strings downstream dashboards key on."""
+    from repro.serve import (FAILED, FAULT_KINDS, Fault, FaultPlan,
+                             QUARANTINED, TIMEOUT)
+
+    assert "deadline_steps" in {
+        f.name for f in Request.__dataclass_fields__.values()}
+    assert Request.__dataclass_fields__["deadline_steps"].default is None
+
+    # phase strings are wire format — pin the values, not just the names
+    assert TIMEOUT == "timeout"
+    assert QUARANTINED == "quarantined"
+    assert FAILED == "failed"
+    assert set(FAULT_KINDS) == {
+        "nan_logits", "inf_logits", "kv_corrupt", "lane_exception",
+        "admission_exception", "decode_exception", "cancel", "slow_step"}
+
+    # Fault/FaultPlan are declarative data
+    assert {f.name for f in Fault.__dataclass_fields__.values()} == {
+        "kind", "step", "slot", "uid", "count", "value"}
+    assert {f.name for f in FaultPlan.__dataclass_fields__.values()} == {
+        "faults", "seed"}
+    rnd = inspect.signature(FaultPlan.random).parameters
+    assert {"n_faults", "max_step", "n_slots", "uids", "kinds"} <= set(rnd)
+
+    # shutdown + audit surface
+    drain = inspect.signature(ServeEngine.drain).parameters
+    assert list(drain) == ["self", "max_steps"]
+    assert drain["max_steps"].default is None
+    assert list(inspect.signature(ServeEngine.close).parameters) == ["self"]
+    assert isinstance(ServeEngine.closed, property)
+    assert callable(ServeEngine.check_invariants)
 
 
 def test_sharding_surface_pinned():

@@ -128,6 +128,28 @@ def test_stale_ttft_window_expires_when_idle():
     assert c.restore_events >= 1
 
 
+def test_timed_out_feeds_pressure():
+    """Deadline evictions are direct overload evidence: ``timed_out > 0``
+    trips pressure on its own (empty queue, cool TTFT) and vetoes slack."""
+    c = SloController(N_BITS, SloConfig(shed_patience=1, restore_patience=1,
+                                        queue_high_water=99))
+    c.update(SloSignals(queue_depth=0, timed_out=1))
+    assert c.shed_events == 1                 # timeout alone sheds
+    # a timeout step is never slack, even with everything else quiet: with
+    # restore_patience=2, two timeout steps after a shed restore NOTHING
+    # (each resets the cool counter), while two clean steps do
+    c2 = SloController(N_BITS, SloConfig(shed_patience=1, restore_patience=2,
+                                         queue_high_water=99))
+    c2.update(SloSignals(queue_depth=0, timed_out=1))      # shed once
+    assert c2.shed_events == 1
+    c2.update(SloSignals(queue_depth=0, timed_out=1))
+    c2.update(SloSignals(queue_depth=0, timed_out=1))
+    assert c2.restore_events == 0             # timeouts veto the slack streak
+    c2.update(SloSignals(queue_depth=0))
+    c2.update(SloSignals(queue_depth=0))
+    assert c2.restore_events == 1             # genuine slack restores
+
+
 def test_custom_tiers_clamped_to_n_bits():
     cfg = SloConfig(tiers={"gold": TierSpec(floor=99, ceiling=99,
                                             shed_order=0)})

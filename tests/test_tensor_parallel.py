@@ -13,7 +13,9 @@ the served token streams.  This file pins that contract two ways:
   so the XLA override never leaks) sweeping shard counts {1, 2, 4} over
   scalar and per-row plane budgets with and without the MSR bound, plus a
   deterministic end-to-end pin that a sharded ``ServeEngine`` burst emits
-  token-identical results vs the unsharded engine.
+  token-identical results vs the unsharded engine, and a 2-shard chaos
+  mirror: fault injection + quarantine isolation (``serve/faults.py``)
+  keeps survivors bit-identical on a sharded engine too.
 
 Also holds the ``launch.mesh.make_test_mesh`` zero-extent regression test:
 fewer devices than the model axis must raise, not build a (0, model) mesh.
@@ -240,4 +242,62 @@ def test_sharded_serve_engine_token_identical():
             for (_, pg), (_, pr) in zip(got, ref):
                 assert abs(pg - pr) < 1e-6, (shards, pg, pr)
         print("sharded serving token-identical OK")
+    """)
+
+
+@pytest.mark.slow
+def test_sharded_chaos_quarantine_isolation():
+    # PR 9 hardening composes with tensor parallelism: on a 2-shard mesh,
+    # an injected NaN quarantines exactly the poisoned request, step()
+    # never raises, invariants hold every tick, and the SURVIVOR's token
+    # stream is bit-identical to a 2-shard run that never admitted the
+    # victim (the fault hooks are host-side, outside the sharded jit, so
+    # nothing recompiles and no shard sees a different program).
+    run_dist("""
+        import dataclasses
+        import numpy as np, jax
+        from repro.configs.base import DslotConfig
+        from repro.configs.registry import ARCHS
+        from repro.launch.mesh import make_test_mesh
+        from repro.models import pspec
+        from repro.models.model_zoo import build_model
+        from repro.serve import (Fault, FaultPlan, QUARANTINED, Request,
+                                 ServeConfig, ServeEngine, audit_engine)
+
+        cfg = dataclasses.replace(
+            ARCHS["olmo-1b"].reduced(), act="relu", glu=False,
+            dslot=DslotConfig(enabled=True, block_m=16, block_n=32,
+                              block_k=16, act_scale=0.05))
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        surv_p = np.asarray([3, 1, 4, 1, 5, 9, 2, 6], np.int32)
+        vict_p = np.asarray([2, 7, 1, 8, 2, 8], np.int32)
+        mesh = make_test_mesh(n_devices=2, model=2)
+
+        def run(with_victim, faults):
+            pspec.set_mesh(None)
+            eng = ServeEngine(model, params, ServeConfig(
+                n_slots=2, max_len=64, prefill_chunk=4, mesh=mesh,
+                faults=faults))
+            surv = Request(uid=1, prompt=surv_p, max_new=8)
+            assert eng.try_add(surv)
+            vict = None
+            if with_victim:
+                vict = Request(uid=2, prompt=vict_p, max_new=8)
+                assert eng.try_add(vict)
+            for _ in range(100):
+                eng.step()
+                assert audit_engine(eng) == []
+                if surv.done and (vict is None or vict.done):
+                    break
+            return eng, surv, vict
+
+        plan = FaultPlan(faults=(Fault(kind="nan_logits", step=5, uid=2),))
+        eng, surv, vict = run(True, plan)
+        assert vict.phase == QUARANTINED and vict.done
+        assert [u for _, u in eng.quarantined] == [2]
+        assert surv.phase == "done" and len(surv.out) == 8
+        _, ref, _ = run(False, None)       # victim never admitted
+        assert list(surv.out) == list(ref.out), (surv.out, ref.out)
+        print("sharded chaos quarantine OK")
     """)
