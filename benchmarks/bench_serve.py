@@ -29,6 +29,14 @@ device-gets the sampled tokens, so ``perf_counter`` around it is honest):
   on shared CI runners (the per-step cost bound is already gated by
   ``decode_stall_ms < prefill_full_ms`` above).
 
+* ZOO-STACK bursts (``"burst_swa"`` / ``"burst_ssm"`` keys, PR 10): the
+  same sequential-vs-batched burst drain on a sliding-window-attention
+  stack (``h2o-danube-3-4b`` reduced) and a recurrent SSM stack
+  (``mamba2-780m`` reduced).  Batched admission is no longer an
+  attention-only fast path — every zoo stack rides the lanes — so each of
+  these carries the same deterministic steps-domain gate
+  (``batched_stall_leq_sequential``) as the primary burst.
+
 * OVERLOAD (``"overload"`` key): the SLO control loop under a 4x burst.  A
   calibrated DSLOT model serves ``4 * n_slots`` requests enqueued at once,
   tiers cycling reserved/standard/degradable, with ``ServeConfig.slo`` set.
@@ -219,7 +227,8 @@ def _drain_burst(model, params, prompts, *, chunk, lanes, n_slots, max_len,
 
 
 def run_burst(model, params, cfg, prompt_len: int, chunk: int, n_slots: int,
-              max_new: int, n_burst: int, lanes: int, smoke: bool) -> dict:
+              max_new: int, n_burst: int, lanes: int, smoke: bool,
+              arch: str = "olmo-1b.reduced") -> dict:
     """Burst admission: N queued prompts, sequential vs batched drain."""
     rng = np.random.default_rng(1)
     max_len = prompt_len + max_new + 8
@@ -230,7 +239,7 @@ def run_burst(model, params, cfg, prompt_len: int, chunk: int, n_slots: int,
     seq = _drain_burst(model, params, prompts, lanes=1, **common)
     bat = _drain_burst(model, params, prompts, lanes=lanes, **common)
     return {
-        "config": {"n_burst": n_burst, "prompt_len": prompt_len,
+        "config": {"arch": arch, "n_burst": n_burst, "prompt_len": prompt_len,
                    "prefill_chunk": chunk, "n_slots": n_slots,
                    "lanes": lanes, "max_new": max_new, "smoke": smoke},
         "sequential": seq,
@@ -547,6 +556,17 @@ def main():
     out["burst"] = run_burst(model, params, cfg, prompt_len, chunk,
                              args.slots, args.max_new, n_burst,
                              args.burst_lanes, args.smoke)
+    # every zoo stack batches now: the same burst drain + gate on a
+    # sliding-window and a recurrent stack (ragged lanes, no serial path)
+    for key, zoo_arch in (("burst_swa", "h2o-danube-3-4b"),
+                          ("burst_ssm", "mamba2-780m")):
+        zcfg = ARCHS[zoo_arch].reduced()
+        zmodel = build_model(zcfg)
+        zparams = zmodel.init(jax.random.PRNGKey(0))
+        out[key] = run_burst(zmodel, zparams, zcfg, prompt_len, chunk,
+                             args.slots, args.max_new, n_burst,
+                             args.burst_lanes, args.smoke,
+                             arch=f"{zoo_arch}.reduced")
     out["overload"] = run_overload(3 * chunk, chunk, args.slots,
                                    args.max_new, 2, args.smoke)
     out["chaos"] = run_chaos(3 * chunk, chunk, args.slots, args.max_new,
@@ -562,22 +582,24 @@ def main():
     for t in out["ttft"]:
         print(f"  ttft uid={t['uid']}: {t['ttft_steps']} steps, "
               f"{t['ttft_ms']:.1f} ms")
-    b = out["burst"]
-    for mode in ("sequential", "batched"):
-        m = b[mode]
-        print(f"burst {mode:10s}  lanes={m['lanes']}  "
-              f"ttft p50 {m['ttft_p50_ms']:8.1f} ms  "
-              f"p95 {m['ttft_p95_ms']:8.1f} ms  "
-              f"total stall {m['total_stall_ms']:8.1f} ms over "
-              f"{m['admission_steps']} stalled steps "
-              f"(worst ttft {m['ttft_steps_worst']} steps)")
-    print(f"burst stall ratio ms (informational) {b['stall_ratio_ms']:.3f}; "
-          f"stalled-steps {b['batched']['admission_steps']} vs "
-          f"{b['sequential']['admission_steps']}, worst ttft "
-          f"{b['batched']['ttft_steps_worst']} vs "
-          f"{b['sequential']['ttft_steps_worst']} steps "
-          f"({'OK' if b['batched_stall_leq_sequential'] else 'FAIL'}: "
-          f"batched <= sequential)")
+    for bkey in ("burst", "burst_swa", "burst_ssm"):
+        b = out[bkey]
+        print(f"{bkey} [{b['config']['arch']}]")
+        for mode in ("sequential", "batched"):
+            m = b[mode]
+            print(f"  {mode:10s}  lanes={m['lanes']}  "
+                  f"ttft p50 {m['ttft_p50_ms']:8.1f} ms  "
+                  f"p95 {m['ttft_p95_ms']:8.1f} ms  "
+                  f"total stall {m['total_stall_ms']:8.1f} ms over "
+                  f"{m['admission_steps']} stalled steps "
+                  f"(worst ttft {m['ttft_steps_worst']} steps)")
+        print(f"  stall ratio ms (informational) {b['stall_ratio_ms']:.3f}; "
+              f"stalled-steps {b['batched']['admission_steps']} vs "
+              f"{b['sequential']['admission_steps']}, worst ttft "
+              f"{b['batched']['ttft_steps_worst']} vs "
+              f"{b['sequential']['ttft_steps_worst']} steps "
+              f"({'OK' if b['batched_stall_leq_sequential'] else 'FAIL'}: "
+              f"batched <= sequential)")
     o = out["overload"]
     print(f"overload 4x burst ({o['config']['n_burst']} reqs, "
           f"{o['drain_steps']} steps to drain; ttft p95 "
@@ -602,7 +624,8 @@ def main():
     print(f"wrote {args.json}")
     if not out["stall_below_full_prefill"]:
         raise SystemExit(1)
-    if not b["batched_stall_leq_sequential"]:
+    if not all(out[k]["batched_stall_leq_sequential"]
+               for k in ("burst", "burst_swa", "burst_ssm")):
         raise SystemExit(1)
     if not o["ok"]:
         raise SystemExit(1)

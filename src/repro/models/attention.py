@@ -316,16 +316,6 @@ def attention_forward(p: Params, x: jax.Array, cfg, *, positions: jax.Array,
         # appended to existing rings at arbitrary per-sequence offsets —
         # batched, each row masked against its own positions.
         window = cfg.window if cfg.attn_type == "swa" else 0
-        if S > 1 and window:
-            # A chunk landing at offset o recycles ring slots (capacity
-            # = window) that still hold in-window keys needed by the
-            # chunk's own earliest queries — extension would be silently
-            # wrong, so refuse instead (callers fall back to one-shot
-            # prefill; see serve/prefill.py).  Applies to ANY batch size.
-            raise NotImplementedError(
-                "multi-token cache extension is unsupported for "
-                "sliding-window attention: the window-sized ring would "
-                "evict in-window keys the chunk still needs")
         C = cache.k.shape[1]
         if S > C:
             # consecutive positions are only slot-distinct modulo the ring
@@ -354,18 +344,38 @@ def attention_forward(p: Params, x: jax.Array, cfg, *, positions: jax.Array,
         vc = cache.v.at[bidx, slots].set(vw)
         pc = cache.positions.at[bidx, slots].set(pw)
         new_cache = KVCache(k=kc, v=vc, positions=pc)
+        if S > 1 and window:
+            # SWA carry-window extension: a chunk landing at offset o
+            # recycles ring slots (capacity = window) that still hold
+            # in-window keys needed by the chunk's own earliest queries —
+            # attending against the POST-write ring would silently drop
+            # them.  Attend instead against the PRE-write ring CARRIED
+            # alongside the chunk's own keys: the ring holds positions
+            # o-C..o-1 (a superset of every in-window key the chunk can
+            # see), the chunk contributes o..o+S-1, and the two position
+            # sets are disjoint, so the window mask selects exactly the
+            # right keys.  Pad rows' chunk keys are masked out (-1) so a
+            # short row can only see its own live ring.  The RING is still
+            # written through the masked scatter above — eviction there is
+            # correct (decode never looks back past the window).
+            kp_chunk = pos_b if q_valid is None \
+                else jnp.where(q_valid, pos_b, -1)
+            ka = jnp.concatenate([cache.k, k], axis=1)
+            va = jnp.concatenate([cache.v, v], axis=1)
+            pa = jnp.concatenate([cache.positions, kp_chunk], axis=1)
+        else:
+            ka, va, pa = kc, vc, pc
         # decode: the cache is sequence-sharded (context parallelism); keep
         # that layout — repeating kv heads is fine, but constraining heads
         # onto the model axis here would force a full cache reshard.
         if scheme == "repeat":
             g = cfg.n_heads // max(cfg.n_kv_heads, 1)
-            ka = jnp.repeat(kc, g, axis=2) if g > 1 else kc
-            va = jnp.repeat(vc, g, axis=2) if g > 1 else vc
-        else:
-            ka, va = kc, vc
+            if g > 1:
+                ka = jnp.repeat(ka, g, axis=2)
+                va = jnp.repeat(va, g, axis=2)
         ka = constrain(ka, "b", "tp", None, None)
         va = constrain(va, "b", "tp", None, None)
-        out = flash_attention(q, ka, va, pos_b, pc, causal=causal,
+        out = flash_attention(q, ka, va, pos_b, pa, causal=causal,
                               window=window, chunk=cfg.attn_chunk)
     else:
         window = cfg.window if (cfg.attn_type == "swa" and not cross) else 0
@@ -386,16 +396,36 @@ def attention_forward(p: Params, x: jax.Array, cfg, *, positions: jax.Array,
             # is sized for the TARGET sequence length (cache_len), not the
             # prompt, so subsequent decode steps never clobber live slots.
             C = Skv if cross else cache_capacity(cfg, cache_len or int(Skv))
-            n_keep = min(C, Skv)
-            keep = slice(Skv - n_keep, Skv)
-            kept_pos = kv_pos[keep].astype(jnp.int32)
-            slots = kept_pos % C
-            zk = jnp.zeros((B, C) + k.shape[2:], k.dtype)
-            pos0 = jnp.full((C,), -1, jnp.int32).at[slots].set(kept_pos)
-            new_cache = KVCache(
-                k=zk.at[:, slots].set(k[:, keep]),
-                v=zk.at[:, slots].set(v[:, keep]),
-                positions=jnp.broadcast_to(pos0[None], (B, C)))
+            if q_valid is not None and not cross:
+                # Ragged stacked prefill: the last C COLUMNS of a padded
+                # batch are pads for a short row — slicing them (below)
+                # would evict that row's real in-window keys.  Build each
+                # row's ring by a per-(row, slot) GATHER of its last
+                # min(C, L) VALID positions instead: slot s's owner is the
+                # largest valid position congruent to s mod C.
+                lengths = jnp.sum(q_valid.astype(jnp.int32), axis=1)  # (B,)
+                s_idx = jnp.arange(C, dtype=jnp.int32)[None]          # (1,C)
+                last = lengths[:, None] - 1                           # (B,1)
+                owner = last - ((last - s_idx) % C)                   # (B,C)
+                valid = (owner >= 0) & (lengths[:, None] > 0)
+                col = jnp.clip(owner, 0, Skv - 1)[..., None, None]
+                kb = jnp.take_along_axis(k, col, axis=1)
+                vb = jnp.take_along_axis(v, col, axis=1)
+                new_cache = KVCache(
+                    k=jnp.where(valid[..., None, None], kb, 0),
+                    v=jnp.where(valid[..., None, None], vb, 0),
+                    positions=jnp.where(valid, owner, -1))
+            else:
+                n_keep = min(C, Skv)
+                keep = slice(Skv - n_keep, Skv)
+                kept_pos = kv_pos[keep].astype(jnp.int32)
+                slots = kept_pos % C
+                zk = jnp.zeros((B, C) + k.shape[2:], k.dtype)
+                pos0 = jnp.full((C,), -1, jnp.int32).at[slots].set(kept_pos)
+                new_cache = KVCache(
+                    k=zk.at[:, slots].set(k[:, keep]),
+                    v=zk.at[:, slots].set(v[:, keep]),
+                    positions=jnp.broadcast_to(pos0[None], (B, C)))
 
     out = constrain(out, "b", None, "tp", None)
     y = apply_dense(p["wo"], out.reshape(B, S, cfg.n_heads * hd))

@@ -79,23 +79,6 @@ class Model:
         return prepare_mlp_dslot(params, self.cfg, mesh=mesh,
                                  tp_axis=tp_axis)
 
-    @property
-    def supports_ragged_batches(self) -> bool:
-        """Whether ``prefill``/``extend`` accept stacked ragged requests
-        (the ``lengths`` argument): decoder-only FULL-attention token
-        stacks.  Recurrent mixers (ssm/rglru) advance their carried state
-        per token, so a right-pad token would corrupt the lane; enc-dec and
-        frontend models key their inputs off more than ``tokens``; and
-        sliding-window attention builds its window-capacity ring from the
-        LAST ``window`` columns of the padded batch, which for a short row
-        are pads — its real in-window keys would be evicted."""
-        if self.cfg.family == "encdec" or self.cfg.frontend:
-            return False
-        if self.cfg.attn_type == "swa" and self.cfg.window:
-            return False
-        kinds = set(self.decoder.pattern) | set(self.decoder.rest_kinds)
-        return not (kinds & {"ssm", "rglru"})
-
     # ------------------------------------------------------------- helpers
 
     def _embed_inputs(self, params, batch) -> jax.Array:
@@ -124,11 +107,12 @@ class Model:
 
         ``lengths`` (prefill mode only): per-sequence (B,) valid token
         counts for a RAGGED stacked batch — rows are right-padded to the
-        common S and the prefill logits are taken at each row's last VALID
-        position instead of column S-1.  Pad positions do land in the built
-        cache, but they are invisible to decoding: a pad key at position p
-        is causal-masked until the real token at p is decoded, and that
-        decode step overwrites slot ``p % C`` before attending.
+        common S, pad positions are masked out of every layer's carried
+        state (KV-ring writes skipped, recurrent scans treat them as
+        identity steps via ``q_valid``), and the prefill logits are taken
+        at each row's last VALID position instead of column S-1.  With a
+        frontend, ``lengths`` counts TOKENS; the prepended frontend frames
+        are always valid.
         """
         cfg = self.cfg
         enc_out = self._encode(params, batch) if self.encoder is not None \
@@ -136,9 +120,14 @@ class Model:
         x = constrain(self._embed_inputs(params, batch), "b", None, None)
         S = x.shape[1]
         pos = jnp.arange(S, dtype=jnp.int32)
+        q_valid = None
+        if lengths is not None and mode == "prefill":
+            F = S - batch["tokens"].shape[1]    # frontend frames, if any
+            valid_to = jnp.asarray(lengths, jnp.int32) + F
+            q_valid = jnp.arange(S, dtype=jnp.int32)[None] < valid_to[:, None]
         x, caches, aux = self.decoder.apply(
             params["decoder"], x, positions=pos, enc_out=enc_out, mode=mode,
-            cache_len=cache_len)
+            cache_len=cache_len, q_valid=q_valid)
         x = apply_norm(params["final_norm"], x, cfg)
         if cfg.frontend:
             x = x[:, S - batch["tokens"].shape[1]:]
@@ -162,18 +151,17 @@ class Model:
         """One-shot prompt ingestion.  ``lengths``: optional per-sequence
         (B,) valid token counts — stacked RAGGED prompts, right-padded to a
         common width, each row's logits and decode position taken at its own
-        length (see ``forward``; ``supports_ragged_batches`` stacks only,
-        ``NotImplementedError`` otherwise)."""
-        if lengths is not None and not self.supports_ragged_batches:
-            raise NotImplementedError(
-                "ragged stacked prefill (lengths=...) needs a "
-                "full-attention decoder-only stack "
-                "(see Model.supports_ragged_batches)")
+        length (see ``forward``).  Every stack kind accepts ragged batches:
+        pad positions skip KV-ring writes and pass through recurrent scans
+        as exact identity steps."""
         logits, _, caches = self.forward(params, batch, mode="prefill",
                                          cache_len=max_len, lengths=lengths)
         B = batch["tokens"].shape[0]
-        pos = jnp.asarray(lengths, jnp.int32) if lengths is not None \
-            else jnp.full((B,), self._full_len(batch), jnp.int32)
+        if lengths is not None:
+            F = self._full_len(batch) - batch["tokens"].shape[1]
+            pos = jnp.asarray(lengths, jnp.int32) + F
+        else:
+            pos = jnp.full((B,), self._full_len(batch), jnp.int32)
         return logits[:, -1], {"caches": caches, "pos": pos}
 
     def _full_len(self, batch) -> int:
@@ -222,11 +210,11 @@ class Model:
 
         lengths: optional per-sequence (B,) valid token counts for RAGGED
         chunks right-padded to the common S.  Pad rows write nothing into
-        the KV rings and do not advance ``pos``; each row's logits come
-        from its last VALID position (rows with length 0 ride along
-        untouched — their logits are garbage, callers ignore them).
-        Attention-only stacks (``supports_ragged_batches``) — recurrent
-        mixers would fold pad tokens into their carried state.
+        the KV rings, pass through the recurrent scans as exact identity
+        steps, and do not advance ``pos``; each row's logits come from its
+        last VALID position (rows with length 0 ride along untouched —
+        their logits are garbage, callers ignore them).  Every stack kind
+        accepts ragged chunks.
         """
         cfg = self.cfg
         x = embed_tokens(params["embed"], tokens, cfg)
@@ -235,11 +223,6 @@ class Model:
         pos = pos0[:, None] + jnp.arange(S, dtype=jnp.int32)[None]   # (B, S)
         q_valid = None
         if lengths is not None:
-            if not self.supports_ragged_batches:
-                raise NotImplementedError(
-                    "ragged batched extension (lengths=...) needs a "
-                    "full-attention decoder-only stack "
-                    "(see Model.supports_ragged_batches)")
             lengths = jnp.asarray(lengths, jnp.int32)
             q_valid = jnp.arange(S, dtype=jnp.int32)[None] < lengths[:, None]
         x, caches, _ = self.decoder.apply(

@@ -73,14 +73,32 @@ def _gates(p: Params, u: jax.Array):
 
 def apply_rglru(p: Params, x: jax.Array, cfg,
                 state: RGLRUState | None = None,
-                return_state: bool = False
+                return_state: bool = False,
+                q_valid: jax.Array | None = None
                 ) -> tuple[jax.Array, RGLRUState | None]:
-    """x: (B, S, d_model) -> (B, S, d_model)."""
+    """x: (B, S, d_model) -> (B, S, d_model).
+
+    ``q_valid`` (B, S) bool marks ragged rows right-padded to S.  Pad
+    positions become exact IDENTITY elements of the linear recurrence —
+    ``(a, b) = (1, 0)`` composes as a no-op under the associative scan, so
+    carried state passes through them unchanged.  Masking the gates
+    directly is load-bearing: zeroing the recurrence gate ``r`` alone would
+    give ``a = 1`` but ``b = sqrt(max(1 - a², 1e-12)) · (i ⊙ u) ≠ 0``.  The
+    conv tail gathers each row's last valid inputs.  Pad rows' emitted
+    outputs are garbage; callers discard them.
+    """
     gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gate"], preferred_element_type=x.dtype))
     u = jnp.einsum("bsd,dw->bsw", x, p["w_in"], preferred_element_type=x.dtype)
+    lengths = None if q_valid is None \
+        else jnp.sum(q_valid.astype(jnp.int32), axis=1)
     u, new_tail = _causal_conv(u, p["conv_w"], p["conv_b"],
-                               state.conv if state is not None else None)
+                               state.conv if state is not None else None,
+                               lengths=lengths)
     a, b = _gates(p, u)
+    if q_valid is not None:
+        valid = q_valid[..., None]
+        a = jnp.where(valid, a, 1.0)
+        b = jnp.where(valid, b, 0.0)
 
     if x.shape[1] == 1 and state is not None:
         h = a[:, 0] * state.h + b[:, 0]

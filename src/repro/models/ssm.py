@@ -59,8 +59,16 @@ def init_ssm(cfg, key) -> Params:
 
 
 def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
-                 tail: jax.Array | None) -> tuple[jax.Array, jax.Array]:
-    """Depthwise causal conv1d.  x: (B,S,C), w: (k,C).  Returns (y, new_tail)."""
+                 tail: jax.Array | None, lengths: jax.Array | None = None
+                 ) -> tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d.  x: (B,S,C), w: (k,C).  Returns (y, new_tail).
+
+    ``lengths`` (B,) marks ragged rows right-padded to S: the returned tail
+    is then each row's last k-1 VALID inputs (a per-row gather into
+    ``concat([tail, x])``) instead of the last k-1 columns — a short row's
+    pad columns must never enter its carried conv window.  A length-0 row's
+    tail is its incoming tail, unchanged.
+    """
     k = w.shape[0]
     if tail is None:
         tail = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
@@ -68,7 +76,14 @@ def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
     idx = jnp.arange(x.shape[1])[:, None] + jnp.arange(k)[None, :]
     windows = xp[:, idx]                                # (B, S, k, C)
     y = jnp.einsum("bskc,kc->bsc", windows, w) + b
-    new_tail = xp[:, xp.shape[1] - (k - 1):]
+    if lengths is None:
+        new_tail = xp[:, xp.shape[1] - (k - 1):]
+    else:
+        # xp index of position t is t + (k-1); the k-1 window ending at a
+        # row's last valid input starts at index L (identity when L == 0)
+        tidx = lengths[:, None].astype(jnp.int32) \
+            + jnp.arange(k - 1, dtype=jnp.int32)[None]
+        new_tail = jnp.take_along_axis(xp, tidx[..., None], axis=1)
     return jax.nn.silu(y), new_tail
 
 
@@ -162,20 +177,34 @@ def ssd_sequential(x, dtv, A, B, C, init_state=None):
 
 
 def apply_ssm(p: Params, x: jax.Array, cfg, state: SSMState | None = None,
-              return_state: bool = False, sequential: bool = False
+              return_state: bool = False, sequential: bool = False,
+              q_valid: jax.Array | None = None
               ) -> tuple[jax.Array, SSMState | None]:
-    """Full mamba2 mixer.  x: (B, S, d_model)."""
+    """Full mamba2 mixer.  x: (B, S, d_model).
+
+    ``q_valid`` (B, S) bool marks ragged rows right-padded to S.  Pad
+    positions are exact IDENTITY steps of the recurrence — ``dt = 0`` gives
+    decay ``exp(0) = 1`` and a zero state update in both the sequential and
+    chunked SSD paths — and the conv tail gathers each row's last valid
+    inputs, so carried state only ever advances past real tokens (pad rows'
+    emitted outputs are garbage; callers discard them).
+    """
     B_, S, _ = x.shape
     d_inner, H, P, N, G = _dims(cfg)
     zxbcdt = jnp.einsum("bsd,de->bse", x, p["w_in"], preferred_element_type=x.dtype)
     z, xBC, dt_raw = jnp.split(
         zxbcdt, [d_inner, d_inner + d_inner + 2 * G * N], axis=-1)
 
+    lengths = None if q_valid is None \
+        else jnp.sum(q_valid.astype(jnp.int32), axis=1)
     conv_tail = state.conv if state is not None else None
-    xBC, new_tail = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_tail)
+    xBC, new_tail = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_tail,
+                                 lengths=lengths)
     x_ssm, Bmat, Cmat = jnp.split(xBC, [d_inner, d_inner + G * N], axis=-1)
 
     dtv = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    if q_valid is not None:
+        dtv = jnp.where(q_valid[..., None], dtv, 0.0)
     A = -jnp.exp(p["A_log"])
     xh = x_ssm.reshape(B_, S, H, P)
 

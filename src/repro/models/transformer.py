@@ -14,10 +14,11 @@ Caches are pytrees mirroring the parameter stacking, so decode steps scan
 with the same structure.  ``mode="decode"`` accepts multi-token inputs too:
 attention writes each chunk's KV at its positions into the per-sequence
 rings — batched, at ragged per-sequence offsets, with ``q_valid`` masking
-the ring writes of right-padded rows — recurrent mixers advance from their
-carried state (and therefore reject ragged ``q_valid`` batches: a pad token
-would pollute the carried state).  This is the ``Model.extend`` path that
-batched chunked prefill (``docs/serving.md``) is built on.
+the ring writes of right-padded rows — and recurrent mixers advance their
+carried state through masked scans where pad positions are exact identity
+steps (``apply_ssm`` / ``apply_rglru``).  Every layer kind accepts ragged
+``q_valid`` batches.  This is the ``Model.extend`` path that batched
+chunked prefill (``docs/serving.md``) is built on.
 """
 
 from __future__ import annotations
@@ -95,30 +96,27 @@ def apply_layer(p: Params, x: jax.Array, cfg, kind: str, *,
                 ) -> tuple[jax.Array, Any, jax.Array]:
     """Returns (x, new_cache, aux_loss).
 
-    ``q_valid``: (B, S) bool for ragged batched cache extension — pad rows
-    skip the KV-ring write (see ``attention_forward``).  Only attention
-    kinds support it; recurrent mixers advance per token and would fold pad
-    tokens into their carried state.
+    ``q_valid``: (B, S) bool for ragged batched forwards — pad rows skip
+    the KV-ring write in attention kinds (see ``attention_forward``) and
+    are exact identity steps in the recurrent mixers (``apply_ssm`` /
+    ``apply_rglru``), so carried state only ever advances past real tokens.
     """
     aux = jnp.zeros((), jnp.float32)
     return_cache = mode == "prefill"
     use_cache = mode == "decode"
-    if q_valid is not None and kind in ("ssm", "rglru"):
-        raise NotImplementedError(
-            f"ragged batched extension (q_valid) is unsupported for "
-            f"recurrent mixer {kind!r}: pad tokens would advance the "
-            f"carried state")
 
     if kind == "ssm":
         h, new_state = apply_ssm(p["mixer"], apply_norm(p["norm"], x, cfg),
                                  cfg, state=cache if use_cache else None,
-                                 return_state=return_cache or use_cache)
+                                 return_state=return_cache or use_cache,
+                                 q_valid=q_valid)
         return x + h, new_state, aux
 
     if kind == "rglru":
         h, new_state = apply_rglru(p["mixer"], apply_norm(p["norm1"], x, cfg),
                                    cfg, state=cache if use_cache else None,
-                                   return_state=return_cache or use_cache)
+                                   return_state=return_cache or use_cache,
+                                   q_valid=q_valid)
         x = x + h
         x = x + apply_mlp(p["mlp"], apply_norm(p["norm2"], x, cfg), cfg)
         return x, new_state, aux

@@ -30,34 +30,38 @@ class ServeConfig:
     max_len: KV-ring capacity per slot.  ``try_add`` rejects requests with
         ``len(prompt) + max_new > max_len`` (the ring would wrap).
     prefill_chunk: prompt tokens processed per unit of admission work.  The
-        engine runs at most ``chunks_per_step`` chunks of prefill per decode
-        step, so this bounds the decode-stall an admission can inflict on
-        live slots (one chunk forward instead of one full-prompt forward).
-        ``0`` disables chunking: each admission prefills its whole prompt in
-        one forward (the pre-pipeline blocking behaviour, still via the
-        queue).
-    chunks_per_step: admission-work budget per engine step.  1 (default)
+        engine spends at most ``chunks_per_step`` chunks of prefill per
+        decode step, so this bounds the decode-stall an admission can
+        inflict on live slots (one chunk forward instead of one full-prompt
+        forward).  Clamped to the KV-ring capacity — ``max_len``, or the
+        sliding window when smaller (a wider chunk's pad phantoms would
+        alias ring slots).  ``0`` disables chunking: each claimed admission
+        prefills its whole remaining prompt in the tick's one batched
+        forward; ``try_add`` then rejects prompts longer than the ring
+        capacity (only reachable under SWA).
+    chunks_per_step: admission-work budget per engine step, spent by the
+        HYBRID tick.  It is both the LANE count — up to ``chunks_per_step``
+        PREFILLING requests advance together, one chunk each, in a single
+        batched ragged-offset forward per step (every zoo stack batches:
+        attention, SWA, ssm, rglru) — and the sequential budget: leftover
+        budget goes to extra chunks of the head (FIFO) task, so a lone
+        admission drains ``chunks_per_step`` chunks per step.  1 (default)
         gives the paper-style overlap — one chunk of admission work rides
-        along with every decode step; raise it to drain bursts faster.  On
-        attention-only stacks the budget is spent as admission LANES: up to
-        ``chunks_per_step`` PREFILLING requests advance together, one chunk
-        each, in a single batched ragged-offset forward per step (so the
-        per-step stall grows sub-linearly in the budget).  On the serial
-        fallback (SWA whole-prompt admission, recurrent mixers) it is spent
-        as sequential chunks of the single in-flight task.  Values below 1
-        are clamped to 1 (admission cannot be paused through this knob).
+        along with every decode step; raise it to drain bursts faster.
+        Values below 1 are clamped to 1 (admission cannot be paused through
+        this knob).
     max_queue: bound on requests waiting in the admission queue (pending +
         in-flight prefill).  ``try_add`` returns False when full.  ``None``
         means unbounded.
-    jit_prefill: jit-compile the per-chunk admission forwards
-        (``model.prefill`` / ``model.extend``) with the request's DSLOT
-        precision threaded as a traced argument — one compile per distinct
-        chunk length (the fixed ``prefill_chunk`` plus each prompt's ragged
-        tail), then every admission at every precision reuses the cache.
-        Whole-prompt admission (``prefill_chunk == 0``, including the
-        automatic SWA fallback) always runs eagerly: prompt lengths are
-        unbounded, so jitting there would compile per distinct length.
-        Disable for eager-mode debugging of the admission path.
+    jit_prefill: jit-compile the batched lane forward (``model.extend``
+        over the stacked lane state) with tokens padded to the fixed chunk
+        width, ragged tails as a traced lengths vector, and per-lane DSLOT
+        precision as a traced i32 vector — exactly ONE compile, total,
+        shared by every admission at every precision and tail length.
+        Whole-prompt admission (``prefill_chunk == 0``) always runs
+        eagerly: per-tick widths are unbounded, so jitting there would
+        compile per distinct width.  Disable for eager-mode debugging of
+        the admission path.
     sample: token sampler ``(logits[, key]) -> (B,) i32``; ``None`` means
         greedy argmax.
     precision_policy: a ``repro.runtime`` precision policy consulted at

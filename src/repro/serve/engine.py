@@ -87,6 +87,7 @@ import numpy as np
 
 from repro.kernels.ops import DslotWeights
 from repro.models import stats as stats_channel
+from repro.models.attention import cache_capacity
 from repro.models.mlp import mlp_uses_dslot
 from repro.models.model_zoo import Model
 from repro.runtime import PolicyFeedback, precision_scope
@@ -400,7 +401,10 @@ class ServeEngine:
         the shared embedding gather / KV ring for co-batched requests), a
         non-positive generation budget, ``len(prompt) + max_new > max_len``
         (the KV ring would wrap and silently corrupt the sequence
-        mid-decode), an unknown QoS tier, or — in DSLOT mode — a
+        mid-decode), a whole-prompt admission (``prefill_chunk == 0``)
+        whose prompt exceeds the KV ring capacity (for SWA the ring is only
+        ``window`` wide — a one-chunk ingest would wrap and evict its own
+        in-window keys), an unknown QoS tier, or — in DSLOT mode — a
         per-request plane budget whose prompt would be split into multiple
         chunks on a model with NO calibrated activation scale (per-call-max
         quantization is not chunk-invariant, so the chunked prefill would
@@ -446,6 +450,17 @@ class ServeEngine:
                 f"request {req.uid}: prompt ({P}) + max_new ({req.max_new}) "
                 f"= {P + req.max_new} exceeds max_len ({self.max_len}); the "
                 f"KV ring would wrap and corrupt the sequence")
+        cap = cache_capacity(self.model.cfg, self.max_len)
+        if self.pipeline.chunk == 0 and P > cap:
+            # whole-prompt admission runs the prompt as ONE chunk; wider
+            # than the ring (the SWA window, when smaller than max_len) it
+            # would wrap and silently evict its own in-window keys.
+            raise ValueError(
+                f"request {req.uid}: whole-prompt admission "
+                f"(prefill_chunk=0) cannot ingest a {P}-token prompt into "
+                f"a KV ring of capacity {cap} (sliding window "
+                f"{self.model.cfg.window}); the ring would wrap.  Use "
+                f"chunked admission (prefill_chunk > 0)")
         known_tiers = self.slo.tiers if self.slo is not None else TIERS
         if req.tier not in known_tiers:
             raise ValueError(
@@ -582,11 +597,12 @@ class ServeEngine:
     # ------------------------------------------------------------ stepping
 
     def _admission_tick(self) -> None:
-        """One step's worth of admission work: at most ``chunks_per_step``
-        prompt chunks — batched into one forward when the model supports
-        ragged stacked extension; completed prefills are merged into their
-        slots' rows (the PR 2 per-slot position vectors keep live slots
-        undisturbed) and decode from THIS step on."""
+        """One step's worth of admission work: one batched lane forward
+        advancing every active task, plus leftover ``chunks_per_step``
+        budget spent on the head task (the hybrid tick); completed prefills
+        are merged into their slots' rows (the PR 2 per-slot position
+        vectors keep live slots undisturbed) and decode from THIS step
+        on."""
         for task in self.pipeline.tick(self._free_slot):
             i = task.slot
             self.state = _merge_slot(self.state, task.state, i)

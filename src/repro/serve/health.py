@@ -16,7 +16,7 @@ corrupted run reports everything that went wrong):
   unique across the whole engine.
 * **admission lanes** — every in-flight ``PrefillTask`` reserves a distinct
   in-range slot that the pool does not also consider occupied, holds a
-  distinct in-range lane (batched mode), and has consumed a sane prefix of
+  distinct in-range lane, and has consumed a sane prefix of
   its prompt (``0 <= offset < len(prompt)``, PREFILLING, not done).
 * **queue** — only PENDING, not-done requests; ``queue_depth`` equals
   queued + in-flight; ``max_queue`` (when set) is respected.
@@ -104,13 +104,12 @@ def audit_engine(engine) -> list[str]:
         if task.slot in held_slots:
             problems.append(f"{where}: slot {task.slot} double-booked")
         held_slots.add(task.slot)
-        if pipe.batched:
-            if not (0 <= task.lane < pipe.lanes):
-                problems.append(f"{where}: lane {task.lane} out of range "
-                                f"[0, {pipe.lanes})")
-            if task.lane in held_lanes:
-                problems.append(f"{where}: lane {task.lane} double-booked")
-            held_lanes.add(task.lane)
+        if not (0 <= task.lane < pipe.lanes):
+            problems.append(f"{where}: lane {task.lane} out of range "
+                            f"[0, {pipe.lanes})")
+        if task.lane in held_lanes:
+            problems.append(f"{where}: lane {task.lane} double-booked")
+        held_lanes.add(task.lane)
         if not (0 <= task.offset < len(req.prompt)):
             problems.append(
                 f"{where}: offset {task.offset} outside prompt "

@@ -46,20 +46,27 @@ the final merge wipes it) and makes cancelling a mid-prefill request free:
 drop the task, the lane is reset when the next request claims it.
 
 Right-padding is harmless by construction: pad rows write nothing into the
-ring (``q_valid`` masks the scatter) and don't advance the lane's position,
-so a ragged tail chunk costs one fixed-width forward and nothing else.
+ring (``q_valid`` masks the scatter), pass through the recurrent scans as
+exact identity steps, and don't advance the lane's position, so a ragged
+tail chunk costs one fixed-width forward and nothing else.  EVERY zoo
+stack batches: sliding-window attention extends chunk-by-chunk by carrying
+the pre-write ring alongside each chunk's own keys (so ring recycling can
+never evict a live in-window key — ``models/attention.py``), and the
+recurrent mixers (ssm/rglru) mask their scans so pad rows carry state
+through unchanged.
 
-Two stacks fall back to the SERIAL path (one task in flight, batch-1
-states, ``model.prefill`` then ``model.extend`` per chunk —
-``chunks_per_step`` then meaning sequential chunks per tick):
+The tick is HYBRID: the one batched forward advances every active lane,
+and any leftover ``chunks_per_step`` budget is spent on extra sequential
+chunks of the HEAD task (FIFO) — a lone admission still gets
+``chunks_per_step`` chunks per tick, a full lane pool gets one chunk per
+lane, and anything in between degrades smoothly.  Chunk boundaries are
+fixed multiples of ``chunk`` regardless of which tick runs them, so the
+schedule never changes the computed tokens.
 
-* sliding-window attention cannot extend a ring chunk-by-chunk at all (a
-  chunk landing at offset ``o`` recycles ring slots that still hold
-  in-window keys needed by the chunk's own earliest queries), so SWA
-  configs additionally fall back to whole-prompt chunks;
-* recurrent mixers (ssm/rglru) advance carried state per token, so ragged
-  right-padding would corrupt their lanes
-  (``Model.supports_ragged_batches``).
+``chunk == 0`` means whole-prompt admission: each tick runs ONE eager
+batched forward at the widest remaining prompt among the claimed tasks, so
+every claimed task completes in the tick it was claimed (eager because
+every distinct width would otherwise be a fresh full-model compile).
 """
 
 from __future__ import annotations
@@ -73,6 +80,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.models.attention import cache_capacity
 from repro.runtime import precision_scope
 
 if TYPE_CHECKING:                                    # pragma: no cover
@@ -98,16 +106,13 @@ FAILED = "failed"            # admission work kept raising past the retry
 @dataclass
 class PrefillTask:
     """One in-flight admission: a request, its reserved pool slot, and the
-    lane of the pipeline's stacked state (batched mode) or the private
-    batch-1 decode state (serial fallback) its prompt chunks accumulate
+    lane of the pipeline's stacked state its prompt chunks accumulate
     into."""
     req: "Request"
     slot: int
-    lane: int = -1                   # batched mode: row of the lane state
+    lane: int = -1                   # row of the stacked lane state
     offset: int = 0                  # prompt tokens already processed
-    state: dict | None = None        # batch-1 model decode state (serial
-                                     # mode throughout; batched mode: the
-                                     # extracted lane row, on completion)
+    state: dict | None = None        # the extracted lane row, on completion
     logits: Any = None               # last chunk's final-position logits
     chunks_done: int = 0
 
@@ -160,10 +165,10 @@ class PrefillPipeline:
 
     The engine calls :meth:`tick` once per step with a free-slot provider;
     the pipeline claims queue heads into slots (and lanes) as they become
-    available and advances every in-flight task by one chunk — all tasks in
-    ONE batched forward (``chunks_per_step`` lanes) when the model supports
-    ragged stacked extension, serially otherwise — returning completed
-    tasks for the engine to merge into the pool.
+    available and advances every in-flight task by one chunk in ONE batched
+    forward (``chunks_per_step`` lanes), spending any leftover budget on
+    extra sequential chunks of the head task (the hybrid tick) — returning
+    completed tasks for the engine to merge into the pool.
     """
     model: Any
     params: Any
@@ -183,72 +188,41 @@ class PrefillPipeline:
                                  # before every lane forward
 
     def __post_init__(self):
-        if self.model.cfg.attn_type == "swa" and self.chunk:
-            # SWA rings recycle slots within chunk+window spans (see module
-            # docstring): chunked extension would drop needed keys.
-            self.chunk = 0
-        if self.chunk > self.max_len:
+        cap = cache_capacity(self.model.cfg, self.max_len)
+        if self.chunk > cap:
             # batched chunks are padded to the FULL chunk width; wider than
-            # the KV ring, the pad phantoms would alias real slots (the
-            # attention layer rejects such chunks).  A prompt can never
-            # exceed max_len anyway (try_add validates), so clamping loses
-            # nothing.
-            self.chunk = self.max_len
-        self.lanes = 1
-        self.batched = bool(self.chunk > 0
-                            and self.model.supports_ragged_batches)
+            # the KV ring (max_len, or the SWA window when smaller), the
+            # pad phantoms would alias real slots (the attention layer
+            # rejects such chunks).  Clamping loses nothing: for full
+            # attention a prompt can never exceed max_len anyway (try_add
+            # validates), and for SWA any chunk width <= window is exact.
+            self.chunk = cap
         model, max_len = self.model, self.max_len
-        if self.batched:
-            # Lane-pool batched admission: one persistent stacked decode
-            # state with `chunks_per_step` lanes; every tick advances every
-            # active lane by one fixed-width chunk in a single forward.
-            # Tokens are always padded to (lanes, chunk), lengths carry the
-            # ragged tails, and the per-lane DSLOT budgets enter as a traced
-            # (lanes,) i32 vector — so there is exactly ONE compile, total,
-            # shared by every admission at every precision and every ragged
-            # tail length.
-            self.lanes = max(1, self.chunks_per_step)
-            self._axes = _batch_axes(model, max_len)
-            self._lane_state = model.init_decode_state(self.lanes, max_len)
-            self._fresh = model.init_decode_state(1, max_len)
-            self._extract_lane, self._insert_lane = _lane_ops(
-                self._axes, self.jit_chunks)
+        # Lane-pool batched admission: one persistent stacked decode state
+        # with `chunks_per_step` lanes; every tick advances every active
+        # lane by one fixed-width chunk in a single forward.  Tokens are
+        # always padded to (lanes, chunk), lengths carry the ragged tails,
+        # and the per-lane DSLOT budgets enter as a traced (lanes,) i32
+        # vector — so there is exactly ONE compile, total, shared by every
+        # admission at every precision and every ragged tail length.
+        # (``chunk == 0`` is whole-prompt admission: widths vary per tick,
+        # so the forward stays eager — each distinct width would otherwise
+        # be a fresh full-model compile.)
+        self.lanes = max(1, self.chunks_per_step)
+        self._axes = _batch_axes(model, max_len)
+        self._lane_state = model.init_decode_state(self.lanes, max_len)
+        self._fresh = model.init_decode_state(1, max_len)
+        self._extract_lane, self._insert_lane = _lane_ops(
+            self._axes, self.jit_chunks)
 
-            def _extend_lanes(params, state, tokens, lengths, npl):
-                with precision_scope(npl):
-                    return model.extend(params, state, tokens,
-                                        lengths=lengths)
-
-            if self.jit_chunks:
-                _extend_lanes = jax.jit(_extend_lanes)
-            self._extend_lanes = _extend_lanes
-            return
-        # Serial fallback (SWA / whole-prompt / recurrent mixers): jitted
-        # batch-1 chunk forwards (the engine's ``_decode`` pattern): the
-        # request's DSLOT precision enters as a TRACED i32 argument, so every
-        # admission at every precision shares one compile per chunk length —
-        # a python int closed over at trace time would recompile per
-        # precision and silently pin the first request's budget.  Compile
-        # only pays off because chunk lengths are bounded (the fixed chunk
-        # plus ragged tails < chunk); with whole-prompt admission
-        # (``chunk == 0``, incl. the SWA fallback) every distinct prompt
-        # length would be a fresh full-model compile, so that path stays
-        # eager.
-
-        def _prefill_chunk(params, tokens, npl):
+        def _extend_lanes(params, state, tokens, lengths, npl):
             with precision_scope(npl):
-                return model.prefill(params, {"tokens": tokens},
-                                     max_len=max_len)
-
-        def _extend_chunk(params, state, tokens, npl):
-            with precision_scope(npl):
-                return model.extend(params, state, tokens)
+                return model.extend(params, state, tokens,
+                                    lengths=lengths)
 
         if self.jit_chunks and self.chunk > 0:
-            _prefill_chunk = jax.jit(_prefill_chunk)
-            _extend_chunk = jax.jit(_extend_chunk)
-        self._prefill_chunk = _prefill_chunk
-        self._extend_chunk = _extend_chunk
+            _extend_lanes = jax.jit(_extend_lanes)
+        self._extend_lanes = _extend_lanes
 
     def _resolve_precision(self, req: "Request | None") -> int:
         """The request's plane budget as a python int.
@@ -264,10 +238,6 @@ class PrefillPipeline:
         if req is not None and req.n_planes is not None:
             return int(req.n_planes)
         return int(d.n_planes or d.n_bits)
-
-    def _chunk_precision(self, req: "Request") -> jax.Array:
-        """Serial-path budget as a traced-friendly i32 scalar."""
-        return jnp.asarray(self._resolve_precision(req), jnp.int32)
 
     # ------------------------------------------------------------- queue
 
@@ -327,17 +297,18 @@ class PrefillPipeline:
         ``free_slot(exclude)`` returns a claimable slot index not in
         ``exclude``, or None (pool full).  Returns the tasks whose LAST
         chunk landed this tick — the engine merges them and their slots
-        decode this same step.  Slots of tasks completed WITHIN this tick
-        are excluded from claiming (the engine merges them only after the
-        tick returns), so admission can never double-book a slot.
+        decode this same step.  Claiming happens only at tick start,
+        before any chunk lands, so admission can never double-book a
+        slot completed within the tick.
 
-        Batched mode: claim queue heads into free (slot, lane) pairs up to
-        ``chunks_per_step`` lanes, then advance ALL active tasks by one
-        chunk in a single stacked forward.  Serial fallback: up to
-        ``chunks_per_step`` sequential chunks of the single in-flight task.
+        HYBRID schedule: claim queue heads into free (slot, lane) pairs up
+        to ``chunks_per_step`` lanes, advance ALL active tasks by one chunk
+        in a single stacked forward, then spend any leftover
+        ``chunks_per_step`` budget on extra sequential chunks of the HEAD
+        task (FIFO).  Chunk boundaries are fixed multiples of ``chunk``
+        regardless of which tick runs them, so the hybrid schedule never
+        changes the computed tokens — only how soon they land.
         """
-        if not self.batched:
-            return self._tick_serial(free_slot)
         completed: list[PrefillTask] = []
         while self.queue and len(self.active) < self.lanes:
             slot = free_slot(set())
@@ -352,13 +323,27 @@ class PrefillPipeline:
             self._lane_state = self._insert_lane(self._lane_state,
                                                  self._fresh, lane)
             self.active.append(PrefillTask(req=req, slot=slot, lane=lane))
-        if not self.active:
-            return completed
-        L, c = self.lanes, self.chunk
+        budget = max(1, self.chunks_per_step)
+        spent = 0
+        while spent < budget and self.active:
+            targets = list(self.active) if spent == 0 else [self.active[0]]
+            completed.extend(self._forward_lanes(targets))
+            spent += len(targets)
+        return completed
+
+    def _forward_lanes(self, targets: list[PrefillTask]
+                       ) -> list[PrefillTask]:
+        """Advance ``targets`` by one chunk in ONE stacked forward; returns
+        the tasks whose prompt is now fully in (extracted from their
+        lanes).  Non-target lanes ride along with zero-length rows —
+        ``q_valid`` masking makes them exact no-ops on the lane state."""
+        L = self.lanes
+        c = self.chunk if self.chunk > 0 \
+            else max(t.remaining for t in targets)
         toks = np.zeros((L, c), np.int32)
         lens = np.zeros((L,), np.int32)
         npl = np.full((L,), self._resolve_precision(None), np.int32)
-        for t in self.active:
+        for t in targets:
             end = min(t.offset + c, len(t.req.prompt))
             n = end - t.offset
             toks[t.lane, :n] = t.req.prompt[t.offset:end]
@@ -374,64 +359,13 @@ class PrefillPipeline:
             self.params, self._lane_state, jnp.asarray(toks),
             jnp.asarray(lens), jnp.asarray(npl))
         self.forwards += 1
-        still: list[PrefillTask] = []
-        for t in self.active:
+        completed: list[PrefillTask] = []
+        for t in targets:
             t.offset += int(lens[t.lane])
             t.chunks_done += 1
             if t.offset >= len(t.req.prompt):
                 t.logits = logits[t.lane:t.lane + 1]
                 t.state = self._extract_lane(self._lane_state, t.lane)
+                self.active.remove(t)
                 completed.append(t)
-            else:
-                still.append(t)
-        self.active = still
         return completed
-
-    def _tick_serial(self, free_slot: Callable[[set], int | None]
-                     ) -> list[PrefillTask]:
-        """Serial fallback: one task in flight, ``chunks_per_step``
-        sequential chunks per tick (whole-prompt chunks for SWA)."""
-        completed: list[PrefillTask] = []
-        landed: set[int] = set()
-        for _ in range(max(1, self.chunks_per_step)):
-            if not self.active and self.queue:
-                slot = free_slot(landed)
-                if slot is None:
-                    break
-                req = self.queue.popleft()
-                req.phase = PREFILLING
-                self.active.append(PrefillTask(req=req, slot=slot))
-            if not self.active:
-                break
-            task = self.active[0]
-            if self._advance(task):
-                completed.append(task)
-                landed.add(task.slot)
-                self.active.remove(task)
-        return completed
-
-    def _advance(self, task: PrefillTask) -> bool:
-        """Process one prompt chunk; True when the prompt is fully in.
-
-        Runs the (jitted, see ``__post_init__``) chunk forwards; the
-        request's precision is a runtime argument, so back-to-back
-        admissions at different plane budgets hit the same executable.
-        """
-        req = task.req
-        P = len(req.prompt)
-        c = self.chunk if self.chunk > 0 else P
-        end = min(task.offset + c, P)
-        tokens = jnp.asarray(req.prompt[None, task.offset:end])
-        npl = self._chunk_precision(req)
-        if self.injector is not None:
-            self.injector.raise_if("lane_forward")  # see batched tick
-        if task.offset == 0:
-            task.logits, task.state = self._prefill_chunk(
-                self.params, tokens, npl)
-        else:
-            task.logits, task.state = self._extend_chunk(
-                self.params, task.state, tokens, npl)
-        self.forwards += 1
-        task.offset = end
-        task.chunks_done += 1
-        return end >= P

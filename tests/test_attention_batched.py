@@ -10,9 +10,12 @@ surface directly:
   the 1-D path (the serving pools rely on this);
 * ragged extension's masked ring writes — a padded row's phantom positions
   can NEVER clobber live slots, even when they wrap the ring;
-* the SWA whole-prompt fallback contract: multi-token cache extension must
-  keep raising ``NotImplementedError`` for sliding-window stacks, batched
-  or not (serving falls back to whole-prompt admission on it).
+* the SWA carry-window extension: sliding-window stacks extend their rings
+  chunk-by-chunk by attending against the carried pre-write ring alongside
+  the chunk's own keys, so ring recycling can never evict a live in-window
+  key — chunked extension matches whole-prompt prefill, and the ragged
+  stacked SWA prefill builds each row's ring from its own last in-window
+  keys (the per-row gather), not the padded batch's last columns.
 """
 
 import numpy as np
@@ -187,29 +190,99 @@ def test_extension_chunk_wider_than_ring_raises(lm):
         model.extend(params, st, toks, lengths=jnp.asarray([5], jnp.int32))
 
 
-# --------------------------------------------------- SWA fallback contract
+# ------------------------------------------------ SWA chunked extension
 
-def test_swa_multi_token_extension_still_raises_batched_or_not():
-    """The SWA whole-prompt fallback is load-bearing (serve/prefill.py keys
-    on it): multi-token cache extension must refuse windowed stacks with
-    the same NotImplementedError, at B == 1 and B > 1 alike."""
+@pytest.fixture(scope="module")
+def swa():
     cfg = ARCHS["h2o-danube-3-4b"].reduced()          # window = 32 reduced
     model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(5))
-    toks2 = jnp.asarray(np.arange(8, dtype=np.int32).reshape(2, 4))
-    for B in (1, 2):
-        st = model.init_decode_state(B, 48)
-        with pytest.raises(NotImplementedError,
-                           match="sliding-window .* evict in-window keys"):
-            model.extend(params, st, toks2[:B])
-    # ragged stacked prefill is refused too: the window-capacity ring is
-    # built from the LAST window columns of the padded batch, which for a
-    # short row are pads — its real in-window keys would be evicted
-    assert not model.supports_ragged_batches
-    with pytest.raises(NotImplementedError, match="full-attention"):
-        model.prefill(params, {"tokens": toks2}, max_len=48,
-                      lengths=jnp.asarray([4, 2], np.int32))
-    # single-token pooled decode steps must keep working
+    return cfg, model, model.init(jax.random.PRNGKey(5))
+
+
+def test_swa_chunked_extension_matches_whole_prompt_prefill(swa):
+    """The retired NotImplementedError, pinned the other way: chunked SWA
+    extension (each chunk attends against the carried pre-write ring, so
+    recycling never evicts a live in-window key) must reproduce the
+    one-shot whole-prompt prefill — logits and ring contents — even when
+    the prompt wraps the window-capacity ring."""
+    cfg, model, params = swa
+    rng = np.random.RandomState(11)
+    p = rng.randint(0, 256, size=40).astype(np.int32)  # > window = 32
+    lg_ref, st_ref = model.prefill(params, {"tokens": jnp.asarray(p[None])},
+                                   max_len=48)
+    st = model.init_decode_state(1, 48)
+    lg = None
+    for o in range(0, 40, 8):
+        lg, st = model.extend(params, st, jnp.asarray(p[None, o:o + 8]))
+    assert np.argmax(np.asarray(lg)) == np.argmax(np.asarray(lg_ref))
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(lg_ref),
+                               atol=1e-4, rtol=1e-4)
+    assert np.asarray(st["pos"]).tolist() == [40]
+    for got, ref in zip(jax.tree.leaves(st["caches"]),
+                        jax.tree.leaves(st_ref["caches"])):
+        got, ref = np.asarray(got), np.asarray(ref)
+        if got.dtype == np.int32:                      # ring positions
+            assert np.array_equal(got, ref)
+        else:                                          # ring k/v contents
+            np.testing.assert_allclose(got, ref, atol=1e-4, rtol=1e-4)
+
+
+def test_swa_ragged_extension_rows_are_independent(swa):
+    """A short row co-batched with a longer one must get bit-identical ring
+    state and logits to the same row extended alone — pad columns are dead
+    weight, not evictions."""
+    cfg, model, params = swa
+    rng = np.random.RandomState(12)
+    toks = rng.randint(0, 256, size=(2, 8)).astype(np.int32)
+    lens = jnp.asarray([8, 3], np.int32)
     st = model.init_decode_state(2, 48)
-    lg, _ = model.decode_step(params, st, toks2[:, :1])
+    lg, st2 = model.extend(params, st, jnp.asarray(toks), lengths=lens)
+    st1 = model.init_decode_state(1, 48)
+    lg1, st1 = model.extend(params, st1, jnp.asarray(toks[1:, :3]))
+    assert np.asarray(st2["pos"]).tolist() == [8, 3]
+    assert np.array_equal(np.asarray(lg[1]), np.asarray(lg1[0]))
+    for got, ref in zip(jax.tree.leaves(st2["caches"]),
+                        jax.tree.leaves(st1["caches"])):
+        assert np.array_equal(np.asarray(got)[1:], np.asarray(ref))
+
+
+def test_swa_ragged_stacked_prefill_builds_per_row_rings(swa):
+    """The ragged SWA prefill ring build (per-row gather of each row's own
+    last in-window keys): a short row stacked with a longer one must come
+    out with the same ring a solo trimmed prefill builds — the old
+    last-columns slice would have filled it with pads."""
+    cfg, model, params = swa
+    rng = np.random.RandomState(13)
+    toks = rng.randint(0, 256, size=(2, 40)).astype(np.int32)
+    toks[1, 9:] = 0                                    # row 1: 9 real + pads
+    lens = jnp.asarray([40, 9], np.int32)
+    lg, st = model.prefill(params, {"tokens": jnp.asarray(toks)},
+                           max_len=48, lengths=lens)
+    assert np.asarray(st["pos"]).tolist() == [40, 9]
+    for b, L in ((0, 40), (1, 9)):
+        lg1, st1 = model.prefill(
+            params, {"tokens": jnp.asarray(toks[b:b + 1, :L])}, max_len=48)
+        np.testing.assert_allclose(np.asarray(lg[b]), np.asarray(lg1[0]),
+                                   atol=1e-4, rtol=1e-4)
+        for got, ref in zip(jax.tree.leaves(st["caches"]),
+                            jax.tree.leaves(st1["caches"])):
+            got, ref = np.asarray(got)[b:b + 1], np.asarray(ref)
+            if got.dtype == np.int32:
+                assert np.array_equal(got, ref), (b, L)
+            else:
+                np.testing.assert_allclose(got, ref, atol=1e-4, rtol=1e-4)
+
+
+def test_swa_extension_chunk_wider_than_window_still_raises(swa):
+    """A chunk wider than the window-capacity ring still aliases slots
+    within itself — it must stay rejected (serving clamps its chunk to the
+    window, so this is unreachable through the engine)."""
+    cfg, model, params = swa
+    st = model.init_decode_state(1, 48)
+    toks = jnp.zeros((1, 40), jnp.int32)               # 40 > window = 32
+    with pytest.raises(ValueError, match="exceeds the KV ring capacity"):
+        model.extend(params, st, toks)
+    # single-token pooled decode steps keep working
+    st = model.init_decode_state(2, 48)
+    lg, _ = model.decode_step(params, st, jnp.zeros((2, 1), jnp.int32))
     assert np.isfinite(np.asarray(lg)).all()

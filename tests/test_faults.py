@@ -143,6 +143,38 @@ def test_quarantine_survivor_bit_identity(lm, kind):
     assert r3.out == _solo(model, params, 5, 3, 4)
 
 
+def test_quarantine_survivor_bit_identity_recurrent_stack():
+    """The same quarantine-isolation bar on a RECURRENT stack (mamba2): the
+    pad-masked ssm lanes admit co-batched, the victim's poisoned logits
+    quarantine exactly it, and the survivor's carried state — and tokens —
+    are bit-identical to a solo run."""
+    cfg = ARCHS["mamba2-780m"].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(6))
+    plan = FaultPlan(faults=(Fault(kind="nan_logits", step=5, uid=2),))
+    eng = ServeEngine(model, params, ServeConfig(
+        n_slots=2, max_len=64, prefill_chunk=8, chunks_per_step=2,
+        faults=plan))
+    surv = Request(uid=1, prompt=_prompt(6, 1), max_new=8)
+    victim = Request(uid=2, prompt=_prompt(6, 2), max_new=8)
+    assert eng.try_add(surv) and eng.try_add(victim)
+    _drive(eng, [surv, victim])
+    assert victim.phase == QUARANTINED and victim.done
+    assert eng.quarantined == [(5, 2)]
+    assert surv.phase == DONE
+    solo = list(np.asarray(generate(
+        model, params, {"tokens": jnp.asarray(_prompt(6, 1)[None])},
+        8).tokens[0]))
+    assert surv.out == solo
+    # the freed slot is immediately reusable and exact on this stack too
+    r3 = Request(uid=3, prompt=_prompt(5, 3), max_new=4)
+    assert eng.try_add(r3)
+    _drive(eng, [r3])
+    assert r3.out == list(np.asarray(generate(
+        model, params, {"tokens": jnp.asarray(_prompt(5, 3)[None])},
+        4).tokens[0]))
+
+
 def test_kv_corrupt_quarantines_via_detection(lm):
     """A corrupted KV write is not directly observable — it surfaces as
     non-finite logits on a later step, and the quarantine guard catches it

@@ -25,6 +25,32 @@ def lm():
     return cfg, model, params
 
 
+# swa / ssm / rglru — the three stacks the old pipeline kept out of the
+# batched lanes.  One reduced model each, shared across the module.
+ZOO_ARCHS = ("h2o-danube-3-4b", "mamba2-780m", "recurrentgemma-2b")
+
+
+@pytest.fixture(scope="module")
+def zoo():
+    out = {}
+    for name in ZOO_ARCHS:
+        cfg = ARCHS[name].reduced()
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(5))
+        out[name] = (cfg, model, params)
+    return out
+
+
+_ZOO_SOLO: dict = {}     # keyed (arch, len, seed, max_new); zoo fixture only
+
+
+def _zoo_solo(arch, model, params, n, seed, max_new):
+    key = (arch, n, seed, max_new)
+    if key not in _ZOO_SOLO:
+        _ZOO_SOLO[key] = _solo(model, params, _prompt(n, seed=seed), max_new)
+    return _ZOO_SOLO[key]
+
+
 def _prompt(n, seed=0):
     return np.random.RandomState(seed).randint(0, 256, size=n).astype(np.int32)
 
@@ -265,23 +291,23 @@ def test_max_queue_bound(lm):
     assert eng.try_add(Request(uid=3, prompt=_prompt(3), max_new=2))
 
 
-def test_swa_falls_back_to_whole_prompt_chunks():
-    """Sliding-window rings can't be extended chunk-by-chunk (a landing
-    chunk recycles slots holding in-window keys its own queries need); SWA
-    configs must fall back to whole-prompt admission and stay exact."""
-    cfg = ARCHS["h2o-danube-3-4b"].reduced()          # window = 32 reduced
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(5))
-    eng = ServeEngine(model, params, n_slots=1, max_len=48,
-                      serve_config=ServeConfig(prefill_chunk=4))
-    assert eng.pipeline.chunk == 0                    # gate engaged
+def test_swa_chunked_admission_token_exact(zoo):
+    """Regression for the retired SWA whole-prompt fallback: sliding-window
+    rings now extend chunk-by-chunk (each chunk attends against the carried
+    pre-write ring, so recycling can never evict a live in-window key) and
+    the chunked admission stays token-exact."""
+    cfg, model, params = zoo["h2o-danube-3-4b"]       # window = 32 reduced
+    eng = ServeEngine(model, params, ServeConfig(n_slots=1, max_len=48,
+                                                 prefill_chunk=4))
+    assert eng.pipeline.chunk == 4                    # no fallback to 0
     p = _prompt(10, seed=50)
     r = Request(uid=1, prompt=p, max_new=4)
     assert eng.try_add(r)
     eng.step()
-    assert r.phase == DECODING and r.ttft_steps == 1  # one-shot admission
+    assert r.phase == PREFILLING                      # chunk 1 of 3 in flight
     while not r.done:
         eng.step()
+    assert r.ttft_steps == 3                          # ceil(10 / 4) chunks
     assert r.out == _solo(model, params, p, 4)
 
 
@@ -378,7 +404,7 @@ def test_batched_admission_advances_two_requests_in_one_forward(lm):
     eng = ServeEngine(model, params, n_slots=2, max_len=64,
                       serve_config=ServeConfig(prefill_chunk=4,
                                                chunks_per_step=2))
-    assert eng.pipeline.batched and eng.pipeline.lanes == 2
+    assert eng.pipeline.lanes == 2
     a = Request(uid=1, prompt=_prompt(12, seed=70), max_new=2)
     b = Request(uid=2, prompt=_prompt(10, seed=71), max_new=2)
     assert eng.try_add(a) and eng.try_add(b)
@@ -521,3 +547,166 @@ def test_batched_more_requests_than_lanes_queue_fifo(lm):
     assert [r.uid for r in done] == [0, 1, 2, 3, 4]
     for i, r in enumerate(reqs):
         assert r.out == _solo(model, params, r.prompt, 2), r.uid
+
+
+# ----------------------------------------------------------- hybrid tick
+
+def test_hybrid_tick_spends_leftover_budget_on_head_task(lm):
+    """A LONE admission must drain ``chunks_per_step`` sequential chunks
+    per tick (the leftover lane budget goes to the head task), not one —
+    and a full lane pool still gets one batched forward per chunk row."""
+    _, model, params = lm
+    eng = ServeEngine(model, params, ServeConfig(n_slots=1, max_len=64,
+                                                 prefill_chunk=4,
+                                                 chunks_per_step=3))
+    p = _prompt(12, seed=120)
+    r = Request(uid=1, prompt=p, max_new=2)
+    assert eng.try_add(r)
+    f0 = eng.pipeline.forwards
+    eng.step()
+    # all ceil(12/4) = 3 chunks landed in ONE tick: 1 batched + 2 head
+    assert r.phase == DECODING and r.ttft_steps == 1
+    assert eng.pipeline.forwards == f0 + 3
+    while not r.done:
+        eng.step()
+    assert r.out == _solo(model, params, p, 2)
+
+
+def test_hybrid_tick_partial_pool_splits_budget(lm):
+    """Two actives under chunks_per_step=3: the tick spends one batched
+    forward on both, then one extra head chunk — FIFO head drains first,
+    schedules never change the computed tokens."""
+    _, model, params = lm
+    eng = ServeEngine(model, params, ServeConfig(n_slots=2, max_len=64,
+                                                 prefill_chunk=4,
+                                                 chunks_per_step=3))
+    a = Request(uid=1, prompt=_prompt(12, seed=121), max_new=2)
+    b = Request(uid=2, prompt=_prompt(12, seed=122), max_new=2)
+    assert eng.try_add(a) and eng.try_add(b)
+    f0 = eng.pipeline.forwards
+    eng.step()
+    # batched forward (a+b, one chunk each) + 1 head chunk of a
+    assert eng.pipeline.forwards == f0 + 2
+    assert a.phase == PREFILLING and b.phase == PREFILLING
+    offs = {t.req.uid: t.offset for t in eng.pipeline.active}
+    assert offs == {1: 8, 2: 4}                    # head got the leftover
+    while not (a.done and b.done):
+        eng.step()
+    assert a.out == _solo(model, params, a.prompt, 2)
+    assert b.out == _solo(model, params, b.prompt, 2)
+
+
+# ------------------------------------------------- swa / ssm / rglru lanes
+
+@pytest.mark.parametrize("arch", ZOO_ARCHS)
+def test_zoo_stack_batched_ragged_admission_token_exact(zoo, arch):
+    """The tentpole, end to end per stack: ragged co-batched chunked
+    admission on swa / ssm / rglru engines is token-exact vs solo
+    ``generate`` — the lanes these stacks were locked out of."""
+    cfg, model, params = zoo[arch]
+    eng = ServeEngine(model, params, ServeConfig(n_slots=2, max_len=32,
+                                                 prefill_chunk=4,
+                                                 chunks_per_step=2))
+    assert eng.pipeline.chunk == 4 and eng.pipeline.lanes == 2
+    lens = (13, 7)
+    reqs = [Request(uid=i, prompt=_prompt(n, seed=140 + i), max_new=3)
+            for i, n in enumerate(lens)]
+    assert all(eng.try_add(r) for r in reqs)
+    eng.step()
+    assert [r.phase for r in reqs] == [PREFILLING] * 2   # co-batched
+    _drive(eng, reqs, (None, None))
+    for i, (r, n) in enumerate(zip(reqs, lens)):
+        assert r.out == _zoo_solo(arch, model, params, n, 140 + i, 3), r.uid
+
+
+def test_swa_prefill_chunk_clamped_to_window(zoo):
+    """SWA rings are only ``window`` wide: a wider chunk's pad phantoms
+    would alias ring slots, so the pipeline clamps the chunk to the window
+    (not max_len) and stays token-exact on prompts longer than the
+    window."""
+    cfg, model, params = zoo["h2o-danube-3-4b"]       # window = 32 reduced
+    eng = ServeEngine(model, params, ServeConfig(n_slots=1, max_len=48,
+                                                 prefill_chunk=40))
+    assert eng.pipeline.chunk == 32
+    p = _prompt(40, seed=150)                         # prompt > window
+    r = Request(uid=1, prompt=p, max_new=4)
+    assert eng.try_add(r)
+    while not r.done:
+        eng.step()
+    assert r.out == _solo(model, params, p, 4)
+
+
+def test_swa_whole_prompt_longer_than_ring_rejected(zoo):
+    """chunk == 0 runs the whole prompt as ONE chunk; under SWA the ring is
+    only ``window`` wide, so an over-window prompt must be rejected at
+    ``try_add`` with a clear error instead of silently wrapping — and an
+    in-capacity prompt still admits exactly."""
+    cfg, model, params = zoo["h2o-danube-3-4b"]       # window = 32 reduced
+    eng = ServeEngine(model, params, ServeConfig(n_slots=1, max_len=48,
+                                                 prefill_chunk=0))
+    with pytest.raises(ValueError, match="ring would wrap"):
+        eng.try_add(Request(uid=1, prompt=_prompt(40, seed=151), max_new=4))
+    p = _prompt(20, seed=152)
+    r = Request(uid=2, prompt=p, max_new=4)
+    assert eng.try_add(r)
+    eng.step()
+    assert r.phase == DECODING and r.ttft_steps == 1  # one-shot admission
+    while not r.done:
+        eng.step()
+    assert r.out == _solo(model, params, p, 4)
+
+
+def test_cancel_cobatched_recurrent_stack_survivors_exact(zoo):
+    """Cancel-mid-batch on a RECURRENT stack: dropping one co-batched
+    PREFILLING request must leave the survivors' carried ssm state — and
+    therefore their token streams — bit-identical to an unbatched run."""
+    arch = "mamba2-780m"
+    cfg, model, params = zoo[arch]
+    eng = ServeEngine(model, params, ServeConfig(n_slots=3, max_len=32,
+                                                 prefill_chunk=4,
+                                                 chunks_per_step=3))
+    reqs = [Request(uid=i, prompt=_prompt(12, seed=160 + i), max_new=3)
+            for i in range(3)]
+    assert all(eng.try_add(r) for r in reqs)
+    eng.step()
+    assert [r.phase for r in reqs] == [PREFILLING] * 3   # co-batched
+    assert eng.cancel(1)
+    assert reqs[1].done and reqs[1].phase == "cancelled"
+    survivors = [reqs[0], reqs[2]]
+    while not all(r.done for r in survivors):
+        eng.step()
+    for i, r in zip((0, 2), survivors):
+        # bit-identical to solo generate AND to a batch-1 engine run
+        assert r.out == _zoo_solo(arch, model, params, 12, 160 + i, 3), r.uid
+        ref = ServeEngine(model, params, ServeConfig(n_slots=1, max_len=32,
+                                                     prefill_chunk=4))
+        rr = Request(uid=9, prompt=r.prompt, max_new=3)
+        assert ref.try_add(rr)
+        while not rr.done:
+            ref.step()
+        assert r.out == rr.out, r.uid
+
+
+@given(data=st.data())
+def test_hyp_zoo_stacks_batched_admission_token_exact(zoo, data):
+    """Property (derandomized profile): on every previously-gated stack
+    (swa / ssm / rglru), batched ragged chunked admission is token-exact vs
+    solo ``generate`` across prompt lengths × chunk × lanes × arrivals."""
+    arch = data.draw(st.sampled_from(ZOO_ARCHS), label="arch")
+    cfg, model, params = zoo[arch]
+    n_req = data.draw(st.integers(1, 3), label="n_req")
+    chunk = data.draw(st.integers(1, 8), label="chunk")
+    cps = data.draw(st.integers(1, 3), label="chunks_per_step")
+    lens = [data.draw(st.integers(1, 13), label=f"len{i}")
+            for i in range(n_req)]
+    arrivals = sorted(data.draw(st.integers(0, 4), label=f"arrive{i}")
+                      for i in range(n_req))
+    eng = ServeEngine(model, params, ServeConfig(n_slots=n_req, max_len=32,
+                                                 prefill_chunk=chunk,
+                                                 chunks_per_step=cps))
+    reqs = [Request(uid=i, prompt=_prompt(n, seed=170 + i), max_new=3)
+            for i, n in enumerate(lens)]
+    _drive(eng, reqs, arrivals)
+    for i, (r, n) in enumerate(zip(reqs, lens)):
+        assert r.out == _zoo_solo(arch, model, params, n, 170 + i, 3), \
+            (arch, r.uid, lens, chunk, cps, arrivals)

@@ -89,3 +89,130 @@ def test_rglru_stability_property(seed):
     y, st = apply_rglru(p, x, cfg, return_state=True)
     assert bool(jnp.isfinite(y).all())
     assert float(jnp.abs(st.h).max()) < 1e3
+
+
+# ----------------------------------------------- pad-masked ragged batches
+
+def _q_valid(lens, S):
+    return jnp.arange(S, dtype=jnp.int32)[None] \
+        < jnp.asarray(lens, jnp.int32)[:, None]
+
+
+def _trim_state(state, b, L):
+    """The reference: the same row run alone, unpadded."""
+    return jax.tree.map(lambda leaf: leaf[b:b + 1], state)
+
+
+@pytest.mark.parametrize("sequential", [True, False])
+def test_ssm_padded_stack_equals_trimmed_rows(sequential):
+    """Pad positions are identity steps of the SSD recurrence (dt = 0 ->
+    decay 1, zero update) and the conv tail gathers each row's last VALID
+    inputs: a padded stacked forward must equal each row's solo trimmed
+    forward — valid outputs AND carried state.  The sequential scan is
+    bit-exact; the chunked path re-partitions when widths differ, so it
+    gets a tight allclose."""
+    cfg = MAMBA.reduced()
+    p = init_ssm(cfg, jax.random.PRNGKey(0))
+    S, lens = 12, (12, 7, 1)
+    x = jax.random.normal(jax.random.PRNGKey(1),
+                          (len(lens), S, cfg.d_model)) * 0.2
+    y, st = apply_ssm(p, x, cfg, return_state=True, sequential=sequential,
+                      q_valid=_q_valid(lens, S))
+    for b, L in enumerate(lens):
+        yr, str_ = apply_ssm(p, x[b:b + 1, :L], cfg, return_state=True,
+                             sequential=sequential)
+        got_y = np.asarray(y[b:b + 1, :L])
+        got_st = [np.asarray(l) for l in jax.tree.leaves(
+            jax.tree.map(lambda leaf: leaf[b:b + 1], st))]
+        ref_st = [np.asarray(l) for l in jax.tree.leaves(str_)]
+        if sequential:
+            assert np.array_equal(got_y, np.asarray(yr)), (b, L)
+            for g, r in zip(got_st, ref_st):
+                assert np.array_equal(g, r), (b, L)
+        else:
+            np.testing.assert_allclose(got_y, np.asarray(yr),
+                                       atol=1e-5, rtol=1e-5)
+            for g, r in zip(got_st, ref_st):
+                np.testing.assert_allclose(g, r, atol=1e-5, rtol=1e-5)
+
+
+def test_ssm_zero_length_row_carries_state_unchanged():
+    """A zero-length (idle lane) row's carried state must pass through a
+    padded forward bitwise untouched."""
+    cfg = MAMBA.reduced()
+    p = init_ssm(cfg, jax.random.PRNGKey(0))
+    x0 = jax.random.normal(jax.random.PRNGKey(2), (2, 6, cfg.d_model)) * 0.2
+    _, st0 = apply_ssm(p, x0, cfg, return_state=True)
+    x1 = jax.random.normal(jax.random.PRNGKey(3), (2, 5, cfg.d_model)) * 0.2
+    _, st1 = apply_ssm(p, x1, cfg, state=st0, return_state=True,
+                       q_valid=_q_valid((5, 0), 5))
+    for got, ref in zip(jax.tree.leaves(st1), jax.tree.leaves(st0)):
+        assert np.array_equal(np.asarray(got)[1:], np.asarray(ref)[1:])
+
+
+def test_rglru_padded_stack_equals_trimmed_rows():
+    """Pads are (a, b) = (1, 0) identity elements of the RG-LRU linear
+    recurrence — masking the GATES, not just r (b would keep its 1e-6
+    floor) — so a padded stacked forward matches each row's solo trimmed
+    forward, valid outputs and carried (conv, h) state."""
+    cfg = RG.reduced()
+    p = init_rglru(cfg, jax.random.PRNGKey(0))
+    S, lens = 11, (11, 4, 1)
+    x = jax.random.normal(jax.random.PRNGKey(1),
+                          (len(lens), S, cfg.d_model)) * 0.3
+    y, st = apply_rglru(p, x, cfg, return_state=True,
+                        q_valid=_q_valid(lens, S))
+    for b, L in enumerate(lens):
+        yr, str_ = apply_rglru(p, x[b:b + 1, :L], cfg, return_state=True)
+        np.testing.assert_allclose(np.asarray(y[b:b + 1, :L]),
+                                   np.asarray(yr), atol=1e-5, rtol=1e-5)
+        for got, ref in zip(jax.tree.leaves(
+                jax.tree.map(lambda leaf: leaf[b:b + 1], st)),
+                jax.tree.leaves(str_)):
+            np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                       atol=1e-5, rtol=1e-5)
+
+
+def test_rglru_zero_length_row_carries_state_unchanged():
+    cfg = RG.reduced()
+    p = init_rglru(cfg, jax.random.PRNGKey(0))
+    x0 = jax.random.normal(jax.random.PRNGKey(2), (2, 6, cfg.d_model)) * 0.3
+    _, st0 = apply_rglru(p, x0, cfg, return_state=True)
+    x1 = jax.random.normal(jax.random.PRNGKey(3), (2, 4, cfg.d_model)) * 0.3
+    _, st1 = apply_rglru(p, x1, cfg, state=st0, return_state=True,
+                         q_valid=_q_valid((4, 0), 4))
+    for got, ref in zip(jax.tree.leaves(st1), jax.tree.leaves(st0)):
+        assert np.array_equal(np.asarray(got)[1:], np.asarray(ref)[1:])
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.data())
+def test_hyp_recurrent_padded_equals_trimmed(data):
+    """Property (derandomized profile): padded stacked forward == per-row
+    trimmed forward for both recurrent mixers across lengths and widths."""
+    kind = data.draw(st.sampled_from(["ssm", "rglru"]), label="kind")
+    S = data.draw(st.integers(2, 16), label="S")
+    n_rows = data.draw(st.integers(1, 3), label="rows")
+    lens = tuple(data.draw(st.integers(0, S), label=f"len{i}")
+                 for i in range(n_rows))
+    cfg = (MAMBA if kind == "ssm" else RG).reduced()
+    init = init_ssm if kind == "ssm" else init_rglru
+    apply = apply_ssm if kind == "ssm" else apply_rglru
+    p = init(cfg, jax.random.PRNGKey(7))
+    x = jax.random.normal(jax.random.PRNGKey(S), (n_rows, S, cfg.d_model)) \
+        * 0.2
+    y, st = apply(p, x, cfg, return_state=True, q_valid=_q_valid(lens, S))
+    fresh = jax.tree.map(lambda leaf: jnp.zeros_like(leaf[:1]),
+                         st)  # zero init state reference for L == 0 rows
+    for b, L in enumerate(lens):
+        got_st = jax.tree.map(lambda leaf: leaf[b:b + 1], st)
+        if L == 0:
+            for g, r in zip(jax.tree.leaves(got_st), jax.tree.leaves(fresh)):
+                assert np.array_equal(np.asarray(g), np.asarray(r)), (b, lens)
+            continue
+        yr, str_ = apply(p, x[b:b + 1, :L], cfg, return_state=True)
+        np.testing.assert_allclose(np.asarray(y[b:b + 1, :L]),
+                                   np.asarray(yr), atol=2e-5, rtol=2e-5)
+        for g, r in zip(jax.tree.leaves(got_st), jax.tree.leaves(str_)):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(r),
+                                       atol=2e-5, rtol=2e-5)
